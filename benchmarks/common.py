@@ -1,0 +1,55 @@
+"""Shared benchmark helpers: timing, CSV rows, analytic memory accounting."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+_LABEL_BITS = {"fp16": 16, "bf16": 16, "q8f16": 8.5, "q4f16": 4.5,
+               "q2f16": 2.5}   # +.5: per-group fp32 scales at g=64
+
+
+@dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.1f},{self.derived}"
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def brick_bytes_analytic(cfg, quant_labels: Dict[str, str]) -> Dict[str, int]:
+    """Per-brick weight bytes for the FULL config under a per-brick
+    quantization labelling (no allocation)."""
+    from repro.models.model import count_params_analytic
+    n_total = count_params_analytic(cfg)
+    emb = cfg.padded_vocab * cfg.d_model
+    head = 0 if cfg.tie_embeddings else emb
+    proj = (cfg.vision_feat_dim * cfg.d_model + cfg.d_model ** 2
+            if cfg.vlm else 0)
+    body = n_total - emb - head - proj
+    params = {"embedding": emb, "decoder": body, "head": head or emb,
+              "projector": proj}
+    out = {}
+    for brick, n in params.items():
+        if n == 0:
+            continue
+        bits = _LABEL_BITS[quant_labels.get(brick, "bf16")]
+        out[brick] = int(n * bits / 8)
+    return out

@@ -1,0 +1,74 @@
+"""Paper Fig. 5: memory utilization across frameworks x small VLMs.
+
+Frameworks compared (same accounting, different mechanisms):
+  llama.cpp-style  — fp16 weights monolithic + per-module staging buffers
+                     (separate-memory design on a UMA device)
+  nanomind         — hybrid quant (vis fp16 / dec W4A16) + TABM ring pool,
+                     no staging copies
+
+Models: the paper's trio (LLaVA-OneVision-0.5B, Qwen2-VL, SmolVLM-class —
+we map SmolVLM to the stablelm-1.6b-backbone scale).  The paper's headline:
+NANOMIND cuts GPU memory ~11.2%; our mechanism-level accounting lands in
+the same band (derived column reports the delta).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, brick_bytes_analytic
+from repro.configs import get_config
+
+KV_TOKENS = 2048        # serving context per the paper's tests
+BATCH = 1
+
+
+def _kv_bytes(cfg, tokens=KV_TOKENS):
+    return (cfg.n_layers * BATCH * tokens * cfg.n_kv_heads * cfg.hd * 2
+            * 2)
+
+
+GGML_GRAPH_NODES = 32   # ggml schedules per-node arenas on BOTH backends
+
+
+def llama_cpp_bytes(cfg):
+    """Monolithic separate-memory design: fp16 weights + ggml-style
+    per-backend compute arenas (the CPU keeps staging copies of every
+    offloaded node's I/O — Fig. 9's 'CPU must continuously write to
+    buffers and maintain separate memory allocation')."""
+    w = brick_bytes_analytic(cfg, {"decoder": "fp16", "embedding": "fp16",
+                                   "head": "fp16", "projector": "fp16"})
+    act = BATCH * KV_TOKENS * cfg.d_model * 2
+    staging = GGML_GRAPH_NODES * act
+    return sum(w.values()) + _kv_bytes(cfg) + staging
+
+
+def nanomind_bytes(cfg):
+    w = brick_bytes_analytic(cfg, {"decoder": "q4f16", "embedding": "fp16",
+                                   "head": "q4f16", "projector": "fp16"})
+    ring = 4 * (cfg.vision_tokens or 64) * cfg.d_model * 2   # TABM pool
+    return sum(w.values()) + _kv_bytes(cfg) + ring
+
+
+def nanomind_fp16_bytes(cfg):
+    """Ablation: TABM only, no quantization — isolates the ring-buffer
+    saving (the paper's -11.2% is at matched precision)."""
+    w = brick_bytes_analytic(cfg, {"decoder": "fp16", "embedding": "fp16",
+                                   "head": "fp16", "projector": "fp16"})
+    ring = 4 * (cfg.vision_tokens or 64) * cfg.d_model * 2
+    return sum(w.values()) + _kv_bytes(cfg) + ring
+
+
+def run():
+    rows = []
+    for arch in ("llava-onevision-0.5b", "qwen2-vl-7b", "stablelm-1.6b"):
+        cfg = get_config(arch)
+        base = llama_cpp_bytes(cfg)
+        ring_only = nanomind_fp16_bytes(cfg)
+        full = nanomind_bytes(cfg)
+        rows.append(Row(f"fig5/llama.cpp/{arch}", 0.0,
+                        f"mem={base/1e9:.3f}GB"))
+        rows.append(Row(f"fig5/nanomind-fp16/{arch}", 0.0,
+                        f"mem={ring_only/1e9:.3f}GB "
+                        f"delta={(ring_only-base)/base:+.1%} (TABM only)"))
+        rows.append(Row(f"fig5/nanomind/{arch}", 0.0,
+                        f"mem={full/1e9:.3f}GB "
+                        f"delta={(full-base)/base:+.1%} (TABM + hybrid W4)"))
+    return rows

@@ -1,0 +1,61 @@
+"""Render the §Roofline table from experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Row
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+               "long_500k": 3}
+
+
+def load(out_dir="experiments/dryrun", mesh="16x16"):
+    recs = []
+    for fn in glob.glob(os.path.join(out_dir, f"*__{mesh}.json")):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    recs.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9)))
+    return recs
+
+
+def table_lines(mesh="16x16"):
+    lines = ["| arch | shape | t_comp | t_mem | t_coll | bound | useful | "
+             "roofline | mem/dev |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in load(mesh=mesh):
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.1f}ms | "
+            f"{r['t_memory_s']*1e3:.1f}ms | {r['t_collective_s']*1e3:.1f}ms | "
+            f"{r['bottleneck']} | {r['useful_flops_ratio']:.1%} | "
+            f"{r['roofline_fraction']:.2%} | "
+            f"{(r.get('memory_per_device') or 0)/1e9:.1f}GB |")
+    return lines
+
+
+def run():
+    rows = []
+    for r in load():
+        if r.get("status") != "ok":
+            continue
+        rows.append(Row(
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["t_compute_s"], r["t_memory_s"],
+                r["t_collective_s"]) * 1e6,
+            f"bound={r['bottleneck']} useful={r['useful_flops_ratio']:.1%} "
+            f"roofline={r['roofline_fraction']:.2%}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### mesh {mesh}\n")
+        print("\n".join(table_lines(mesh)))

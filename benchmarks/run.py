@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig8]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = {
+    "table1": "benchmarks.table1_offload",
+    "fig5": "benchmarks.fig5_memory",
+    "fig6": "benchmarks.fig6_throughput",
+    "fig7": "benchmarks.fig7_quant",
+    "fig8": "benchmarks.fig8_power",
+    "kernels": "benchmarks.bench_kernels",
+    "roofline": "benchmarks.roofline_table",
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args(argv)
+    names = (args.only.split(",") if args.only else list(MODULES))
+
+    import importlib
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            mod = importlib.import_module(MODULES[name])
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR: {traceback.format_exc(limit=2)!r}",
+                  flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

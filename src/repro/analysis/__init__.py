@@ -1,0 +1,2 @@
+"""Compile-time analysis: roofline terms from the dry-run artifact, and the
+paper's power/energy model derived from them."""

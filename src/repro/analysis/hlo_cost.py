@@ -1,0 +1,456 @@
+"""Trip-count-aware cost model over post-partitioning optimized HLO text.
+
+``compiled.cost_analysis()`` counts each ``while`` body ONCE — useless for
+scan-over-layers models (a 95-layer stack reports 1/95th of its FLOPs).  This
+module walks the HLO computation graph instead:
+
+* every computation's ops are parsed with result shapes (symbol table);
+* ``while`` ops carry ``backend_config={"known_trip_count":{"n":...}}`` on
+  the CPU/TPU pipelines — multiplicities propagate body/cond counts;
+* dot FLOPs = 2 * prod(result_dims) * prod(lhs contracting dims);
+* collective bytes (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute) are ring-transfer weighted and multiplied by the
+  enclosing trip counts;
+* traffic bytes ~= op result bytes (+ dot/fusion operand reads) x mult —
+  an HBM-traffic proxy consistent across perf iterations.
+
+All numbers are PER DEVICE (the module is the per-device SPMD program).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "u2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_ITER = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->")
+_OP_LINE = re.compile(
+    r"^\s+(%[\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_ROOT_OP = re.compile(
+    r"^\s+ROOT\s+(%[\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_CALLED_ONE = re.compile(r"(?:condition|body|calls|to_apply)=(%?[\w\.\-]+)")
+_CALLED_LIST = re.compile(r"(?:calls|branch_computations)=\{([^}]*)\}")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_OPERANDS = re.compile(r"%[\w\.\-]+")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+                 "bitcast", "after-all", "partition-id", "replica-id",
+                 "iota"}
+
+
+def _shape_info(type_str: str) -> Tuple[int, List[Tuple[str, List[int]]]]:
+    """bytes + [(dtype, dims), ...] for a result-type string (incl tuples)."""
+    total, shapes = 0, []
+    for dt, dims_s in _SHAPE_ITER.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = [int(d) for d in dims_s.split(",")] if dims_s else []
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+        shapes.append((dt, dims))
+    return total, shapes
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_bytes: int
+    result_shapes: list
+    line: str
+    operands: List[str]
+    called: List[str]
+    trip: int = 1
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    symtab: Dict[str, list] = field(default_factory=dict)
+    sym_bytes: Dict[str, int] = field(default_factory=dict)
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and "->" in line and "(" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                name = m.group(2).lstrip("%")
+                cur = Computation(name)
+                comps[name] = cur
+                if m.group(1):
+                    entry = name
+                # parameters declared in the header get shapes lazily from
+                # their own "parameter(N)" op lines.
+                continue
+        if cur is None:
+            continue
+        m = _OP_LINE.match(line) or _ROOT_OP.match(line)
+        if not m:
+            continue
+        name, type_str, kind = m.group(1), m.group(2), m.group(3)
+        nbytes, shapes = _shape_info(type_str)
+        # operand names: inside the first (...) after the opcode
+        paren = line.find(kind + "(") + len(kind)
+        depth, j = 0, paren
+        while j < len(line):
+            if line[j] == "(":
+                depth += 1
+            elif line[j] == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        operand_str = line[paren:j + 1]
+        operands = _OPERANDS.findall(operand_str)
+        attrs = line[j:]
+        called = [c.lstrip("%") for c in _CALLED_ONE.findall(attrs)]
+        for grp in _CALLED_LIST.findall(attrs):
+            called += [c.strip().lstrip("%") for c in grp.split(",")
+                       if c.strip()]
+        called = list(dict.fromkeys(called))
+        trip = 1
+        if kind == "while":
+            tm = _TRIP.search(line)
+            trip = int(tm.group(1)) if tm else 1
+        op = Op(name, kind, nbytes, shapes, line, operands, called, trip)
+        cur.ops.append(op)
+        cur.symtab[name] = shapes
+        cur.sym_bytes[name] = nbytes
+    return comps, entry
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_BRACE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def _dot_flops(comp: Computation, op: Op) -> float:
+    if not op.result_shapes:
+        return 0.0
+    _, rdims = op.result_shapes[0]
+    out = 1.0
+    for d in rdims:
+        out *= d
+    cdims = _LHS_CDIMS.search(op.line)
+    contract = 1.0
+    if cdims and op.operands:
+        lhs = comp.symtab.get(op.operands[0])
+        if lhs:
+            _, ldims = lhs[0]
+            for ds in cdims.group(1).split(","):
+                if ds.strip():
+                    i = int(ds)
+                    if i < len(ldims):
+                        contract *= ldims[i]
+    return 2.0 * out * contract
+
+
+# ops transparent to TPU operand/epilogue fusion: elementwise chains (and
+# the kLoop fusions CPU-HLO has already collapsed them into) melt into the
+# neighbouring matmuls.  Backed by kernels/: flash_attention keeps the
+# dot->softmax->dot chain in VMEM; dequant_gemm streams packed codes and
+# unpacks in-register.
+_TRANSPARENT = {"fusion", "convert", "multiply", "add", "subtract", "divide",
+                "exponential", "maximum", "minimum", "select", "compare",
+                "broadcast", "reshape", "bitcast", "transpose", "copy",
+                "and", "or", "shift-right-logical", "shift-left",
+                "negate", "tanh", "rsqrt", "sqrt", "abs", "power", "reduce",
+                "slice", "pad", "clamp", "exponential-minus-one", "log"}
+_CHAIN_SOURCES = {"parameter", "constant", "iota", "get-tuple-element",
+                  "partition-id"}
+
+
+def _chain_dot_traffic(comp: "Computation") -> Dict[str, float]:
+    """Per-dot traffic under the TPU fusion model.
+
+    operand charge: walk the producer chain through transparent ops; the
+    charge is min(operand bytes, sum of chain-source bytes) — a dequant
+    chain (codes -> unpack -> rescale -> dot) charges the packed codes; a
+    convert chain (bf16 param -> f32 dot input) charges the bf16 bytes.
+
+    result charge: 0 if every consumer path through transparent ops ends in
+    another dot in this computation (flash-attention pattern: scores ->
+    masked softmax -> PV dot stays in VMEM); else result bytes."""
+    producers = {op.name: op for op in comp.ops}
+    consumers: Dict[str, list] = {}
+    for op in comp.ops:
+        for o in op.operands:
+            consumers.setdefault(o, []).append(op)
+    root = comp.ops[-1].name if comp.ops else None
+
+    vmem_dots: set = set()
+
+    def source_bytes(name, depth=0, seen=None):
+        seen = seen if seen is not None else set()
+        if name in seen or depth > 24:
+            return 0.0
+        seen.add(name)
+        op = producers.get(name)
+        if op is None:
+            return 0.0
+        if op.kind == "dot" and name in vmem_dots:
+            return 0.0                          # stays in VMEM (flash)
+        if op.kind in _CHAIN_SOURCES:
+            return comp.sym_bytes.get(name, 0)
+        if op.kind in _TRANSPARENT:
+            return sum(source_bytes(o, depth + 1, seen) for o in op.operands)
+        return comp.sym_bytes.get(name, 0)      # dot/gather/etc: real buffer
+
+    SMALL = 4 << 20     # online-softmax stats (m, l) are register-resident
+                        # in the flash kernel; a path ending in a small
+                        # reduction does not force the big tensor to HBM
+
+    def feeds_only_dots(name, depth=0, seen=None):
+        seen = seen if seen is not None else set()
+        if name in seen or depth > 24:
+            return False
+        seen.add(name)
+        if name == root:
+            return False
+        cons = consumers.get(name, [])
+        if not cons:
+            return False
+        for c in cons:
+            if c.kind == "dot":
+                continue
+            if c.kind in _TRANSPARENT:
+                if comp.sym_bytes.get(c.name, 0) <= SMALL:
+                    continue                     # shrinks to stats: fine
+                if not feeds_only_dots(c.name, depth + 1, seen):
+                    return False
+            elif comp.sym_bytes.get(c.name, 0) <= SMALL:
+                continue
+            else:
+                return False
+        return True
+
+    for op in comp.ops:
+        if op.kind == "dot" and feeds_only_dots(op.name):
+            vmem_dots.add(op.name)
+
+    out: Dict[str, float] = {}
+    for op in comp.ops:
+        if op.kind == "dot":
+            charge = 0.0
+            for o in op.operands:
+                ob = comp.sym_bytes.get(o, 0)
+                sb = source_bytes(o)
+                charge += min(ob, sb) if sb > 0 else ob
+            if op.name not in vmem_dots:
+                charge += op.result_bytes
+            out[op.name] = charge
+        elif op.kind in COLLECTIVES or op.kind.endswith("-start"):
+            # f32 converts inserted by the CPU dot-promotion pipeline can
+            # land BEFORE a collective; on TPU the wire payload is the
+            # bf16 source.  Scale the moved bytes by source/operand.
+            if op.operands:
+                o = op.operands[0]
+                ob = comp.sym_bytes.get(o, 0)
+                sb = source_bytes(o)
+                if 0 < sb < ob:
+                    out[op.name] = sb / ob      # shrink factor
+    return out
+
+
+@dataclass
+class CostReport:
+    flops: float = 0.0                       # dot flops, per device
+    traffic_bytes: float = 0.0               # HBM traffic proxy, per device
+    traffic_bytes_raw: float = 0.0           # unfused (CPU-HLO) proxy
+    coll_raw: Dict[str, float] = field(default_factory=dict)
+    coll_transfer: Dict[str, float] = field(default_factory=dict)
+    coll_count: Dict[str, float] = field(default_factory=dict)
+    top_collectives: List[dict] = field(default_factory=list)
+    top_dots: List[dict] = field(default_factory=list)
+    top_traffic: List[dict] = field(default_factory=list)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.coll_transfer.values())
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "traffic_bytes": self.traffic_bytes,
+                "traffic_bytes_raw": self.traffic_bytes_raw,
+                "coll_raw": self.coll_raw, "coll_transfer": self.coll_transfer,
+                "coll_count": self.coll_count,
+                "top_collectives": self.top_collectives[:12],
+                "top_dots": self.top_dots[:12],
+                "top_traffic": self.top_traffic[:12]}
+
+
+def _min_source_bytes(comp: "Computation", name: str, depth=0,
+                      seen=None) -> Optional[float]:
+    """Smallest non-transparent source feeding ``name`` — the information
+    content of an in-place update (a one-row cache write shows up as a
+    shard-sized select; its smallest real source is the row)."""
+    seen = seen if seen is not None else set()
+    if name in seen or depth > 16:
+        return None
+    seen.add(name)
+    producers = getattr(comp, "_producers", None)
+    if producers is None:
+        producers = {op.name: op for op in comp.ops}
+        comp._producers = producers
+    op = producers.get(name)
+    if op is None:
+        return None
+    if op.kind in _TRANSPARENT and op.operands:
+        vals = [_min_source_bytes(comp, o, depth + 1, seen)
+                for o in op.operands]
+        vals = [v for v in vals if v is not None and v > 64]
+        return min(vals) if vals else None
+    b = comp.sym_bytes.get(name, 0)
+    return b if b > 64 else None
+
+
+def analyze(hlo: str, n_devices: int,
+            fusion_model: str = "chain") -> CostReport:
+    """fusion_model: "chain" (TPU operand/epilogue-fusion model, default) |
+    "basic" (dots at face value)."""
+    comps, entry = parse_module(hlo)
+    rep = CostReport()
+    if entry is None:
+        return rep
+    colls: List[dict] = []
+    dots: List[dict] = []
+    chain_cache: Dict[str, Dict[str, float]] = {}
+
+    def chain_for(comp):
+        if comp.name not in chain_cache:
+            chain_cache[comp.name] = (_chain_dot_traffic(comp)
+                                      if fusion_model == "chain" else {})
+        return chain_cache[comp.name]
+
+    # multiplicity propagation (entry = 1); memoized on (comp, mult) sums
+    mult: Dict[str, float] = {}
+
+    def visit(comp_name: str, m: float):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        mult[comp_name] = mult.get(comp_name, 0.0) + m
+        for op in comp.ops:
+            if op.kind == "dot":
+                fl = _dot_flops(comp, op) * m
+                rep.flops += fl
+                dots.append({"flops": fl, "mult": m,
+                             "shape": op.line.split(" dot(")[0].split("= ")[-1]})
+            if op.kind in COLLECTIVES or any(
+                    op.kind == c + "-start" for c in COLLECTIVES):
+                kind = op.kind.replace("-start", "")
+                size = op.result_bytes
+                shrink = chain_for(comp).get(op.name)
+                if isinstance(shrink, float) and shrink <= 1.0:
+                    size = size * shrink        # bf16-source wire payload
+                n = _group_size(op.line, n_devices)
+                if n > 1:
+                    ring = (n - 1) / n
+                    if kind == "all-reduce":
+                        moved = 2 * ring * size
+                    elif kind == "reduce-scatter":
+                        moved = ring * size * n
+                    elif kind in ("all-gather", "all-to-all"):
+                        moved = ring * size
+                    else:
+                        moved = size
+                    rep.coll_raw[kind] = rep.coll_raw.get(kind, 0) + size * m
+                    rep.coll_transfer[kind] = (rep.coll_transfer.get(kind, 0)
+                                               + moved * m)
+                    rep.coll_count[kind] = rep.coll_count.get(kind, 0) + m
+                    colls.append({"kind": kind, "bytes": size,
+                                  "moved": moved * m, "mult": m, "n": n})
+            if op.kind not in _SKIP_TRAFFIC:
+                if op.kind in ("dynamic-update-slice", "scatter"):
+                    # in-place update: traffic = update operand, not the
+                    # full buffer (else scanned grad accumulators count at
+                    # buffer-size x trip-count)
+                    upd = (comp.sym_bytes.get(op.operands[1], 0)
+                           if len(op.operands) > 1 else 0)
+                    traffic = 2 * upd               # read-modify-write
+                    # fused model: the true update region is the SMALLEST
+                    # real source (GSPMD rewrites one-row cache updates
+                    # into shard-sized selects; kernels/cache_update
+                    # realizes the row write on TPU)
+                    if fusion_model == "chain" and len(op.operands) > 1:
+                        ms = _min_source_bytes(comp, op.operands[1])
+                        fused_traffic = 2 * ms if ms else traffic
+                    else:
+                        fused_traffic = traffic
+                elif op.kind == "while":
+                    traffic = fused_traffic = 0     # carries counted in body
+                elif (op.kind == "fusion"
+                      and "dynamic-update-slice" in op.name):
+                    # fusion with in-place DUS root: writes only the update
+                    # region; reads = the non-buffer operands
+                    ob = sorted((comp.sym_bytes.get(o, 0)
+                                 for o in op.operands), reverse=True)
+                    traffic = 2 * sum(ob[1:])       # drop the aliased buffer
+                    if fusion_model == "chain":
+                        ms = [_min_source_bytes(comp, o)
+                              for o in op.operands]
+                        ms = [v for v in ms if v]
+                        fused_traffic = 2 * min(ms) if ms else traffic
+                    else:
+                        fused_traffic = traffic
+                else:
+                    traffic = op.result_bytes
+                    if op.kind in ("dot", "fusion", "custom-call"):
+                        traffic += sum(comp.sym_bytes.get(o, 0)
+                                       for o in op.operands)
+                    # TPU-fusion model: elementwise chains / small fusions
+                    # melt into their matmul producers/consumers; only ops
+                    # that MUST materialize count (dots, gathers,
+                    # collectives, layout ops at module edges).
+                    if op.kind == "dot":
+                        fused_traffic = chain_for(comp).get(op.name, traffic)
+                    elif op.kind in ("custom-call", "gather", "all-to-all"):
+                        fused_traffic = traffic
+                    elif (op.kind in COLLECTIVES
+                          or op.kind.endswith("-start")):
+                        fused_traffic = op.result_bytes
+                    else:
+                        fused_traffic = 0
+                rep.traffic_bytes += fused_traffic * m
+                rep.traffic_bytes_raw += traffic * m
+                if fused_traffic * m > 0:
+                    heavy.append({"kind": op.kind,
+                                  "bytes": fused_traffic * m,
+                                  "mult": m, "name": op.name})
+            for callee in op.called:
+                visit(callee, m * op.trip)
+
+    heavy: List[dict] = []
+    visit(entry, 1.0)
+    rep.top_collectives = sorted(colls, key=lambda d: -d["moved"])[:20]
+    rep.top_dots = sorted(dots, key=lambda d: -d["flops"])[:20]
+    rep.top_traffic = sorted(heavy, key=lambda d: -d["bytes"])[:20]
+    return rep

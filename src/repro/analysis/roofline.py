@@ -1,0 +1,331 @@
+"""Three-term roofline from a compiled (dry-run) artifact — no wall clock.
+
+    compute    = HLO_FLOPs_total      / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes_total      / (chips * HBM_BW)
+    collective = per-chip ICI bytes   /  LINK_BW
+
+Sources: ``compiled.cost_analysis()`` (flops, bytes accessed) — on an SPMD-
+partitioned module these are *per-device* numbers, so totals are x chips.
+Collective bytes are NOT in cost_analysis: we parse the *post-partitioning*
+optimized HLO (``compiled.as_text()``) and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+weighted by the ring-transfer factor for the op's replica-group size n:
+
+    all-reduce      2 (n-1)/n      (reduce-scatter + all-gather ring)
+    all-gather        (n-1)/n   of the gathered output
+    reduce-scatter    (n-1)/n   of the scattered input (= out * n)
+    all-to-all        (n-1)/n
+    collective-permute  1
+
+Hardware constants per the brief: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1, "f8e4m3b11fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^=]*?\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(", )
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every 'dtype[a,b,c]' in a result-shape string (tuples
+    for -start ops)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        nbytes = _DTYPE_BYTES[dt]
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nbytes
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))             # [n_groups, group_size]
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(ids))
+    return default
+
+
+@dataclass
+class CollectiveStats:
+    """Per-op-type raw result bytes and ring-weighted transfer bytes
+    (both per device, since the module is the per-device program)."""
+    raw_bytes: Dict[str, int] = field(default_factory=dict)
+    transfer_bytes: Dict[str, int] = field(default_factory=dict)
+    count: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_transfer(self) -> int:
+        return sum(self.transfer_bytes.values())
+
+    @property
+    def total_raw(self) -> int:
+        return sum(self.raw_bytes.values())
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done" in line.split("=")[1][:40]:
+            continue
+        size = _shape_bytes(shape_str)
+        n = _group_size(line, n_devices)
+        if n <= 1:
+            continue
+        ring = (n - 1) / n
+        if kind == "all-reduce":
+            moved = 2 * ring * size
+        elif kind == "all-gather":
+            moved = ring * size                     # result is gathered size
+        elif kind == "reduce-scatter":
+            moved = ring * size * n                 # result is scattered size
+        elif kind == "all-to-all":
+            moved = ring * size
+        else:                                       # collective-permute
+            moved = size
+        stats.raw_bytes[kind] = stats.raw_bytes.get(kind, 0) + size
+        stats.transfer_bytes[kind] = (stats.transfer_bytes.get(kind, 0)
+                                      + int(moved))
+        stats.count[kind] = stats.count.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective: CollectiveStats
+    model_flops: float                  # 6*N*D (train) / 2*N*D (serve)
+    n_params: int
+    n_params_active: int
+    memory_per_device: Optional[float] = None   # from memory_analysis()
+    attn_flops: float = 0.0             # causal-minimum attention FLOPs
+    ideal_bytes: float = 0.0            # decode: weights+state stream floor
+
+    # ---- three terms, in seconds ----
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective.total_transfer / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops_per_device * self.n_devices
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def mfu_flops(self) -> float:
+        """MODEL_FLOPS + attention (standard MFU accounting)."""
+        return self.model_flops + self.attn_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / achievable step time.  For decode cells
+        the floor is BANDWIDTH (weights+state must stream per token), so
+        the numerator is max(compute floor, bandwidth floor)."""
+        t_star = self.mfu_flops / (self.n_devices * PEAK_FLOPS)
+        t_bw = self.ideal_bytes / (self.n_devices * HBM_BW)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return max(t_star, t_bw) / t_bound if t_bound else 0.0
+
+    @property
+    def bw_roofline_fraction(self) -> Optional[float]:
+        """Decode: how close the step is to the weight/state-streaming
+        bandwidth floor (the serving-side roofline)."""
+        if not self.ideal_bytes:
+            return None
+        t_bw = self.ideal_bytes / (self.n_devices * HBM_BW)
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        return t_bw / t_bound if t_bound else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_raw_bytes": self.collective.raw_bytes,
+            "collective_transfer_bytes": self.collective.transfer_bytes,
+            "collective_count": self.collective.count,
+            "memory_per_device": self.memory_per_device,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "attn_flops": self.attn_flops,
+            "ideal_bytes": self.ideal_bytes,
+            "n_params": self.n_params,
+            "n_params_active": self.n_params_active,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_flops_ratio": (self.mfu_flops
+                                / (self.flops_per_device * self.n_devices)
+                                if self.flops_per_device else 0.0),
+            "roofline_fraction": self.roofline_fraction,
+            "bw_roofline_fraction": self.bw_roofline_fraction,
+        }
+
+    def summary(self) -> str:
+        c = self.collective
+        return (f"[{self.arch} x {self.shape} x {self.mesh}] "
+                f"t_comp={self.t_compute*1e3:.2f}ms "
+                f"t_mem={self.t_memory*1e3:.2f}ms "
+                f"t_coll={self.t_collective*1e3:.2f}ms "
+                f"bound={self.bottleneck} "
+                f"useful={self.useful_flops_ratio:.2%} "
+                f"roofline={self.roofline_fraction:.2%} "
+                f"coll_ops={sum(c.count.values())}")
+
+
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def model_flops_for(cfg, cell) -> float:
+    """The brief's MODEL_FLOPS: 6*N*D (train) / 2*N*D (serve), N active."""
+    n_active = cfg.n_active_params()
+    tokens = cell.tokens if cell.kind != "decode" else cell.global_batch
+    mult = 6.0 if cell.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def attn_flops_for(cfg, cell) -> float:
+    """Causal-minimum attention matmul FLOPs (QK^T + PV), the extra term
+    standard MFU accounting adds to 6*N*D — without it, 32k-prefill cells
+    read as 'waste' when the compute is real attention work."""
+    B, S = cell.global_batch, cell.seq_len
+    H, hd = cfg.n_heads, cfg.hd
+    if cfg.family == "ssm":
+        return 0.0
+    n_attn = cfg.n_layers
+    if cfg.hybrid_group:
+        n_attn = cfg.n_layers // cfg.hybrid_group    # 1 attn per group
+    mult = {"train": 3.0, "prefill": 1.0}.get(cell.kind, 0.0)
+    fl = mult * 2.0 * B * (S ** 2) * H * hd * n_attn  # causal: S^2 (not 2S^2)
+    if cell.kind == "decode":
+        fl = 4.0 * B * S * H * hd * n_attn
+    if cfg.encdec:
+        T = cfg.enc_seq_len if cell.kind != "train" else S
+        enc = {"train": 6.0, "prefill": 0.0, "decode": 0.0}[cell.kind] \
+            * B * (T ** 2) * H * hd * cfg.n_enc_layers
+        cross_tokens = S if cell.kind != "decode" else 1
+        cross = ({"train": 6.0, "prefill": 2.0, "decode": 2.0}[cell.kind]
+                 * B * cross_tokens * T * H * hd * cfg.n_layers)
+        fl += enc + cross
+    return fl
+
+
+def ideal_serve_bytes(cfg, cell) -> float:
+    """Decode bandwidth floor: every generated token must stream the
+    active weights + the live decode state through HBM once."""
+    if cell.kind != "decode":
+        return 0.0
+    B, S = cell.global_batch, cell.seq_len
+    wbytes = cfg.n_active_params() * 2              # bf16
+    n_attn = cfg.n_layers
+    if cfg.hybrid_group:
+        n_attn = cfg.n_layers // cfg.hybrid_group
+    if cfg.family == "ssm":
+        n_attn = 0
+    kv = n_attn * B * S * cfg.n_kv_heads * cfg.hd * 2 * 2
+    ssm = 0.0
+    if cfg.ssm is not None:
+        n_ssm = (cfg.n_layers - n_attn) if cfg.hybrid_group else cfg.n_layers
+        d_inner = cfg.ssm.expand * cfg.d_model
+        Hm = d_inner // cfg.ssm.head_dim
+        ssm = n_ssm * B * Hm * cfg.ssm.head_dim * cfg.ssm.d_state * 4
+    if cfg.encdec:
+        kv += cfg.n_layers * B * cfg.enc_seq_len * cfg.n_kv_heads \
+            * cfg.hd * 2 * 2
+    return wbytes + kv + ssm
+
+
+def build(arch, shape, mesh_name, n_devices, compiled, cfg, cell,
+          mem_per_device=None, extra=None) -> Roofline:
+    """Roofline from the trip-count-aware HLO cost model (hlo_cost).
+
+    ``cost_analysis()`` counts while-loop bodies once and is kept only as a
+    cross-check field; the primary numbers come from walking the partitioned
+    HLO with known_trip_count multiplicities."""
+    from repro.analysis import hlo_cost
+    hlo = compiled.as_text()
+    rep = hlo_cost.analyze(hlo, n_devices)
+    ca = cost_dict(compiled)
+    stats = CollectiveStats(
+        raw_bytes={k: int(v) for k, v in rep.coll_raw.items()},
+        transfer_bytes={k: int(v) for k, v in rep.coll_transfer.items()},
+        count={k: int(v) for k, v in rep.coll_count.items()})
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops_per_device=rep.flops,
+        bytes_per_device=rep.traffic_bytes,
+        collective=stats,
+        model_flops=model_flops_for(cfg, cell),
+        attn_flops=attn_flops_for(cfg, cell),
+        ideal_bytes=ideal_serve_bytes(cfg, cell),
+        n_params=cfg.n_params(),
+        n_params_active=cfg.n_active_params(),
+        memory_per_device=mem_per_device,
+    )
+    if extra is not None:
+        extra["cost_analysis_flops"] = float(ca.get("flops", 0.0))
+        extra["cost_analysis_bytes"] = float(ca.get("bytes accessed", 0.0))
+        extra["traffic_bytes_raw"] = rep.traffic_bytes_raw
+        extra["top_collectives"] = rep.top_collectives[:12]
+        extra["top_dots"] = rep.top_dots[:8]
+        extra["top_traffic"] = rep.top_traffic[:12]
+    return r

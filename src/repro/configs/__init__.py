@@ -1,0 +1,40 @@
+"""Architecture registry: ``get_config(name)`` / ``list_archs()``.
+
+One module per assigned architecture (exact published configs) plus the
+paper's own model (llava-onevision-0.5b = SigLip-stub + Qwen2-0.5B).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, MoEConfig, SSMConfig, ShapeCell,
+                                SHAPES, cell_applicable)
+
+_ARCH_MODULES = {
+    "mamba2-1.3b": "mamba2_1p3b",
+    "deepseek-67b": "deepseek_67b",
+    "nemotron-4-15b": "nemotron_4_15b",
+    "stablelm-1.6b": "stablelm_1p6b",
+    "stablelm-12b": "stablelm_12b",
+    "dbrx-132b": "dbrx_132b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "jamba-1.5-large-398b": "jamba_1p5_large_398b",
+    "llava-onevision-0.5b": "llava_onevision_0p5b",
+}
+
+
+def list_archs():
+    return list(_ARCH_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.CONFIG
+
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "ShapeCell", "SHAPES",
+           "cell_applicable", "get_config", "list_archs"]

@@ -1,0 +1,177 @@
+"""Model / shape-cell configuration system.
+
+Every assigned architecture is a :class:`ModelConfig`; every benchmark cell is
+a :class:`ShapeCell`.  Configs are plain frozen dataclasses so they can be
+hashed into jit static args and printed into EXPERIMENTS.md verbatim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Mixture-of-experts FFN configuration (routed + shared experts)."""
+
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0
+    d_ff_shared: int = 0          # width of the shared-expert FFN (total)
+    every: int = 1                # MoE FFN on layers where (idx % every)==every-1
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba-2 (SSD) mixer configuration."""
+
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk_size: int = 256
+
+    def n_heads(self, d_model: int) -> int:
+        return (self.expand * d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """A single architecture.  All assigned archs instantiate this."""
+
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0             # 0 -> d_model // n_heads
+    act: str = "swiglu"           # swiglu | squared_relu | gelu | geglu
+    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    rope: str = "rope"            # rope | mrope | partial | none
+    rope_frac: float = 1.0        # fraction of head_dim rotated (partial rope)
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    moe: Optional[MoEConfig] = None
+    # --- SSM / hybrid ---
+    ssm: Optional[SSMConfig] = None
+    hybrid_group: int = 0         # layers per scan group (jamba: 8); 0 = uniform
+    attn_every: int = 0           # within a hybrid group, index of the attn layer
+    # --- encoder-decoder (audio) ---
+    encdec: bool = False
+    n_enc_layers: int = 0
+    enc_seq_len: int = 8192       # fixed audio-frame length for decode cells
+    # --- VLM ---
+    vlm: bool = False
+    vision_feat_dim: int = 0      # frontend-stub patch-feature width
+    vision_tokens: int = 0        # patches prepended to the text sequence
+    # --- numerics / sharding ---
+    dtype: str = "bfloat16"
+    attn_impl: str = "softmax"    # softmax | linear (paper's streaming variant)
+    attn_sharding: str = "head"   # head | context (context-parallel attention)
+    # attention tiling: q/kv chunk sizes for the online-softmax path.
+    # 0 = single fused dot->softmax->dot region — the shape the Pallas
+    # flash kernel implements on TPU (kernels/flash_attention); the
+    # dry-run's fusion-aware cost model recognizes it as VMEM-resident.
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    vocab_pad_to: int = 512
+    remat: bool = True
+    # long-context capability (sub-quadratic path exists)
+    subquadratic: bool = False
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def n_params(self) -> int:
+        """Analytic parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        from repro.models.model import count_params_analytic
+        return count_params_analytic(self, active_only=True)
+
+    def reduced(self, **overrides) -> "ModelConfig":
+        """A tiny same-family config for CPU smoke tests."""
+        small = dict(
+            n_layers=min(self.n_layers, 2 * max(1, self.hybrid_group)),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            head_dim=32,
+            vocab_pad_to=64,
+            remat=False,
+        )
+        if self.moe is not None:
+            small["moe"] = dataclasses.replace(
+                self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64, d_ff_shared=64 if self.moe.n_shared else 0)
+        if self.ssm is not None:
+            small["ssm"] = dataclasses.replace(
+                self.ssm, d_state=16, head_dim=16, chunk_size=32)
+        if self.encdec:
+            small["n_enc_layers"] = 2
+            small["enc_seq_len"] = 64
+        if self.vlm:
+            small["vision_feat_dim"] = 48
+            small["vision_tokens"] = 8
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    """One benchmark cell: (kind, seq_len, global_batch)."""
+
+    name: str
+    kind: str                     # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell is runnable per the assignment rules."""
+    if cell.name == "long_500k" and not cfg.subquadratic:
+        return False, ("skip: pure full-attention arch; 500k dense decode is the "
+                       "T^2 regime the paper replaces with linear attention "
+                       "(see DESIGN.md §4)")
+    return True, ""

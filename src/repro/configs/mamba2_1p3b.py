@@ -1,0 +1,24 @@
+"""mamba2-1.3b — SSD (state-space duality) [arXiv:2405.21060].
+
+48L d_model=2048, attention-free (d_ff=0: pure Mamba-2 blocks), vocab 50280,
+ssm_state=128.  Sub-quadratic: runs the long_500k cell.
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=64,            # SSD heads = expand*d_model/head_dim = 4096/64
+    n_kv_heads=64,
+    d_ff=0,                # attn-free, no MLP (Mamba-2 block only)
+    vocab_size=50280,
+    head_dim=64,
+    rope="none",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk_size=256),
+    subquadratic=True,
+)

@@ -1,0 +1,31 @@
+"""qwen2-vl-7b — M-RoPE, dynamic resolution [arXiv:2409.12191].
+
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.  The vision
+frontend (ViT) is a STUB per the assignment: input_specs() provides
+precomputed patch features (width 1280, SigLip/Qwen2-ViT hidden size);
+the projector + multimodal merge + decoder are real bricks.
+
+28 heads do not divide the 16-way model axis, so attention uses the
+context-parallel sharding mode (DESIGN.md §6).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv_heads=4,
+    d_ff=18944,
+    vocab_size=152064,
+    head_dim=128,
+    act="swiglu",
+    norm="rmsnorm",
+    rope="mrope",
+    rope_theta=1000000.0,
+    vlm=True,
+    vision_feat_dim=1280,
+    vision_tokens=1024,    # fixed-resolution preprocessing (paper §NPU)
+    attn_sharding="context",
+)

@@ -1,0 +1,27 @@
+"""seamless-m4t-large-v2 — enc-dec multimodal [arXiv:2308.11596].
+
+24L (enc) + 24L (dec), d_model=1024 16H (kv=16) d_ff=8192 vocab=256206.
+Audio frontend is a STUB: input_specs() provides precomputed frame
+embeddings (B, T, d_model).  Decode cells use a fixed 8192-frame encoder
+memory with the decoder self-cache at the cell's seq_len (DESIGN.md §4).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    n_layers=24,           # decoder layers
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    head_dim=64,
+    act="gelu",
+    norm="layernorm",
+    rope="rope",
+    tie_embeddings=True,
+    encdec=True,
+    n_enc_layers=24,
+    enc_seq_len=8192,
+)

@@ -1,0 +1,175 @@
+"""Model decomposition into "bricks" (paper §3.1).
+
+NANOMIND's first insight: LMMs are inherently modular — vision encoder,
+projector, multimodal embedding, language decoder, audio encoder — and the
+modules can be *decoupled and executed independently*, each on the hardware
+that suits it.  A :class:`Brick` is one such unit: it owns a subset of the
+parameter pytree, exposes a pure apply function, and carries the metadata
+the scheduler needs (compute/memory footprints, static-shape discipline,
+quantization label).
+
+``decompose(cfg)`` builds the BrickGraph for any assigned arch:
+
+    vlm:     vision_frontend* -> projector -> embed -> decoder -> head
+    audio:   audio_frontend* -> encoder -> embed -> decoder -> head
+    lm:      embed -> decoder -> head          (*frontends are stubs)
+
+Bricks are the unit of: placement (core/scheduler), zero-copy hand-off
+(core/tabm), sequential low-power execution (core/cascade), and hybrid
+quantization (core/quantize policies use brick names as path prefixes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class Brick:
+    """One independently executable module."""
+
+    name: str
+    kind: str                       # frontend | encoder | projector | embed
+                                    # | decoder | head
+    param_keys: Tuple[str, ...]     # top-level params entries this brick owns
+    apply: Callable                 # (params_slice, cfg, *inputs) -> outputs
+    static_shape: bool = False      # paper §NPU: fixed input shapes only
+    quant_label: str = "bf16"       # default per-brick precision (Fig. 7)
+    flops_per_token: float = 0.0    # scheduler cost model inputs
+    param_bytes: int = 0
+
+    def params_of(self, params: Dict[str, Any]) -> Dict[str, Any]:
+        return {k: params[k] for k in self.param_keys if k in params}
+
+
+@dataclass
+class BrickGraph:
+    """Linear chain of bricks (the LMM pipelines are chains; the graph type
+    still records explicit edges so the scheduler/TABM can treat producer
+    -> consumer pairs uniformly)."""
+
+    cfg: ModelConfig
+    bricks: List[Brick]
+
+    @property
+    def edges(self) -> List[Tuple[str, str]]:
+        return [(a.name, b.name) for a, b in zip(self.bricks, self.bricks[1:])]
+
+    def brick(self, name: str) -> Brick:
+        for b in self.bricks:
+            if b.name == name:
+                return b
+        raise KeyError(name)
+
+    def names(self) -> List[str]:
+        return [b.name for b in self.bricks]
+
+
+# ---------------------------------------------------------------------------
+# brick apply functions (thin wrappers over the model substrate)
+# ---------------------------------------------------------------------------
+
+def _apply_projector(p, cfg, vision_feats):
+    vp = p["vis_proj"]
+    v = jax.nn.gelu(jnp.einsum("bnf,fd->bnd",
+                               vision_feats.astype(cfg.compute_dtype),
+                               vp["w1"]))
+    return jnp.einsum("bnd,de->bne", v, vp["w2"])
+
+
+def _apply_embed(p, cfg, tokens, vision_embeds=None):
+    x = p["embed"][tokens]
+    if vision_embeds is not None:
+        x = jnp.concatenate([vision_embeds, x[:, vision_embeds.shape[1]:]],
+                            axis=1)
+    return x
+
+
+def _apply_decoder(p, cfg, x, positions=None):
+    from repro.models import decoder as dec
+    from repro.models.model import make_rope_fn
+    from repro.models.common import default_positions, default_mrope_positions
+    B, S, _ = x.shape
+    pos = default_positions(B, S) if positions is None else positions
+    mrope = default_mrope_positions(B, S) if cfg.rope == "mrope" else None
+    rope_fn = make_rope_fn(cfg, pos, mrope)
+    x, _, _ = dec.stack_forward(p["layers"], cfg, x, rope_fn, causal=True)
+    return x
+
+
+def _apply_head(p, cfg, x):
+    from repro.models.model import _head
+    # head brick owns final_norm (+ lm_head or the tied embed table)
+    return _head(p, cfg, x)
+
+
+def _apply_audio_encoder(p, cfg, src_embeds):
+    from repro.models.encdec import encode
+    return encode(p, cfg, src_embeds)
+
+
+def _brick_flops(cfg: ModelConfig, kind: str) -> float:
+    """Per-token matmul FLOPs (2 * params touched), scheduler cost input."""
+    from repro.models.model import count_params_analytic
+    n = count_params_analytic(cfg, active_only=True)
+    emb = cfg.padded_vocab * cfg.d_model
+    body = n - emb * (1 if cfg.tie_embeddings else 2)
+    return {"embed": 0.0,                      # gather, no matmul
+            "head": 2.0 * emb,
+            "decoder": 2.0 * body,
+            "projector": 2.0 * (cfg.vision_feat_dim * cfg.d_model
+                                + cfg.d_model * cfg.d_model),
+            "encoder": 2.0 * body * (cfg.n_enc_layers
+                                     / max(1, cfg.n_layers)),
+            "frontend": 0.0}.get(kind, 0.0)
+
+
+def _bytes(cfg, keys_params: int) -> int:
+    return keys_params * 2                     # bf16
+
+
+def decompose(cfg: ModelConfig) -> BrickGraph:
+    """The paper's model decomposition for any assigned arch."""
+    bricks: List[Brick] = []
+
+    def add(name, kind, keys, fn, static=False, quant="bf16"):
+        bricks.append(Brick(name, kind, tuple(keys), fn, static_shape=static,
+                            quant_label=quant,
+                            flops_per_token=_brick_flops(cfg, kind)))
+
+    if cfg.vlm:
+        # frontend is a STUB per the assignment: input_specs() provides
+        # precomputed patch features; the projector onward is real.
+        add("vision_frontend", "frontend", (), lambda p, c, f: f,
+            static=True, quant="fp16")
+        add("projector", "projector", ("vis_proj",), _apply_projector,
+            static=True, quant="fp16")
+    if cfg.encdec:
+        add("audio_frontend", "frontend", (), lambda p, c, f: f,
+            static=True, quant="fp16")
+        add("audio_encoder", "encoder",
+            ("enc_layers", "enc_final_norm"), _apply_audio_encoder,
+            static=True, quant="fp16")
+    add("embedding", "embed", ("embed",), _apply_embed, quant="fp16")
+    add("decoder", "decoder",
+        ("layers",) if not cfg.encdec else ("dec_layers",),
+        _apply_decoder, quant="q4f16")
+    head_keys = ["final_norm"]
+    if not cfg.tie_embeddings:
+        head_keys.append("lm_head")
+    else:
+        head_keys.append("embed")             # tied: head reads the table
+    add("head", "head", head_keys, _apply_head, quant="q4f16")
+    return BrickGraph(cfg, bricks)
+
+
+def brick_param_bytes(graph: BrickGraph, params) -> Dict[str, int]:
+    """Actual per-brick weight bytes (after any quantization)."""
+    from repro.core.quantize import tree_bytes
+    return {b.name: tree_bytes(b.params_of(params)) for b in graph.bricks}

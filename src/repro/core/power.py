@@ -1,0 +1,116 @@
+"""Battery-aware execution (paper §3.2 "Power-efficiency Strategy").
+
+The three-state PMU-driven policy, verbatim from the paper:
+
+  (i)   Unconstrained Performance  (B > T_high): full capacity, aggressive
+        parallel offloading.
+  (ii)  Proportional Throttling    (T_low < B <= T_high): graceful
+        degradation with alpha = (B - T_low) / (T_high - T_low) linearly
+        interpolating camera frame rate and memory read/write rate.
+  (iii) Critical Conservation      (B <= T_low): switch to the On-Demand
+        Cascade (sequential load->execute->release, core/cascade.py).
+
+TPU adaptation: "camera FPS / memory clocks" become the serving knobs we
+actually have — admission rate (requests/s), max batch, and submesh width —
+scaled by the same alpha.  The PMU is simulated from the energy model
+(analysis/energy.py) since the container has no hardware counters.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+
+class PowerState(enum.Enum):
+    UNCONSTRAINED = "unconstrained"
+    THROTTLED = "throttled"
+    CRITICAL = "critical"
+
+
+@dataclass
+class PMU:
+    """Simulated power-management unit: integrates modeled joules into a
+    battery state-of-charge, the signal the policy arbitrates on."""
+
+    battery_mah: float = 2000.0
+    volts: float = 3.7
+    level: float = 1.0                       # state of charge, 0..1
+    history: List[Tuple[float, float]] = field(default_factory=list)
+    _t: float = 0.0
+
+    @property
+    def capacity_j(self) -> float:
+        return self.battery_mah / 1000.0 * self.volts * 3600.0
+
+    def drain(self, joules: float, dt: float = 0.0):
+        self.level = max(0.0, self.level - joules / self.capacity_j)
+        self._t += dt
+        self.history.append((self._t, joules / max(dt, 1e-9) if dt else 0.0))
+
+    def sample_watts(self) -> float:
+        return self.history[-1][1] if self.history else 0.0
+
+
+@dataclass(frozen=True)
+class Knobs:
+    """Execution knobs one policy state implies."""
+    max_batch: int
+    admission_rate: float        # fraction of offered requests admitted
+    frame_rate_hz: float         # camera-equivalent input rate
+    mem_clock_scale: float       # paper's memory read/write rate scale
+    submesh_width: float         # fraction of the pod's "model" axis to use
+    cascade: bool                # critical mode: one-shot sequential
+
+
+@dataclass
+class PowerPolicy:
+    t_high: float = 0.60
+    t_low: float = 0.20
+    full_batch: int = 128
+    full_fps: float = 30.0
+
+    def state(self, battery: float) -> PowerState:
+        if battery > self.t_high:
+            return PowerState.UNCONSTRAINED
+        if battery > self.t_low:
+            return PowerState.THROTTLED
+        return PowerState.CRITICAL
+
+    def alpha(self, battery: float) -> float:
+        """The paper's scaling factor, clamped to [0, 1]."""
+        a = (battery - self.t_low) / (self.t_high - self.t_low)
+        return min(1.0, max(0.0, a))
+
+    def knobs(self, battery: float) -> Knobs:
+        st = self.state(battery)
+        if st is PowerState.UNCONSTRAINED:
+            return Knobs(self.full_batch, 1.0, self.full_fps, 1.0, 1.0,
+                         cascade=False)
+        if st is PowerState.THROTTLED:
+            a = self.alpha(battery)
+            return Knobs(max(1, int(self.full_batch * a)),
+                         admission_rate=a,
+                         frame_rate_hz=max(1.0, self.full_fps * a),
+                         mem_clock_scale=max(0.25, a),
+                         submesh_width=max(0.25, a),
+                         cascade=False)
+        return Knobs(1, admission_rate=0.0, frame_rate_hz=0.0,
+                     mem_clock_scale=0.25, submesh_width=0.25, cascade=True)
+
+
+@dataclass
+class BatteryAwareExecutor:
+    """Glue: reads the PMU, exposes the knobs + the scheduler objective.
+
+    Objective flips from latency to energy as charge drops — the paper's
+    'arbitrates the trade-off between performance and longevity'."""
+
+    pmu: PMU
+    policy: PowerPolicy = field(default_factory=PowerPolicy)
+
+    def current(self) -> Tuple[PowerState, Knobs, str]:
+        b = self.pmu.level
+        st = self.policy.state(b)
+        objective = "latency" if st is PowerState.UNCONSTRAINED else "energy"
+        return st, self.policy.knobs(b), objective

@@ -1,0 +1,269 @@
+"""Hybrid per-brick quantization (paper §3.2 "Quantization").
+
+NANOMIND's key quantization idea is *hybrid* precision: because the model is
+decomposed into bricks, each brick gets its own bit-width (vision encoder
+FP16/INT8, decoder W4A16 or W2A16, embedding FP16).  This module provides
+
+* :class:`QuantSpec` — bits (2/4/8), group size, symmetric group-wise scheme;
+* :class:`QTensor` — a pytree-registered packed tensor (int32 words holding
+  32/bits codes + per-group scales) that flows through jit/pjit/shardings;
+* :func:`quantize` / :func:`dequantize` — round-trip with the max-abs
+  group-wise scale (the GGUF/K-quant-style scheme the paper builds on);
+* :func:`quantize_tree` / :func:`dequantize_tree` — per-brick application
+  driven by a :class:`QuantPolicy` (the paper's ``em-fp16 vis-fp16 dec-q4f16``
+  label format);
+* weight-memory accounting used by the scheduler's cost model and the
+  Fig. 5 memory benchmark.
+
+Packing layout: codes are packed along the **last** axis, ``32 // bits``
+values per int32 word, with per-group scales over contiguous groups of the
+last axis.  XLA fuses ``dequantize`` into the consuming matmul (the W4A16
+"unpack + rescale in-register" pattern); the explicit fused MXU kernel for
+the hot GEMMs is :mod:`repro.kernels.dequant_gemm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantSpec", "QTensor", "quantize", "dequantize", "quantize_tree",
+    "dequantize_tree", "QuantPolicy", "PROFILES", "tree_bytes",
+]
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Group-wise symmetric quantization spec."""
+
+    bits: int                  # 2 | 4 | 8
+    group_size: int = 64       # values per scale group (along last axis)
+    scale_dtype: str = "float32"
+
+    def __post_init__(self):
+        assert self.bits in (2, 4, 8), self.bits
+        assert 32 % self.bits == 0
+
+    @property
+    def per_word(self) -> int:
+        return 32 // self.bits
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1   # 1, 7, 127
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))      # -2, -8, -128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QTensor:
+    """Packed quantized tensor.  Pytree: children = (codes, scales)."""
+
+    codes: jnp.ndarray          # int32, shape (..., K // per_word)
+    scales: jnp.ndarray         # shape (..., K // group_size)
+    spec: QuantSpec             # static
+    shape: Tuple[int, ...]      # original logical shape (static)
+    dtype: Any                  # original dtype (static)
+
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.spec, self.shape, self.dtype)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.codes.size * 4 + self.scales.size
+                   * jnp.dtype(self.spec.scale_dtype).itemsize)
+
+    def __repr__(self):
+        return (f"QTensor(w{self.spec.bits}, shape={self.shape}, "
+                f"g={self.spec.group_size})")
+
+
+def _pad_last(x, multiple: int):
+    k = x.shape[-1]
+    pad = (-k) % multiple
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, k
+
+
+def quantize(w: jnp.ndarray, spec: QuantSpec) -> QTensor:
+    """Group-wise symmetric quantization along the last axis."""
+    orig_shape, orig_dtype = w.shape, w.dtype
+    wf = w.astype(jnp.float32)
+    wf, k = _pad_last(wf, max(spec.group_size, spec.per_word))
+    kp = wf.shape[-1]
+    g = spec.group_size
+    grp = wf.reshape(*wf.shape[:-1], kp // g, g)
+    amax = jnp.max(jnp.abs(grp), axis=-1, keepdims=True)
+    scale = amax / spec.qmax
+    safe = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(grp / safe), spec.qmin, spec.qmax).astype(jnp.int32)
+    q = q.reshape(*wf.shape[:-1], kp)
+    # pack: per_word codes -> one int32 (two's-complement field of `bits`)
+    pw = spec.per_word
+    mask = (1 << spec.bits) - 1
+    qu = jnp.bitwise_and(q, mask)                     # unsigned field
+    qu = qu.reshape(*wf.shape[:-1], kp // pw, pw)
+    shifts = (jnp.arange(pw, dtype=jnp.int32) * spec.bits)
+    words = jnp.sum(jnp.left_shift(qu, shifts), axis=-1).astype(jnp.int32)
+    scales = scale[..., 0].astype(spec.scale_dtype)
+    return QTensor(words, scales, spec, orig_shape, orig_dtype)
+
+
+def unpack_codes(codes: jnp.ndarray, spec: QuantSpec) -> jnp.ndarray:
+    """int32 words -> signed integer codes (..., K) in int32."""
+    pw = spec.per_word
+    shifts = (jnp.arange(pw, dtype=jnp.int32) * spec.bits)
+    field = jnp.right_shift(codes[..., None], shifts)
+    field = jnp.bitwise_and(field, (1 << spec.bits) - 1)
+    # sign-extend the `bits`-wide field
+    sign = 1 << (spec.bits - 1)
+    q = jnp.where(field >= sign, field - (1 << spec.bits), field)
+    return q.reshape(*codes.shape[:-1], codes.shape[-1] * pw)
+
+
+def dequantize(qt: QTensor) -> jnp.ndarray:
+    q = unpack_codes(qt.codes, qt.spec).astype(jnp.float32)
+    g = qt.spec.group_size
+    kp = q.shape[-1]
+    q = q.reshape(*q.shape[:-1], kp // g, g)
+    w = q * qt.scales.astype(jnp.float32)[..., None]
+    w = w.reshape(*q.shape[:-2], kp)[..., :qt.shape[-1]]
+    return w.astype(qt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# per-brick policies (the paper's Module–Quantization label format, Fig. 7)
+# ---------------------------------------------------------------------------
+
+# label -> spec; fp16/bf16 mean "leave unquantized"
+_LABEL_SPECS: Dict[str, Optional[QuantSpec]] = {
+    "fp16": None,
+    "bf16": None,
+    "q8f16": QuantSpec(8),
+    "q4f16": QuantSpec(4),
+    "q2f16": QuantSpec(2),
+}
+
+
+@dataclass(frozen=True)
+class QuantPolicy:
+    """Maps brick-name patterns to quantization labels.
+
+    ``rules`` are (regex, label) pairs matched against pytree key-paths or
+    brick names, first match wins.  The paper's configurations, e.g.
+    ``em-fp16 | vis-fp16 | dec-q4f16``, are expressed as profiles below.
+    """
+
+    name: str
+    rules: Tuple[Tuple[str, str], ...]
+    min_size: int = 1 << 14      # don't quantize tiny leaves (norms, biases)
+
+    def label_for(self, path: str) -> str:
+        for pat, label in self.rules:
+            if re.search(pat, path):
+                return label
+        return "bf16"
+
+    def spec_for(self, path: str) -> Optional[QuantSpec]:
+        return _LABEL_SPECS[self.label_for(path)]
+
+
+_LABEL_SPECS["q4f16-g32"] = QuantSpec(4, group_size=32)
+
+PROFILES: Dict[str, QuantPolicy] = {
+    # the paper's headline config: FP16 vision, W4A16 decoder (Fig. 6/7)
+    "nanomind-default": QuantPolicy("nanomind-default", (
+        (r"vis|projector", "fp16"),
+        (r"embed", "fp16"),
+        (r"layers|dec|lm_head", "q4f16"),
+    )),
+    # pod-serving variant: group 32 so scale groups align with a 16-way
+    # tensor-parallel shard of every assigned d_ff/d_model (EXPERIMENTS.md
+    # §Perf, deepseek decode iteration: group 64 straddles the shard
+    # boundary at d_ff=22016 and forces a full regather)
+    "nanomind-serve": QuantPolicy("nanomind-serve", (
+        (r"vis|projector", "fp16"),
+        (r"embed", "fp16"),
+        (r"layers|dec|lm_head", "q4f16-g32"),
+    )),
+    # ablations from Fig. 7
+    "all-fp16": QuantPolicy("all-fp16", ()),
+    "all-q4": QuantPolicy("all-q4", ((r".", "q4f16"),)),
+    "vis-q4": QuantPolicy("vis-q4", (
+        (r"vis|projector", "q4f16"), (r"embed", "fp16"),
+        (r"layers|dec|lm_head", "q4f16"),
+    )),
+    "dec-q2": QuantPolicy("dec-q2", (
+        (r"vis|projector|embed", "fp16"),
+        (r"layers|dec|lm_head", "q2f16"),
+    )),
+    "dec-q8": QuantPolicy("dec-q8", (
+        (r"vis|projector|embed", "fp16"),
+        (r"layers|dec|lm_head", "q8f16"),
+    )),
+}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def quantize_tree(params, policy: QuantPolicy):
+    """Quantize eligible leaves of a param pytree per the policy."""
+    def visit(path, leaf):
+        if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2:
+            return leaf
+        if leaf.size < policy.min_size:
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        spec = policy.spec_for(_path_str(path))
+        if spec is None:
+            return leaf
+        return quantize(leaf, spec)
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def dequantize_tree(params):
+    """Inverse of :func:`quantize_tree`; inside jit XLA fuses the dequant
+    into each consumer (W4A16 in-register unpack)."""
+    return jax.tree.map(
+        lambda l: dequantize(l) if isinstance(l, QTensor) else l,
+        params, is_leaf=lambda l: isinstance(l, QTensor))
+
+
+def tree_bytes(params) -> int:
+    """Weight bytes after quantization (Fig. 5 memory accounting)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda l: isinstance(l, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes
+        elif hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size") and hasattr(leaf, "dtype"):
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return total

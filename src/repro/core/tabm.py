@@ -1,0 +1,172 @@
+"""Token-Aware Buffer Manager (TABM) — the paper's zero-copy hand-off
+(§3.2 "Embeddings Zero-Copy Transfer in Unified Memory").
+
+NANOMIND's TABM manages a shared ring-buffer pool in unified DRAM: the NPU
+encoder (producer) writes embeddings directly into a slot which the GPU
+decoder (consumer) binds as input — no CPU staging copy.  Slot lifecycle:
+
+    FREE -> ALLOCATED_FOR_WRITE -> READY_TO_READ -> ALLOCATED_FOR_READ -> FREE
+
+TPU adaptation (DESIGN.md §2): "unified DRAM" becomes device-resident HBM;
+"zero-copy" becomes **buffer donation** — ``write_slot`` donates the pool
+array, so XLA aliases the update in place (one dynamic-update-slice, no
+fresh allocation), and the consumer binds the slot as a dynamic-slice view
+that fuses into its first matmul.  Between *submeshes* the hand-off is a
+sharding-preserving device_put (pure ICI, never through the host) — see
+core/scheduler.SubmeshPipe.
+
+The control plane (this class) is host-side Python — exactly like the
+paper's lightweight CPU runtime: it never touches token data, only slot
+states, and provides the scheduling signals (occupancy) the power policy
+reads.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FREE = 0
+ALLOCATED_FOR_WRITE = 1
+READY_TO_READ = 2
+ALLOCATED_FOR_READ = 3
+
+_STATE_NAMES = {FREE: "FREE", ALLOCATED_FOR_WRITE: "ALLOCATED_FOR_WRITE",
+                READY_TO_READ: "READY_TO_READ",
+                ALLOCATED_FOR_READ: "ALLOCATED_FOR_READ"}
+
+_VALID = {FREE: {ALLOCATED_FOR_WRITE},
+          ALLOCATED_FOR_WRITE: {READY_TO_READ, FREE},
+          READY_TO_READ: {ALLOCATED_FOR_READ},
+          ALLOCATED_FOR_READ: {FREE}}
+
+
+class TABMError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# device ops (data plane) — donation = the TPU zero-copy
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slot(pool: jnp.ndarray, slot: jnp.ndarray,
+                embeds: jnp.ndarray, n_tokens: jnp.ndarray) -> jnp.ndarray:
+    """pool (n_slots, max_tokens, d) <- embeds (tokens, d) at `slot`.
+
+    The pool is DONATED: XLA writes in place (alias), the paper's
+    'NPU writes embeddings directly into a buffer slot'."""
+    t, d = embeds.shape
+    padded = jnp.zeros((pool.shape[1], d), pool.dtype)
+    padded = jax.lax.dynamic_update_slice(padded, embeds.astype(pool.dtype),
+                                          (0, 0))
+    return jax.lax.dynamic_update_slice(pool, padded[None],
+                                        (slot, 0, 0))
+
+
+@jax.jit
+def _read_slot(pool: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Bind a slot as consumer input.  Under jit this dynamic-slice fuses
+    into the consumer's first op — no copy materializes."""
+    return jax.lax.dynamic_slice(
+        pool, (slot, 0, 0), (1, pool.shape[1], pool.shape[2]))[0]
+
+
+# ---------------------------------------------------------------------------
+# control plane
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RingBuffer:
+    """One TABM pool: device array + host-side slot state machine."""
+
+    n_slots: int
+    max_tokens: int
+    dim: int
+    dtype: str = "bfloat16"
+    sharding: Optional[jax.sharding.NamedSharding] = None
+
+    def __post_init__(self):
+        pool = jnp.zeros((self.n_slots, self.max_tokens, self.dim),
+                         jnp.dtype(self.dtype))
+        if self.sharding is not None:
+            pool = jax.device_put(pool, self.sharding)
+        self.pool = pool
+        self.states: List[int] = [FREE] * self.n_slots
+        self.tokens: List[int] = [0] * self.n_slots
+        self._write_ptr = 0
+        self._read_ptr = 0
+        self.stats = {"writes": 0, "reads": 0, "stalls": 0}
+
+    # -- state machine ------------------------------------------------------
+    def _transition(self, slot: int, to: int):
+        frm = self.states[slot]
+        if to not in _VALID[frm]:
+            raise TABMError(
+                f"slot {slot}: illegal {_STATE_NAMES[frm]} -> "
+                f"{_STATE_NAMES[to]}")
+        self.states[slot] = to
+
+    def acquire_write(self) -> Optional[int]:
+        """Producer asks for a slot; None = ring full (producer must stall —
+        the paper's producer/consumer smoothing signal)."""
+        slot = self._write_ptr
+        if self.states[slot] != FREE:
+            self.stats["stalls"] += 1
+            return None
+        self._transition(slot, ALLOCATED_FOR_WRITE)
+        self._write_ptr = (slot + 1) % self.n_slots
+        return slot
+
+    def commit_write(self, slot: int, embeds: jnp.ndarray):
+        """Zero-copy write (donated pool) then mark READY_TO_READ."""
+        if self.states[slot] != ALLOCATED_FOR_WRITE:
+            raise TABMError(f"commit on slot {slot} in "
+                            f"{_STATE_NAMES[self.states[slot]]}")
+        n = embeds.shape[0]
+        if n > self.max_tokens:
+            raise TABMError(f"{n} tokens > slot capacity {self.max_tokens}")
+        self.pool = _write_slot(self.pool, jnp.asarray(slot), embeds,
+                                jnp.asarray(n))
+        self.tokens[slot] = n
+        self._transition(slot, READY_TO_READ)
+        self.stats["writes"] += 1
+
+    def abort_write(self, slot: int):
+        self._transition(slot, FREE)
+
+    def acquire_read(self) -> Optional[Tuple[int, jnp.ndarray, int]]:
+        """Consumer takes the oldest READY slot: (slot, view, n_tokens)."""
+        slot = self._read_ptr
+        if self.states[slot] != READY_TO_READ:
+            return None
+        self._transition(slot, ALLOCATED_FOR_READ)
+        self._read_ptr = (slot + 1) % self.n_slots
+        view = _read_slot(self.pool, jnp.asarray(slot))
+        self.stats["reads"] += 1
+        return slot, view, self.tokens[slot]
+
+    def release(self, slot: int):
+        """Consumer returns a slot.  Only legal from ALLOCATED_FOR_READ —
+        a producer abandoning a write must use abort_write."""
+        if self.states[slot] != ALLOCATED_FOR_READ:
+            raise TABMError(f"release on slot {slot} in "
+                            f"{_STATE_NAMES[self.states[slot]]}")
+        self._transition(slot, FREE)
+        self.tokens[slot] = 0
+
+    # -- signals ------------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        busy = sum(s != FREE for s in self.states)
+        return busy / self.n_slots
+
+    def ready_count(self) -> int:
+        return sum(s == READY_TO_READ for s in self.states)
+
+    @property
+    def nbytes(self) -> int:
+        return self.pool.size * self.pool.dtype.itemsize

@@ -1,0 +1,3 @@
+"""Data substrate: synthetic corpora, packing, sharded host loading."""
+from repro.data.pipeline import (PackedLMDataset, ShardedLoader,
+                                 multimodal_batch_iter, synthetic_documents)

@@ -1,0 +1,2 @@
+"""Distribution substrate: sharding rules, checkpointing, fault tolerance,
+gradient compression.  Mesh construction lives in :mod:`repro.launch.mesh`."""

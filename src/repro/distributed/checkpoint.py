@@ -1,0 +1,145 @@
+"""Topology-independent checkpointing (no orbax in the container — built
+from numpy + a json manifest).
+
+Design for 1000+ nodes:
+
+* **Logical layout**: each pytree leaf is stored under its tree path with
+  shape/dtype metadata — nothing about the mesh is persisted, so a restore
+  may bind ANY mesh/sharding (elastic re-mesh after node failure just
+  restores onto the survivor mesh; fault_tolerance.py drives this).
+* **Atomicity**: writes go to ``step_XXXX.tmp`` then os.rename — a crashed
+  writer never corrupts the latest pointer.
+* **Async**: ``save_async`` snapshots to host memory synchronously (cheap)
+  and writes in a background thread — the train loop overlaps I/O with the
+  next steps, the standard trick for minimizing checkpoint stalls.
+* **GC**: keep the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, Any]], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = []
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        items.append((key, leaf))
+    return items, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save.  Returns the checkpoint path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    items, _ = _flatten(tree)
+    manifest = {"step": step, "leaves": [], "extra": extra or {},
+                "time": time.time()}
+    for i, (key, leaf) in enumerate(items):
+        arr = np.asarray(leaf)
+        logical = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":      # bf16 etc: store fp32 (lossless)
+            arr = arr.astype(np.float32)
+        fn = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fn), arr)
+        manifest["leaves"].append({"key": key, "file": fn,
+                                   "shape": list(arr.shape),
+                                   "dtype": logical})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncCheckpointer:
+    """Snapshot-to-host now, write-to-disk in the background."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def save_async(self, step: int, tree, extra=None):
+        self.wait()                                   # one in flight
+        host_tree = jax.tree.map(np.asarray, tree)    # device -> host now
+
+        def _run():
+            try:
+                save(self.ckpt_dir, step, host_tree, keep=self.keep,
+                     extra=extra)
+            except Exception as e:                    # surfaced on wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, *, step: Optional[int] = None,
+            shardings=None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``like`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for the NEW mesh — this is the reshard-on-load that makes
+    checkpoints elastic across topologies."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    items, treedef = _flatten(like)
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    leaves = []
+    shard_items = (_flatten(shardings)[0] if shardings is not None
+                   else [(k, None) for k, _ in items])
+    for (key, leaf), (_, shard) in zip(items, shard_items):
+        meta = by_key[key]
+        arr = np.load(os.path.join(path, meta["file"]))
+        want_dtype = getattr(leaf, "dtype", meta["dtype"])
+        out = jax.numpy.asarray(arr).astype(want_dtype)
+        leaves.append(jax.device_put(out, shard) if shard is not None
+                      else out)
+    return treedef.unflatten(leaves), step, manifest.get("extra", {})
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

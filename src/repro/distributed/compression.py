@@ -1,0 +1,101 @@
+"""Gradient compression for the data-parallel axis: int8 block-quantized
+all-reduce with error feedback.
+
+At 1000+ nodes the DP gradient reduce-scatter is DCN/ICI-bound; 8-bit
+block-quantized reduction cuts it 4x vs fp32 (2x vs bf16).  The scheme:
+
+    q = round(g / s),  s = max|g|_block / 127        (per 256-value block)
+    psum in int32 (no overflow below ~2^23 workers), rescale by s_psum
+
+Error feedback keeps the residual (g - dequant(q)) and adds it to the next
+step's gradient — the standard trick that restores convergence to near-
+uncompressed quality.
+
+Two integration points:
+* ``compress / decompress`` — building blocks (tested exhaustively);
+* ``psum_compressed`` — drop-in for explicit shard_map DP training steps
+  (see training/train_loop.py ``ddp_train_step``); under pjit the implicit
+  reduction cannot be intercepted, which is WHY the explicit-DP variant
+  exists.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.pad(x.reshape(-1), (0, pad))
+    return flat.reshape(-1, BLOCK), n
+
+
+def compress(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g -> (int8 codes (nb, BLOCK), fp32 scales (nb, 1))."""
+    blocks, _ = _pad_to_block(g.astype(jnp.float32))
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(amax == 0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype
+               ) -> jnp.ndarray:
+    n = 1
+    for d in shape:
+        n *= d
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+    return flat.reshape(shape).astype(dtype)
+
+
+def psum_compressed(tree, axis_name: str):
+    """Quantized-gradient psum over a shard_map/pmap axis.
+
+    Each worker quantizes to int8 blocks locally, then the *quantized*
+    values are reduced: result = sum_w dequant(q_w) — carrying exactly the
+    int8 compression error a real low-bit reduction would.  (In this
+    emulation the reduction runs in fp32 on the wire; a production backend
+    implements it as int8 all-gather + local int32 sum, or ring segments
+    re-quantized per hop — the *numerics* modeled here are the standard
+    'quantize-then-reduce' scheme whose convergence error feedback fixes.)"""
+    def one(g):
+        q, s = compress(g)
+        qs = q.astype(jnp.float32) * s                 # dequantized blocks
+        total = jax.lax.psum(qs, axis_name)
+        n = g.size
+        return total.reshape(-1)[:n].reshape(g.shape).astype(g.dtype)
+    return jax.tree.map(one, tree)
+
+
+@dataclass
+class ErrorFeedback:
+    """Residual memory: g_eff = g + residual; residual = g_eff - dq(q)."""
+
+    residual: Any = None
+
+    def apply(self, grads):
+        if self.residual is None:
+            self.residual = jax.tree.map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+        g_eff = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, self.residual)
+
+        def split(g):
+            q, s = compress(g)
+            dq = decompress(q, s, g.shape, jnp.float32)
+            return dq, g - dq
+
+        pairs = jax.tree.map(split, g_eff)
+        leaves, treedef = jax.tree_util.tree_flatten(
+            pairs, is_leaf=lambda x: isinstance(x, tuple)
+            and len(x) == 2 and not isinstance(x[0], tuple))
+        dqs = treedef.unflatten([p[0] for p in leaves])
+        self.residual = treedef.unflatten([p[1] for p in leaves])
+        return dqs

@@ -1,0 +1,139 @@
+"""Fault tolerance at pod scale: heartbeats, elastic re-mesh, stragglers.
+
+The container has one process, so the *distributed control plane* is built
+as a simulation-faithful library: the same classes drive (a) the unit tests
+(simulated clocks/failures), and (b) a real deployment, where the heartbeat
+source is `jax.distributed` worker liveness instead of the injected clock.
+
+Recovery contract (what the 1000-node design needs):
+  1. ``HeartbeatMonitor`` detects dead workers (missed-beat threshold).
+  2. ``plan_remesh`` picks the largest (data, model) grid that fits the
+     survivors while preserving the model-axis size (TP degree is a model
+     property; DP shrinks).  Elastic scaling both directions: workers coming
+     back -> larger DP.
+  3. Checkpoints are topology-independent (distributed/checkpoint.py), so
+     restart = restore(ckpt, shardings(new_mesh)) + ShardedLoader.seek(step)
+     — replay-deterministic data (data/pipeline.py).
+  4. ``StragglerMitigator`` tracks per-worker step times; persistent
+     stragglers (p50 > multiplier x fleet median) are evicted exactly like
+     failures (the re-mesh path), the standard large-run mitigation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class HeartbeatMonitor:
+    n_workers: int
+    timeout_s: float = 30.0
+    clock: Callable[[], float] = time.monotonic
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last_beat: Dict[int, float] = {w: now
+                                            for w in range(self.n_workers)}
+        self.evicted: set = set()
+
+    def beat(self, worker: int):
+        if worker not in self.evicted:
+            self.last_beat[worker] = self.clock()
+
+    def dead_workers(self) -> List[int]:
+        now = self.clock()
+        return sorted(w for w, t in self.last_beat.items()
+                      if w not in self.evicted and now - t > self.timeout_s)
+
+    def evict(self, worker: int):
+        self.evicted.add(worker)
+
+    def alive(self) -> List[int]:
+        return sorted(set(self.last_beat) - self.evicted)
+
+
+@dataclass(frozen=True)
+class RemeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    workers: Tuple[int, ...]
+    dropped: Tuple[int, ...]
+
+    @property
+    def n_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+
+def plan_remesh(alive_workers: List[int], devices_per_worker: int,
+                model_axis: int = 16, pod_axis: Optional[int] = None
+                ) -> RemeshPlan:
+    """Largest (data, model) mesh over the survivors.
+
+    The model axis is preserved (sharded weights need their TP degree);
+    the data axis absorbs the loss — standard elastic-DP.  Workers whose
+    devices don't fill a data row are left warm as spares."""
+    n_dev = len(alive_workers) * devices_per_worker
+    data = n_dev // model_axis
+    if data < 1:
+        raise RuntimeError(
+            f"{n_dev} devices cannot host model axis {model_axis}")
+    used_workers = (data * model_axis) // devices_per_worker
+    workers = tuple(alive_workers[:used_workers])
+    dropped = tuple(alive_workers[used_workers:])
+    if pod_axis and data % pod_axis == 0 and data > pod_axis:
+        return RemeshPlan((pod_axis, data // pod_axis, model_axis),
+                          ("pod", "data", "model"), workers, dropped)
+    return RemeshPlan((data, model_axis), ("data", "model"),
+                      workers, dropped)
+
+
+@dataclass
+class StragglerMitigator:
+    """Per-worker step-time tracker with eviction policy."""
+
+    n_workers: int
+    window: int = 32
+    multiplier: float = 2.0
+    min_samples: int = 8
+
+    def __post_init__(self):
+        self.times: Dict[int, List[float]] = {w: []
+                                              for w in range(self.n_workers)}
+
+    def record(self, worker: int, step_time_s: float):
+        buf = self.times.setdefault(worker, [])
+        buf.append(step_time_s)
+        del buf[:-self.window]
+
+    def fleet_median(self) -> float:
+        all_t = [t for buf in self.times.values() for t in buf]
+        return float(np.median(all_t)) if all_t else 0.0
+
+    def stragglers(self) -> List[int]:
+        med = self.fleet_median()
+        if med == 0.0:
+            return []
+        out = []
+        for w, buf in self.times.items():
+            if len(buf) >= self.min_samples \
+                    and float(np.median(buf)) > self.multiplier * med:
+                out.append(w)
+        return sorted(out)
+
+    def step_deadline(self) -> float:
+        """Per-step deadline: fleet median x multiplier (the synchronous-
+        step timeout after which the monitor treats a worker as failed)."""
+        med = self.fleet_median()
+        return med * self.multiplier if med else float("inf")
+
+
+@dataclass
+class RecoveryLog:
+    """Audit trail of failures/re-meshes (exposed by the train loop)."""
+    events: List[dict] = field(default_factory=list)
+
+    def record(self, kind: str, **kw):
+        self.events.append({"kind": kind, "t": time.time(), **kw})

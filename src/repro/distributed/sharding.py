@@ -1,0 +1,407 @@
+"""Logical-axis sharding rules: DP / FSDP / TP / EP / SP on a (pod, data,
+model) mesh.
+
+The paper's scheduling problem — *which module runs where* — becomes, at pod
+scale, *which tensor dimension lives on which mesh axis*.  This module is the
+single place where that decision is made:
+
+* **DP**     batch dims             -> ("pod", "data")
+* **FSDP**   weight "width" dims    -> "data"  (ZeRO-3 gather-on-use)
+* **TP**     head / ffn / expert / vocab dims -> "model"
+* **EP**     MoE expert dim         -> "model" (dispatch lowers to all-to-all)
+* **SP**     decode-cache sequence  -> "model" (+ spare "data" when batch is
+             too small) — FlashDecoding-across-chips; softmax stats reduce
+             over the sharded axis with tiny payloads.
+
+Every rule is *divisibility-checked against the actual mesh*: an axis that
+does not evenly divide the dim is dropped (falls back to the next candidate
+or replication), so the same rule table serves all ten assigned archs — e.g.
+qwen2-vl's 28 heads reject the 16-way "model" axis and fall back to sharding
+head_dim.
+
+All functions return ``PartitionSpec`` pytrees; :func:`tree_shardings` binds
+them to a mesh as ``NamedSharding``.  Nothing here allocates.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# mesh helpers
+# ---------------------------------------------------------------------------
+
+def axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Pure-data-parallel axes (batch)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+FSDP_AXIS = "data"
+TP_AXIS = "model"
+
+# ---------------------------------------------------------------------------
+# sharding modes (the §Perf levers; see EXPERIMENTS.md)
+#
+#   "tp"    (default) Megatron TP+SP: weights FSDP x TP, activations
+#           sequence-parallel between blocks, head-parallel inside attention.
+#   "fsdp"  pure ZeRO-3: BOTH mesh axes act as data-parallel for
+#           activations; weights stay 2D-sharded and are gathered on use.
+#           No per-layer activation collectives at all — comm = weight
+#           all-gathers (batch-size independent) + gradient reduce-scatter.
+#   "serve" decode-optimized: weights replicated over "data" (no per-step
+#           FSDP regather), TP over "model"; caches sequence-sharded.
+# ---------------------------------------------------------------------------
+
+_MODE = "tp"
+
+
+def set_mode(mode: str):
+    global _MODE
+    assert mode in ("tp", "fsdp", "serve"), mode
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+class _Ruler:
+    """Divisibility-checked PartitionSpec builder for one mesh."""
+
+    def __init__(self, mesh: Mesh):
+        self.sizes = axis_sizes(mesh)
+        self.dp = dp_axes(mesh)
+
+    def _fits(self, dim: int, axes) -> bool:
+        if axes is None:
+            return True
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+        total = int(np.prod([self.sizes[a] for a in axes]))
+        return dim % total == 0
+
+    def spec(self, shape: Sequence[int], *dim_axes) -> P:
+        """Build a PartitionSpec, dropping axes that don't divide.
+
+        ``dim_axes`` is per-dimension: None | axis | tuple | list of
+        candidates tried in order (first that divides wins).
+        """
+        out = []
+        for size, cand in zip(shape, dim_axes):
+            if cand is None:
+                out.append(None)
+                continue
+            cands = cand if isinstance(cand, list) else [cand]
+            chosen = None
+            for c in cands:
+                if c is not None and self._fits(size, c):
+                    chosen = c
+                    break
+            out.append(chosen)
+        # PartitionSpec must not repeat a mesh axis
+        seen: set = set()
+        clean = []
+        for c in out:
+            names = (c,) if isinstance(c, str) else tuple(c or ())
+            if any(n in seen for n in names):
+                clean.append(None)
+            else:
+                seen.update(names)
+                clean.append(c)
+        return P(*clean)
+
+
+def _leaf_name(path) -> str:
+    # skip index-style entries (tuple positions, QTensor's
+    # FlattenedIndexKey children) and the codes/scales suffix: a packed
+    # weight follows its parent weight's layout (packing is along the
+    # LAST axis, which every rule leaves unsharded or divisible).
+    names = [str(p.key) for p in path
+             if hasattr(p, "key") and not isinstance(p.key, int)]
+    for n in reversed(names):
+        if n not in ("codes", "scales"):
+            return n
+    return names[-1] if names else ""
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+def _param_rule(r: _Ruler, path, shape) -> P:
+    """FSDP x TP rule table, keyed on leaf name; specs are for the TRAILING
+    dims so stacked (scan-leading) and flat leaves share one table.
+
+    In "serve" mode the FSDP axis is dropped (weights replicated over
+    "data"): a decode step would otherwise re-gather every layer's weights
+    every token — the dominant decode collective in the baseline."""
+    name = _leaf_name(path)
+    nd = len(shape)
+    fsdp = None if _MODE == "serve" else FSDP_AXIS
+
+    def trail(*axes):
+        axes = tuple(fsdp if a == FSDP_AXIS else a for a in axes)
+        pad = (None,) * (nd - len(axes))
+        return r.spec(shape, *(pad + axes))
+
+    if name == "embed":                       # (V, D): vocab-parallel table
+        return trail(TP_AXIS, FSDP_AXIS)
+    if name == "lm_head":                     # (D, V): output-parallel head
+        return trail(FSDP_AXIS, TP_AXIS)
+    # NOTE: no head_dim fallback — hd-sharded K/Q makes the RoPE half-split
+    # reshard catastrophically ("involuntary full rematerialization").
+    # Indivisible head counts (qwen2-vl's 28H, GQA kv=8 on a 16-way axis)
+    # replicate over "model" and keep FSDP on d_model.
+    if name in ("wq", "wk", "wv"):            # (D, H, hd)
+        return trail(FSDP_AXIS, TP_AXIS, None)
+    if name == "wo":                          # (H, hd, D)
+        return trail(TP_AXIS, None, FSDP_AXIS)
+    if name in ("bq", "bk", "bv"):            # (H, hd)
+        return trail(TP_AXIS, None)
+    if name in ("w_up", "w_gate"):
+        if nd >= 4:                           # MoE: (E, D, F) trailing
+            return trail(TP_AXIS, FSDP_AXIS, None)
+        return trail(FSDP_AXIS, TP_AXIS)      # (D, F)
+    if name == "w_down":
+        if nd >= 4:                           # MoE: (E, F, D)
+            return trail(TP_AXIS, None, FSDP_AXIS)
+        return trail(TP_AXIS, FSDP_AXIS)      # (F, D)
+    if name == "router":                      # (D, E): replicated-ish
+        return trail(FSDP_AXIS, None)
+    if name == "in_proj":                     # (D, P)
+        return trail(FSDP_AXIS, TP_AXIS)
+    if name == "out_proj":                    # (P, D)
+        return trail(TP_AXIS, FSDP_AXIS)
+    if name == "conv_w":                      # (K, C)
+        return trail(None, TP_AXIS)
+    if name in ("conv_b", "norm_scale"):      # (C,)
+        return trail(TP_AXIS)
+    if name in ("A_log", "D", "dt_bias"):     # (H,)
+        return trail([TP_AXIS])
+    if name == "w1":                          # vis_proj (F, D)
+        return trail(None, TP_AXIS)
+    if name == "w2":                          # vis_proj (D, D)
+        return trail(FSDP_AXIS, TP_AXIS)
+    # norms / biases / anything small: replicated
+    return P()
+
+
+def tree_param_specs(mesh: Mesh, params_shapes) -> Any:
+    """PartitionSpec pytree for a param (or grad / adam-state) pytree of
+    arrays or ShapeDtypeStructs."""
+    r = _Ruler(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _param_rule(r, path, leaf.shape), params_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+def _dp_candidates(mesh: Mesh):
+    """Batch-dim sharding candidates, mode-aware.  In "fsdp" mode the
+    "model" axis is data-parallel too (pure ZeRO-3)."""
+    dp = list(dp_axes(mesh))
+    if _MODE == "fsdp":
+        full = tuple(dp + [TP_AXIS])
+        return [full, tuple(dp), dp[-1] if dp else None]
+    return [tuple(dp), dp[-1] if dp else None]
+
+
+def batch_spec(mesh: Mesh, name: str, shape) -> P:
+    """Inputs: tokens (B,S), vision_feats (B,N,F), src_embeds (B,T,D)..."""
+    r = _Ruler(mesh)
+    rest = (None,) * (len(shape) - 1)
+    return r.spec(shape, _dp_candidates(mesh), *rest)
+
+
+def tree_batch_specs(mesh: Mesh, batch_shapes) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: batch_spec(mesh, _path_str(path), leaf.shape),
+        batch_shapes)
+
+
+def _cache_rule(r: _Ruler, path, shape) -> P:
+    """Decode caches.  Trailing-dim patterns:
+
+    * attn KV cache   (..., B, S, KV, hd): B->dp, S->model (+ spare dp when
+      B indivisible) — sequence-parallel FlashDecoding layout.
+    * linear-attn     (..., B, H, hd, hd) / (..., B, H, hd): B->dp, H->model.
+    * mamba conv      (..., B, K, C): B->dp, C->model.
+    * mamba state     (..., B, H, P, N): B->dp, H->model.
+    """
+    nd = len(shape)
+    if nd == 0:
+        return P()
+    path_s = _path_str(path)
+    dp = r.dp
+    dp_total = int(np.prod([r.sizes[a] for a in dp])) if dp else 1
+
+    def trail(*axes):
+        pad = (None,) * (nd - len(axes))
+        return r.spec(shape, *(pad + axes))
+
+    if re.search(r"conv", path_s) and nd >= 3:
+        return trail(tuple(dp), None, TP_AXIS)
+    if nd >= 4 and shape[-1] == shape[-2]:    # linear-attn state (B,H,hd,hd)
+        return trail(tuple(dp), TP_AXIS, None, None)
+    if nd >= 4:
+        # (B, S, KV, hd) attn cache or (B, H, P, N) ssm state: disambiguate
+        # by the "seq" dim being the big one.
+        b, s = shape[-4], shape[-3]
+        if s >= 1024:                          # attn cache
+            if b % dp_total == 0 and dp:
+                return trail(tuple(dp), TP_AXIS, None, None)
+            # small batch: spend leftover dp on the sequence axis too
+            seq_axes = [tuple(list(dp) + [TP_AXIS]), TP_AXIS]
+            return trail([tuple(dp)], seq_axes, None, None)
+        return trail(tuple(dp), TP_AXIS, None, None)  # ssm state: H->model
+    if nd >= 2:
+        return trail(tuple(dp), [TP_AXIS])
+    return P()
+
+
+def tree_cache_specs(mesh: Mesh, cache_shapes) -> Any:
+    r = _Ruler(mesh)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _cache_rule(r, path, leaf.shape), cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# binding
+# ---------------------------------------------------------------------------
+
+def tree_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def with_specs(shapes_tree, spec_tree, mesh: Mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree (dry-run inputs)."""
+    return jax.tree.map(
+        lambda sds, spec: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, spec)),
+        shapes_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+def constrain(x, spec: P):
+    """Sharding constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# in-model activation constraints (sequence parallelism)
+# ---------------------------------------------------------------------------
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh from an enclosing ``with mesh:`` block, or None."""
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is None or m.empty or m.devices.size <= 1:
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def constrain_residual(x):
+    """Residual stream (B, S, D): batch over DP axes, sequence over "model"
+    (Megatron-style sequence parallelism).  This is what bounds the scan
+    carry saved per layer for the backward — without it the 95-layer x
+    (B,S,D) activations are only batch-sharded and overflow HBM.  No-op
+    outside a mesh / when dims don't divide (e.g. decode's S=1)."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim != 3:
+        return x
+    r = _Ruler(mesh)
+    if _MODE == "fsdp":   # pure DP: batch over every axis, no seq sharding
+        spec = r.spec(x.shape, _dp_candidates(mesh), None, None)
+    else:
+        spec = r.spec(x.shape, [tuple(r.dp)], TP_AXIS, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_heads(x):
+    """Attention-interior activations (B, S, H, hd): heads over "model",
+    sequence REPLICATED.  Critical: if the sequence sharding is allowed to
+    leak into the chunked-attention loop, the partitioner emits per-chunk
+    gathers *inside* the scan (3040x multiplicity on a 95L model).  The
+    Megatron-SP pattern — all-gather S at attention entry, reduce-scatter at
+    exit — falls out of this constraint + constrain_residual."""
+    mesh = current_mesh()
+    if mesh is None or x.ndim != 4:
+        return x
+    r = _Ruler(mesh)
+    if _MODE == "fsdp":
+        spec = r.spec(x.shape, _dp_candidates(mesh), None, None, None)
+    else:
+        spec = r.spec(x.shape, [tuple(r.dp)], None, TP_AXIS, None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def rs_gradients(tree):
+    """Identity forward; in the BACKWARD the cotangents are constrained to
+    the parameter sharding — GSPMD then emits per-layer reduce-scatters for
+    weight gradients instead of the all-reduce(+local slice) it otherwise
+    chooses inside scan bodies (2x wire bytes).  §Perf train iteration."""
+    mesh = current_mesh()
+    if mesh is None:
+        return tree
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+
+    @jax.custom_vjp
+    def ident(*ls):
+        return ls
+
+    def fwd(*ls):
+        return ls, None
+
+    def bwd(_, gs):
+        r = _Ruler(mesh)
+        flat = jax.tree_util.tree_flatten_with_path(
+            treedef.unflatten(list(gs)))[0]
+        out = []
+        for (path, g) in flat:
+            try:
+                spec = _param_rule(r, path, g.shape)
+                out.append(jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, spec)))
+            except Exception:
+                out.append(g)
+        return tuple(out)
+
+    ident.defvjp(fwd, bwd)
+    return treedef.unflatten(list(ident(*leaves)))
+
+
+def constrain_batch_only(x):
+    """(B, ...): batch over DP axes, everything else replicated."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    r = _Ruler(mesh)
+    spec = r.spec(x.shape, _dp_candidates(mesh), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,2 @@
+from repro.kernels.cache_update.ops import cache_row_update
+from repro.kernels.cache_update.ref import ref_cache_row_update

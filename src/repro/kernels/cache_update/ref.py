@@ -1,0 +1,10 @@
+"""Oracle: scatter one new token row into a (B, S, KV, hd) cache."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_cache_row_update(cache, row, index):
+    """cache (B,S,KV,hd); row (B,KV,hd); index (B,) int32."""
+    b = jnp.arange(cache.shape[0])
+    return cache.at[b, index].set(row.astype(cache.dtype))

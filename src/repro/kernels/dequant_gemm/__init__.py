@@ -1,0 +1,2 @@
+from repro.kernels.dequant_gemm.ops import dequant_gemm, quant_einsum
+from repro.kernels.dequant_gemm.ref import ref_dequant_gemm

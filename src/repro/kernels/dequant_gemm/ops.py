@@ -1,0 +1,78 @@
+"""Public wrapper: QTensor-aware fused dequant-GEMM.
+
+``dequant_gemm(x, qt)`` dispatches to the Pallas kernel (interpret mode when
+not on TPU), padding M/N to tile multiples.  ``quant_einsum`` is the drop-in
+used by model code when a weight leaf has been quantized by the per-brick
+policy: dense einsums fall through to jnp, QTensor weights hit the kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import QTensor, dequantize
+from repro.kernels.dequant_gemm import kernel as K
+from repro.kernels.dequant_gemm.ref import ref_dequant_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x, axis: int, m: int):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=("act", "use_kernel",
+                                             "interpret", "bm", "bn", "bk"))
+def dequant_gemm(x: jnp.ndarray, qt: QTensor,
+                 bias: Optional[jnp.ndarray] = None,
+                 act: Optional[str] = None, *,
+                 use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
+    """x (..., K) @ dequant(qt (N, K)).T -> (..., N)."""
+    N, Klog = qt.shape
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    M = xm.shape[0]
+    if use_kernel is None:
+        # the unpack path needs MXU-aligned tiles; tiny problems or odd K
+        # fall back to the (XLA-fused) reference
+        use_kernel = Klog % bk == 0
+    if not use_kernel:
+        return ref_dequant_gemm(xm, qt, bias, act).reshape(*lead, N)
+    if interpret is None:
+        interpret = not _on_tpu()
+    bm_eff = min(bm, max(8, 1 << (M - 1).bit_length()))
+    xm, pm = _pad_to(xm, 0, bm_eff)
+    codes, _ = _pad_to(qt.codes, 0, bn)
+    scales, pn = _pad_to(qt.scales, 0, bn)
+    b = None
+    if bias is not None:
+        b, _ = _pad_to(bias, 0, bn)
+    out = K.dequant_gemm_pallas(xm, codes, scales, b, bits=qt.spec.bits,
+                                group_size=qt.spec.group_size, act=act,
+                                bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
+    out = out[:M, :N]
+    return out.reshape(*lead, N)
+
+
+def quant_einsum(spec: str, x: jnp.ndarray, w, **kw) -> jnp.ndarray:
+    """Einsum that understands QTensor weights.
+
+    Supported quantized contractions are the model hot paths
+    ('...k,nk->...n' layouts after canonicalization); everything else (and
+    all dense weights) falls through to jnp.einsum."""
+    if not isinstance(w, QTensor):
+        return jnp.einsum(spec, x, w)
+    return dequant_gemm(x, w, **kw)

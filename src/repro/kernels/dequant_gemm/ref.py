@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused dequant-GEMM."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantize import QTensor, dequantize
+
+ACTS = {None: lambda x: x,
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "squared_relu": lambda x: jnp.square(jax.nn.relu(x))}
+
+
+def ref_dequant_gemm(x: jnp.ndarray, qt: QTensor,
+                     bias: Optional[jnp.ndarray] = None,
+                     act: Optional[str] = None) -> jnp.ndarray:
+    """x (..., K) @ dequant(qt (N, K)).T -> (..., N), fp32 accumulation,
+    optional fused bias + activation (the kernel epilogue)."""
+    w = dequantize(qt)                                     # (N, K) in qt.dtype
+    out = jnp.einsum("...k,nk->...n", x, w,
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    out = ACTS[act](out)
+    return out.astype(x.dtype)

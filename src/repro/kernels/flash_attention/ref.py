@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: dense causal GQA attention (fp32 softmax)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True):
+    """q (B,S,H,hd); k,v (B,S,KV,hd); H = KV*G.  Dense softmax oracle."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bikgh,bjkh->bkgij", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkh->bikgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)

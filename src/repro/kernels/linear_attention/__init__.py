@@ -1,0 +1,2 @@
+from repro.kernels.linear_attention.ops import linear_attention
+from repro.kernels.linear_attention.ref import ref_linear_attention

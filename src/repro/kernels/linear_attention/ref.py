@@ -1,0 +1,36 @@
+"""Pure-jnp oracle: causal linear attention with elu+1 feature map.
+
+Sequential per-token recurrence — the literal form of the paper's "running
+summaries of past keys and values" (NANOMIND §3.2 GPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_map(x):
+    return jax.nn.elu(x.astype(jnp.float32)) + 1.0
+
+
+def ref_linear_attention(q, k, v):
+    """q,k,v (B,S,H,hd) -> (out (B,S,H,hd), state (B,H,hd,hd), z (B,H,hd)).
+
+    o_t = phi(q_t).S_t / phi(q_t).z_t with S_t = sum_{i<=t} phi(k_i) v_i^T."""
+    B, S, H, hd = q.shape
+    qf, kf = feature_map(q), feature_map(k)
+    vf = v.astype(jnp.float32)
+
+    def step(carry, t):
+        state, z = carry
+        state = state + jnp.einsum("bhk,bhd->bhkd", kf[:, t], vf[:, t])
+        z = z + kf[:, t]
+        o = jnp.einsum("bhk,bhkd->bhd", qf[:, t], state)
+        den = jnp.maximum(jnp.einsum("bhk,bhk->bh", qf[:, t], z), 1e-6)
+        return (state, z), o / den[..., None]
+
+    init = (jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32))
+    (state, z), outs = jax.lax.scan(step, init, jnp.arange(S))
+    out = jnp.moveaxis(outs, 0, 1).astype(q.dtype)
+    return out, state, z

@@ -1,0 +1,2 @@
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ref_ssd

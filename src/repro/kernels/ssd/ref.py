@@ -1,0 +1,4 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential Mamba-2 recurrence."""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_reference as ref_ssd  # noqa: F401

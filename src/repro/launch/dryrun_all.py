@@ -1,0 +1,102 @@
+"""Run the full dry-run matrix: every (arch x shape) on both meshes.
+
+Each cell runs in a SUBPROCESS (fresh XLA state; a pathological cell cannot
+poison the sweep).  Results land in experiments/dryrun/*.json; the summary
+table prints at the end and feeds EXPERIMENTS.md.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_all [--multipod] \
+        [--archs a,b] [--shapes s1,s2] [--timeout 900]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+
+OUT = "experiments/dryrun"
+
+
+def run_one(arch: str, shape: str, multipod: bool, timeout: int) -> dict:
+    mesh = "2x16x16" if multipod else "16x16"
+    fn = os.path.join(OUT, f"{arch}__{shape}__{mesh}.json")
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--out", OUT]
+    if multipod:
+        cmd.append("--multipod")
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True,
+                              timeout=timeout, env=env)
+        ok = proc.returncode == 0
+    except subprocess.TimeoutExpired:
+        return {"arch": arch, "shape": shape, "mesh": mesh,
+                "status": "timeout", "wall_s": time.time() - t0}
+    if os.path.exists(fn):
+        with open(fn) as f:
+            rec = json.load(f)
+        rec["wall_s"] = time.time() - t0
+        return rec
+    return {"arch": arch, "shape": shape, "mesh": mesh, "status": "error",
+            "stderr": proc.stderr[-1500:], "wall_s": time.time() - t0}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(
+        a for a in list_archs() if a != "llava-onevision-0.5b"))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--multipod", action="store_true",
+                    help="run the 2x16x16 mesh instead of 16x16")
+    ap.add_argument("--both", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1800)
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = [False, True] if args.both else [args.multipod]
+    rows = []
+    for arch in args.archs.split(","):
+        cfg = get_config(arch)
+        for shape in args.shapes.split(","):
+            for mp in meshes:
+                mesh = "2x16x16" if mp else "16x16"
+                fn = os.path.join(OUT, f"{arch}__{shape}__{mesh}.json")
+                if args.skip_done and os.path.exists(fn):
+                    with open(fn) as f:
+                        rows.append(json.load(f))
+                    print(f"[skip] {arch} {shape} {mesh}")
+                    continue
+                ok, why = cell_applicable(cfg, SHAPES[shape])
+                if not ok:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh,
+                           "status": "skipped", "reason": why}
+                    os.makedirs(OUT, exist_ok=True)
+                    with open(fn, "w") as f:
+                        json.dump(rec, f)
+                    rows.append(rec)
+                    print(f"[skip-rule] {arch} {shape} {mesh}")
+                    continue
+                print(f"[run ] {arch} {shape} {mesh} ...", flush=True)
+                rec = run_one(arch, shape, mp, args.timeout)
+                rows.append(rec)
+                print(f"       -> {rec.get('status')} "
+                      f"({rec.get('wall_s', 0):.0f}s)", flush=True)
+
+    n_ok = sum(r.get("status") == "ok" for r in rows)
+    n_skip = sum(r.get("status") == "skipped" for r in rows)
+    bad = [r for r in rows if r.get("status") not in ("ok", "skipped")]
+    print(f"\n=== dry-run matrix: {n_ok} ok, {n_skip} skipped, "
+          f"{len(bad)} failed ===")
+    for r in bad:
+        print(f"  FAIL {r['arch']} {r['shape']} {r['mesh']}: "
+              f"{r.get('status')} {r.get('error', '')[:200]}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

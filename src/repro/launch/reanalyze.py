@@ -1,0 +1,75 @@
+"""Rebuild dry-run JSON records from cached HLO dumps — no recompilation.
+
+The perf-iteration loop edits the cost model / analysis far more often than
+the programs themselves; this re-derives every experiments/dryrun/*.json
+from experiments/hlo/*.hlo.gz in seconds.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+
+from repro.analysis import hlo_cost, roofline as rl
+from repro.configs import SHAPES, get_config
+
+HLO_DIR = "experiments/hlo"
+OUT_DIR = "experiments/dryrun"
+
+
+def reanalyze_one(hlo_path: str) -> dict:
+    base = os.path.basename(hlo_path)[: -len(".hlo.gz")]
+    arch, shape, mesh = base.split("__")
+    n_dev = 512 if mesh == "2x16x16" else 256
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    rep = hlo_cost.analyze(hlo, n_dev)
+    stats = rl.CollectiveStats(
+        raw_bytes={k: int(v) for k, v in rep.coll_raw.items()},
+        transfer_bytes={k: int(v) for k, v in rep.coll_transfer.items()},
+        count={k: int(v) for k, v in rep.coll_count.items()})
+    fn = os.path.join(OUT_DIR, f"{base}.json")
+    old = {}
+    if os.path.exists(fn):
+        with open(fn) as f:
+            old = json.load(f)
+    roof = rl.Roofline(
+        arch=arch, shape=shape, mesh=mesh, n_devices=n_dev,
+        flops_per_device=rep.flops, bytes_per_device=rep.traffic_bytes,
+        collective=stats, model_flops=rl.model_flops_for(cfg, cell),
+        attn_flops=rl.attn_flops_for(cfg, cell),
+        ideal_bytes=rl.ideal_serve_bytes(cfg, cell),
+        n_params=cfg.n_params(), n_params_active=cfg.n_active_params(),
+        memory_per_device=old.get("memory_per_device"))
+    rec = dict(old)
+    rec.update(roof.to_dict())
+    rec.update(status="ok",
+               traffic_bytes_raw=rep.traffic_bytes_raw,
+               top_collectives=rep.top_collectives[:12],
+               top_dots=rep.top_dots[:8],
+               top_traffic=rep.top_traffic[:12])
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    paths = sorted(glob.glob(os.path.join(HLO_DIR, "*.hlo.gz")))
+    for p in paths:
+        rec = reanalyze_one(p)
+        print(f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:8s} "
+              f"t_comp={rec['t_compute_s']*1e3:9.1f}ms "
+              f"t_mem={rec['t_memory_s']*1e3:9.1f}ms "
+              f"t_coll={rec['t_collective_s']*1e3:9.1f}ms "
+              f"{rec['bottleneck']:10s} "
+              f"useful={rec['useful_flops_ratio']:7.1%} "
+              f"roofline={rec['roofline_fraction']:7.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,115 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+"""Disaggregated pod serving — the paper's NPU/GPU split at mesh scale.
+
+The pod's "model" axis is sliced into two profile-heterogeneous submeshes
+(core/scheduler.make_virtual_accelerators): the encoder slice runs the
+static-shape vision brick (≙ the paper's NPU), the decoder slice runs the
+W4A16 language model (≙ the GPU).  The hand-off is the TABM edge:
+
+    encoder submesh --(SubmeshPipe: sharding-preserving device_put,
+                       pure ICI, no host round trip)--> ring slot
+                    --(zero-copy bind)--> decoder prefill
+
+Runs on 8 placeholder devices in-container; the identical code drives a
+256-chip pod.
+
+    PYTHONPATH=src python -m repro.launch.serve_disagg
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core.scheduler import SubmeshPipe, make_virtual_accelerators
+from repro.core.tabm import RingBuffer
+from repro.launch.steps import init_params
+from repro.models import model as M
+
+
+def main():
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    enc_acc, dec_acc = make_virtual_accelerators(mesh, fractions=(0.25, 0.75))
+    print(f"pod mesh {mesh.devices.shape}; encoder submesh "
+          f"{enc_acc.mesh.devices.shape}, decoder submesh "
+          f"{dec_acc.mesh.devices.shape}")
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    # encoder brick weights live on the encoder submesh; decoder weights on
+    # the decoder submesh — module-level placement, the paper's core move
+    enc_params = jax.device_put(
+        params["vis_proj"], NamedSharding(enc_acc.mesh, P()))
+    dec_params = jax.device_put(
+        {k: v for k, v in params.items() if k != "vis_proj"},
+        NamedSharding(dec_acc.mesh, P()))
+
+    @jax.jit
+    def encode(vp, feats):
+        v = jax.nn.gelu(jnp.einsum("bnf,fd->bnd",
+                                   feats.astype(cfg.compute_dtype),
+                                   vp["w1"]))
+        return jnp.einsum("bnd,de->bne", v, vp["w2"])
+
+    def prefill(p, tokens, vision_embeds):
+        x = p["embed"][tokens]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype),
+                             x[:, vision_embeds.shape[1]:]], axis=1)
+        from repro.models.common import default_positions
+        from repro.models import decoder as dec
+        rope_fn = M.make_rope_fn(cfg, default_positions(*tokens.shape),
+                                 None)
+        x, caches, _ = dec.stack_forward(p["layers"], cfg, x, rope_fn,
+                                         causal=True, want_cache=True,
+                                         decode_len=96, remat=False)
+        return M._head(p, cfg, x[:, -1:])[:, 0], \
+            {"layers": caches, "index": jnp.asarray(tokens.shape[1],
+                                                    jnp.int32)}
+
+    prefill = jax.jit(prefill)
+    decode = jax.jit(lambda p, t, c: M.lm_decode_step(p, cfg, t, c),
+                     donate_argnums=(2,))
+
+    # TABM pool lives decoder-side; the pipe moves encoder output over ICI
+    pipe = SubmeshPipe(enc_acc, dec_acc, P())
+    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
+                      dim=cfg.d_model,
+                      sharding=NamedSharding(dec_acc.mesh, P()))
+
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for event in range(3):
+        feats = jnp.asarray(rng.standard_normal(
+            (1, cfg.vision_tokens, cfg.vision_feat_dim)) * 0.02,
+            jnp.float32)
+        # 1. encoder brick on the "NPU" submesh
+        emb = encode(enc_params, jax.device_put(
+            feats, NamedSharding(enc_acc.mesh, P())))
+        # 2. ICI hand-off + TABM slot (zero-copy via donation)
+        emb_dec = pipe.transfer(emb)
+        slot = ring.acquire_write()
+        ring.commit_write(slot, emb_dec[0])
+        got = ring.acquire_read()
+        s, view, n = got
+        # 3. decoder prefill binds the slot; then a few decode steps
+        tokens = jnp.asarray(rng.integers(3, 200, (1, 16)), jnp.int32)
+        logits, cache = prefill(dec_params, tokens, view[None, :n])
+        out = [int(jnp.argmax(logits[0]))]
+        for _ in range(5):
+            lg, cache = decode(dec_params,
+                               jnp.asarray([[out[-1]]], jnp.int32), cache)
+            out.append(int(jnp.argmax(lg[0])))
+        ring.release(s)
+        print(f"event {event}: encoder@{enc_acc.mesh.devices.shape} -> "
+              f"tabm slot {s} -> decoder@{dec_acc.mesh.devices.shape}: "
+              f"{out}")
+    print(f"3 events in {time.time()-t0:.1f}s; tabm stats {ring.stats}")
+    assert ring.stats["writes"] == ring.stats["reads"] == 3
+    print("OK: disaggregated encoder/decoder submesh pipeline")
+
+
+if __name__ == "__main__":
+    main()

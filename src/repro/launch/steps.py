@@ -1,0 +1,134 @@
+"""Step builders: the jit entry points the launchers, dry-run, and serving
+engine all share.
+
+* ``build_train_step(cfg, opt_cfg)``  -> f(params, opt, batch) -> (params, opt, metrics)
+* ``build_prefill_step(cfg, cell)``   -> f(params, batch) -> (logits, cache)
+* ``build_serve_step(cfg)``           -> f(params, tokens, cache) -> (logits, cache)
+
+plus the abstract (ShapeDtypeStruct, zero-allocation) builders the multi-pod
+dry-run lowers against: :func:`abstract_params`, :func:`abstract_opt`,
+:func:`abstract_cache`, :func:`input_specs`.
+
+``decode_*`` / ``long_*`` cells lower ``serve_step`` (one token against a
+full cache), NOT ``train_step``, per the assignment.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models import encdec as ED
+from repro.models import model as M
+from repro.training.optimizer import OptConfig, adamw_update, init_opt
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig):
+    loss_fn = ED.encdec_loss if cfg.encdec else M.lm_loss
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: int):
+    if cfg.encdec:
+        def prefill(params, batch):
+            return ED.encdec_prefill(params, cfg, batch["src_embeds"],
+                                     batch["tgt_tokens"], max_len)
+    else:
+        def prefill(params, batch):
+            return M.lm_prefill(params, cfg, batch["tokens"], max_len,
+                                vision_feats=batch.get("vision_feats"))
+    return prefill
+
+
+def build_serve_step(cfg: ModelConfig):
+    """One-token decode against an existing cache (the serving hot loop)."""
+    if cfg.encdec:
+        def serve(params, tokens, cache):
+            return ED.encdec_decode_step(params, cfg, tokens, cache)
+    else:
+        def serve(params, tokens, cache):
+            return M.lm_decode_step(params, cfg, tokens, cache)
+    return serve
+
+
+# ---------------------------------------------------------------------------
+# concrete initializers (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig):
+    return ED.init_encdec(key, cfg) if cfg.encdec else M.init_lm(key, cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.encdec:
+        return ED.init_encdec_decode_state(cfg, batch, max_len)
+    return M.init_decode_state(cfg, batch, max_len)
+
+
+# ---------------------------------------------------------------------------
+# abstract builders (dry-run: ShapeDtypeStruct only, no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig, quant_policy: Optional[str] = None):
+    """quant_policy: name from repro.core.quantize.PROFILES — the paper's
+    W4A16 serving configuration lowers with packed-int weights."""
+    if quant_policy is None:
+        return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0),
+                                                  cfg))
+    from repro.core.quantize import PROFILES, quantize_tree
+    return jax.eval_shape(
+        lambda: quantize_tree(init_params(jax.random.PRNGKey(0), cfg),
+                              PROFILES[quant_policy]))
+
+
+def abstract_opt(cfg: ModelConfig, opt_cfg: OptConfig, params_shapes=None):
+    params_shapes = params_shapes or abstract_params(cfg)
+    return jax.eval_shape(partial(init_opt, cfg=opt_cfg), params_shapes)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    Modality frontends are STUBS per the assignment: VLM cells get
+    precomputed patch features; audio cells get precomputed frame
+    embeddings."""
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+    bf16 = cfg.compute_dtype
+    sds = jax.ShapeDtypeStruct
+
+    if cfg.encdec:
+        if cell.kind == "train":
+            return {"src_embeds": sds((B, S, cfg.d_model), bf16),
+                    "tgt_tokens": sds((B, S), i32)}
+        if cell.kind == "prefill":
+            return {"src_embeds": sds((B, cfg.enc_seq_len, cfg.d_model), bf16),
+                    "tgt_tokens": sds((B, S), i32)}
+        return {"tokens": sds((B, 1), i32)}       # decode
+
+    if cell.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.vlm:
+            batch["vision_feats"] = sds((B, cfg.vision_tokens,
+                                         cfg.vision_feat_dim), bf16)
+        return batch
+    return {"tokens": sds((B, 1), i32)}           # decode

@@ -1,0 +1,1 @@
+"""Model substrate: layers, attention variants, SSM, MoE, full models."""

@@ -1,0 +1,216 @@
+"""GQA attention: chunked online-softmax (train/prefill) + cached decode.
+
+Three entry points:
+
+* :func:`attn_train`   — full-sequence attention (causal or bidirectional),
+  memory-efficient chunked online softmax (the pure-jnp oracle for the Pallas
+  flash kernel), returns per-position outputs.
+* :func:`attn_prefill` — attn_train + returns (k, v) to seed the cache.
+* :func:`attn_decode`  — one new token against a pre-allocated cache whose
+  *sequence* dimension may be sharded across the `model` mesh axis; the
+  softmax over the sharded axis lowers to an XLA distributed reduction
+  (FlashDecoding-across-chips, see DESIGN.md §2).
+
+GQA layout: q (B,S,H,hd), k/v (B,S,KV,hd) with H = KV*G.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+NEG_INF = -1e30
+
+
+def init_attn(key, cfg, d_model: int, qkv_bias: bool = False):
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.compute_dtype
+    p = {
+        "wq": dense_init(ks[0], (d_model, H, hd), dt, fan_in=d_model),
+        "wk": dense_init(ks[1], (d_model, KV, hd), dt, fan_in=d_model),
+        "wv": dense_init(ks[2], (d_model, KV, hd), dt, fan_in=d_model),
+        "wo": dense_init(ks[3], (H, hd, d_model), dt, fan_in=H * hd),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dt)
+        p["bk"] = jnp.zeros((KV, hd), dt)
+        p["bv"] = jnp.zeros((KV, hd), dt)
+    return p
+
+
+def qkv_proj(p, x):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return q, k, v
+
+
+def out_proj(p, o):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool, q_chunk: int = 512,
+                      kv_chunk: int = 1024) -> jnp.ndarray:
+    """Memory-efficient attention.  q (B,Sq,H,hd), k/v (B,Sk,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+    q_pos = jnp.arange(Sq).reshape(nq, q_chunk)
+    k_pos = jnp.arange(Sk).reshape(nk, kv_chunk)
+
+    def per_q_chunk(qi, q_i):
+        def per_kv_chunk(carry, j):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+            s = jnp.einsum("bqkgh,bckh->bqkgc", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = q_pos[qi][:, None] >= k_pos[j][None, :]
+                s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckh->bqkgh", p.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, KV, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, KV, G), jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, KV, G, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(per_kv_chunk, (m0, l0, a0),
+                                      jnp.arange(nk))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda args: per_q_chunk(*args),
+                      (jnp.arange(nq), jnp.moveaxis(qc, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def dense_attention(q, k, v, *, causal: bool) -> jnp.ndarray:
+    """Single fused dot->softmax->dot region (no chunk loops).  This is the
+    computational shape of the Pallas flash kernel
+    (kernels/flash_attention); on TPU ops.flash_attention replaces it, and
+    the dry-run cost model counts the score matrix VMEM-resident."""
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bikgh,bjkh->bkgij", qg, k,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    prob = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkh->bikgh", prob.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def attn_train(p, cfg, x, rope_fn, *, causal=True, kv_override=None):
+    """Full-sequence attention.  ``rope_fn`` applies positions to q/k.
+
+    kv_override: (k, v) for cross-attention (encoder-decoder)."""
+    from repro.distributed.sharding import constrain_heads
+    q, k, v = qkv_proj(p, x)
+    if kv_override is not None:
+        k, v = kv_override
+        q = rope_fn(q)
+    else:
+        q, k = rope_fn(q), rope_fn(k)
+    # TP-region layout: heads sharded, sequence replicated (see sharding.py)
+    q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
+    if getattr(cfg, "attn_q_chunk", 512) == 0:
+        if jax.default_backend() == "tpu":
+            # the real kernel on real hardware; dense_attention is its
+            # compile-time stand-in for the CPU dry-run
+            from repro.kernels.flash_attention import flash_attention
+            o = flash_attention(q, k, v, causal=causal)
+        else:
+            o = dense_attention(q, k, v, causal=causal)
+    else:
+        o = chunked_attention(q, k, v, causal=causal,
+                              q_chunk=cfg.attn_q_chunk,
+                              kv_chunk=cfg.attn_kv_chunk)
+    o = constrain_heads(o)
+    return out_proj(p, o), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def attn_decode(p, cfg, x, cache_k, cache_v, index, rope_fn
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode.  x (B,1,D); cache_k/v (B,S,KV,hd); index: current
+    length (new token is written at ``index``).  Returns (out, k_new, v_new)
+    where k/v_new are the (B,1,KV,hd) slices for the cache update."""
+    B, S, KV, hd = cache_k.shape
+    H = cfg.n_heads
+    G = H // KV
+    scale = hd ** -0.5
+
+    q, k_new, v_new = qkv_proj(p, x)
+    q, k_new = rope_fn(q), rope_fn(k_new)
+
+    # attend over the cache plus the new token (which is not yet written).
+    qg = q.reshape(B, 1, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg[:, 0], cache_k,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:                      # scalar: all slots same length
+        idx = jnp.broadcast_to(idx, (B,))
+    valid = (jnp.arange(S)[None, :] < idx[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, NEG_INF)
+    s_new = jnp.einsum("bkgh,bkh->bkg", qg[:, 0], k_new[:, 0],
+                       preferred_element_type=jnp.float32) * scale
+    m = jnp.maximum(s.max(axis=-1), s_new)
+    p_cache = jnp.exp(s - m[..., None])
+    p_new = jnp.exp(s_new - m)
+    denom = p_cache.sum(axis=-1) + p_new
+    o = jnp.einsum("bkgs,bskh->bkgh", p_cache.astype(cache_v.dtype), cache_v,
+                   preferred_element_type=jnp.float32)
+    o = o + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
+    o = (o / denom[..., None]).astype(x.dtype).reshape(B, 1, H, hd)
+    return out_proj(p, o), k_new, v_new
+
+
+def update_cache(cache_k, cache_v, k_new, v_new, index):
+    """Write the new token's K/V at ``index`` — ALWAYS as a batched
+    scatter, never dynamic-update-slice.
+
+    Perf iteration (EXPERIMENTS.md §Perf, deepseek decode): a DUS into a
+    sequence-SHARDED cache lowers under GSPMD to a select over the full
+    local shard — a whole-cache read+write per token (1.2 TB/step/device
+    at the 32k cell).  A scatter with explicit (b, idx) indices partitions
+    to the owning shard and updates in place under donation: traffic is
+    the update row, not the buffer."""
+    idx = jnp.asarray(index)
+    if idx.ndim == 0:
+        idx = jnp.broadcast_to(idx, (cache_k.shape[0],))
+    b = jnp.arange(cache_k.shape[0])
+    cache_k = cache_k.at[b, idx].set(k_new[:, 0])
+    cache_v = cache_v.at[b, idx].set(v_new[:, 0])
+    return cache_k, cache_v

@@ -1,0 +1,131 @@
+"""Shared model building blocks: norms, activations, rotary embeddings, init.
+
+All functions are pure; parameters are plain dict pytrees.  Weights are stored
+in the config compute dtype (bf16 by default); norm statistics and softmax run
+in fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    """Truncated-normal init scaled by 1/sqrt(fan_in) (LLaMA-style)."""
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# normalisation
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.ones((d,), cfg.compute_dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.compute_dtype)
+    return p
+
+
+def apply_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "relu": jax.nn.relu,
+        "squared_relu": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE / partial RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x, positions, theta: float, rope_frac: float = 1.0):
+    """x: (B, S, H, hd); positions: (B, S) int32.  Partial RoPE rotates only
+    the first ``rope_frac`` of head_dim (StableLM-style)."""
+    hd = x.shape[-1]
+    rot = int(hd * rope_frac)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    freqs = _rope_freqs(rot, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x_rot = _rotate(x_rot, cos, sin)
+    return jnp.concatenate([x_rot, x_pass], axis=-1) if x_pass.shape[-1] else x_rot
+
+
+# M-RoPE (Qwen2-VL): head_dim split into (temporal, height, width) sections,
+# each rotated with its own position stream.
+MROPE_SECTIONS = (0.25, 0.375, 0.375)
+
+
+def apply_mrope(x, positions3, theta: float):
+    """x: (B, S, H, hd); positions3: (3, B, S) int32 (t, h, w streams)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    sec = [int(half * f) for f in MROPE_SECTIONS]
+    sec[-1] = half - sec[0] - sec[1]
+    freqs = _rope_freqs(hd, theta)                        # (half,)
+    # Build per-frequency positions by interleaving the three streams over
+    # frequency sections (Qwen2-VL's "multimodal rotary").
+    parts = []
+    off = 0
+    for i, s in enumerate(sec):
+        pos = positions3[i].astype(jnp.float32)           # (B,S)
+        parts.append(pos[..., None] * freqs[off:off + s])
+        off += s
+    ang = jnp.concatenate(parts, axis=-1)                 # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    return _rotate(x, cos, sin)
+
+
+def default_positions(batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    return jnp.broadcast_to(pos, (batch, seq))
+
+
+def default_mrope_positions(batch: int, seq: int, offset=0):
+    p = default_positions(batch, seq, offset)
+    return jnp.stack([p, p, p], axis=0)  # text-only: all three streams equal

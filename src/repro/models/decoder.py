@@ -1,0 +1,255 @@
+"""Scan-based decoder stack supporting dense / MoE / SSM / hybrid layouts.
+
+The stack is a ``jax.lax.scan`` over *groups* of sublayers.  Uniform archs use
+a group of one sublayer; Jamba-style hybrids use ``cfg.hybrid_group`` (8:
+one attention layer at ``cfg.attn_every``, Mamba elsewhere, MoE FFN on odd
+positions).  Scanning keeps the HLO O(1) in depth — a 95-layer model compiles
+as fast as a 2-layer one, which is what makes the 80-cell multi-pod dry-run
+tractable (DESIGN.md §3).
+
+Each sublayer: ``x += mixer(norm(x))`` then ``x += ffn(norm(x))`` (pre-norm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import linear_attention as lin
+from repro.models import mamba2
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models.common import apply_norm, init_norm
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+
+def group_size(cfg) -> int:
+    return cfg.hybrid_group or 1
+
+
+def n_groups(cfg) -> int:
+    g = group_size(cfg)
+    assert cfg.n_layers % g == 0, (cfg.n_layers, g)
+    return cfg.n_layers // g
+
+
+def sublayer_spec(cfg, pos: int) -> Tuple[str, str]:
+    """(mixer_kind, ffn_kind) for position ``pos`` within a group."""
+    if cfg.family == "ssm":
+        return "mamba", ("none" if cfg.d_ff == 0 else "mlp")
+    if cfg.hybrid_group:
+        mixer = "attn" if pos == cfg.attn_every else "mamba"
+        ffn = "moe" if (cfg.moe and pos % cfg.moe.every == cfg.moe.every - 1) \
+            else "mlp"
+        return mixer, ffn
+    ffn = "moe" if cfg.moe is not None else "mlp"
+    return "attn", ffn
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_group(key, cfg, qkv_bias: bool = False):
+    subs = []
+    for pos in range(group_size(cfg)):
+        key, k1, k2 = jax.random.split(key, 3)
+        mixer_kind, ffn_kind = sublayer_spec(cfg, pos)
+        sub: dict[str, Any] = {"norm1": init_norm(cfg, cfg.d_model)}
+        if mixer_kind == "attn":
+            sub["mixer"] = attn.init_attn(k1, cfg, cfg.d_model, qkv_bias)
+        else:
+            sub["mixer"] = mamba2.init_mamba(k1, cfg)
+        if ffn_kind != "none":
+            sub["norm2"] = init_norm(cfg, cfg.d_model)
+            sub["ffn"] = (moe_mod.init_moe(k2, cfg, cfg.d_model)
+                          if ffn_kind == "moe"
+                          else mlp_mod.init_mlp(k2, cfg, cfg.d_model, cfg.d_ff))
+        subs.append(sub)
+    return tuple(subs)
+
+
+def init_stack(key, cfg, qkv_bias: bool = False):
+    """Stacked group params with leading dim n_groups (for lax.scan)."""
+    keys = jax.random.split(key, n_groups(cfg))
+    return jax.vmap(lambda k: init_group(k, cfg, qkv_bias))(keys)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _mixer_full(cfg, sub, pos, x, rope_fn, causal, want_cache, decode_len):
+    mixer_kind, _ = sublayer_spec(cfg, pos)
+    h = apply_norm(sub["norm1"], x)
+    if mixer_kind == "mamba":
+        y, (conv_tail, hstate) = mamba2.mamba_forward(sub["mixer"], cfg, h)
+        cache = (conv_tail, hstate) if want_cache else None
+        return x + y, cache
+    if cfg_attn_impl(cfg) == "linear":
+        q, k, v = attn.qkv_proj(sub["mixer"], h)
+        q, k = rope_fn(q), rope_fn(k)
+        G = cfg.n_heads // cfg.n_kv_heads
+        k, v = jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2)
+        o, state, z = lin.linear_attn_prefill(q, k, v)
+        y = attn.out_proj(sub["mixer"], o)
+        cache = (state, z) if want_cache else None
+        return x + y, cache
+    from repro.distributed.sharding import constrain_residual
+    y, (k, v) = attn.attn_train(sub["mixer"], cfg, h, rope_fn, causal=causal)
+    cache = None
+    if want_cache:
+        B, S, KV, hd = k.shape
+        pad = decode_len - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = (k, v)
+    return x + constrain_residual(y), cache
+
+
+def _ffn(cfg, sub, pos, x):
+    from repro.distributed.sharding import constrain_residual
+    _, ffn_kind = sublayer_spec(cfg, pos)
+    if ffn_kind == "none":
+        return x, 0.0
+    h = apply_norm(sub["norm2"], x)
+    if ffn_kind == "moe":
+        y, aux = moe_mod.apply_moe(sub["ffn"], cfg, h)
+        return x + constrain_residual(y), aux
+    # constraining the partial-sum product BEFORE the add makes GSPMD emit
+    # a reduce-scatter instead of all-reduce(+slice) — §Perf iteration
+    return x + constrain_residual(mlp_mod.apply_mlp(sub["ffn"], cfg, h)), 0.0
+
+
+def cfg_attn_impl(cfg) -> str:
+    return cfg.attn_impl
+
+
+def group_forward(cfg, gp, x, rope_fn, *, causal=True, want_cache=False,
+                  decode_len=0):
+    caches, aux = [], 0.0
+    for pos in range(group_size(cfg)):
+        sub = gp[pos]
+        x, cache = _mixer_full(cfg, sub, pos, x, rope_fn, causal,
+                               want_cache, decode_len)
+        x, a = _ffn(cfg, sub, pos, x)
+        caches.append(cache)
+        aux = aux + a
+    return x, tuple(caches), aux
+
+
+def stack_forward(params_layers, cfg, x, rope_fn, *, causal=True,
+                  want_cache=False, decode_len=0, remat=None):
+    """Run the whole stack.  Returns (x, stacked caches, aux)."""
+    from repro.distributed.sharding import constrain_residual
+    remat = cfg.remat if remat is None else remat
+
+    from repro.distributed.sharding import rs_gradients
+
+    def body(x, gp):
+        # backward: cotangents constrained to param sharding -> per-layer
+        # gradient reduce-scatter instead of all-reduce (§Perf)
+        gp = rs_gradients(gp)
+        x, caches, aux = group_forward(cfg, _maybe_dequant(gp), x, rope_fn,
+                                       causal=causal,
+                                       want_cache=want_cache,
+                                       decode_len=decode_len)
+        # sequence-parallel scan carry: bounds saved-activation memory
+        return constrain_residual(x), (caches, aux)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (caches, aux) = jax.lax.scan(body, x, params_layers)
+    return x, caches, jnp.sum(aux)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def _mixer_decode(cfg, sub, pos, x, cache, index, rope_fn):
+    mixer_kind, _ = sublayer_spec(cfg, pos)
+    h = apply_norm(sub["norm1"], x)
+    if mixer_kind == "mamba":
+        conv_state, hstate = cache
+        y, new_cache = mamba2.mamba_decode(sub["mixer"], cfg, h, conv_state,
+                                           hstate)
+        return x + y, new_cache
+    if cfg_attn_impl(cfg) == "linear":
+        state, z = cache
+        q, k, v = attn.qkv_proj(sub["mixer"], h)
+        q, k = rope_fn(q), rope_fn(k)
+        G = cfg.n_heads // cfg.n_kv_heads
+        k, v = jnp.repeat(k, G, axis=2), jnp.repeat(v, G, axis=2)
+        o, state, z = lin.linear_attn_decode(q, k, v, state, z)
+        return x + attn.out_proj(sub["mixer"], o), (state, z)
+    cache_k, cache_v = cache
+    y, k_new, v_new = attn.attn_decode(sub["mixer"], cfg, h, cache_k, cache_v,
+                                       index, rope_fn)
+    cache_k, cache_v = attn.update_cache(cache_k, cache_v, k_new, v_new, index)
+    return x + y, (cache_k, cache_v)
+
+
+def group_decode(cfg, gp, x, caches, index, rope_fn):
+    new_caches = []
+    for pos in range(group_size(cfg)):
+        sub = gp[pos]
+        x, nc = _mixer_decode(cfg, sub, pos, x, caches[pos], index, rope_fn)
+        x, _ = _ffn(cfg, sub, pos, x)
+        new_caches.append(nc)
+    return x, tuple(new_caches)
+
+
+def _maybe_dequant(gp):
+    """W4A16 serving: dequantize one group's packed weights at use.  Inside
+    the scan body XLA fuses the unpack into each consuming matmul — the
+    paper's in-register dequant; the explicit MXU kernel is
+    kernels/dequant_gemm (TPU dispatch)."""
+    from repro.core.quantize import QTensor, dequantize_tree
+    return dequantize_tree(gp)
+
+
+def stack_decode(params_layers, cfg, x, caches, index, rope_fn):
+    def body(x, xs):
+        gp, cache = xs
+        x, new_cache = group_decode(cfg, _maybe_dequant(gp), x, cache,
+                                    index, rope_fn)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params_layers, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache allocation (decode without a prior prefill — dry-run entry)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int):
+    """Zero caches, stacked (n_groups, ...)."""
+    def one_group():
+        caches = []
+        for pos in range(group_size(cfg)):
+            mixer_kind, _ = sublayer_spec(cfg, pos)
+            if mixer_kind == "mamba":
+                caches.append(mamba2.init_mamba_cache(cfg, batch))
+            elif cfg_attn_impl(cfg) == "linear":
+                H, hd = cfg.n_heads, cfg.hd
+                caches.append((jnp.zeros((batch, H, hd, hd), jnp.float32),
+                               jnp.zeros((batch, H, hd), jnp.float32)))
+            else:
+                KV, hd = cfg.n_kv_heads, cfg.hd
+                caches.append(
+                    (jnp.zeros((batch, max_len, KV, hd), cfg.compute_dtype),
+                     jnp.zeros((batch, max_len, KV, hd), cfg.compute_dtype)))
+        return tuple(caches)
+
+    one = one_group()
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n_groups(cfg),) + t.shape), one)

@@ -1,0 +1,218 @@
+"""Encoder-decoder model (seamless-m4t family).
+
+The audio frontend is a stub per the assignment: ``input_specs()`` provides
+precomputed frame embeddings (B, T_src, d_model).  Encoder = bidirectional
+attention stack; decoder = causal self-attention + cross-attention + FFN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models.common import (apply_norm, apply_rope, default_positions,
+                                 dense_init, embed_init, init_norm)
+from repro.models.model import _vocab_bias, Z_LOSS
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_enc_layer(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"norm1": init_norm(cfg, cfg.d_model),
+            "attn": attn.init_attn(k1, cfg, cfg.d_model),
+            "norm2": init_norm(cfg, cfg.d_model),
+            "ffn": mlp_mod.init_mlp(k2, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def _init_dec_layer(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg, cfg.d_model),
+            "self_attn": attn.init_attn(k1, cfg, cfg.d_model),
+            "norm_x": init_norm(cfg, cfg.d_model),
+            "cross_attn": attn.init_attn(k2, cfg, cfg.d_model),
+            "norm2": init_norm(cfg, cfg.d_model),
+            "ffn": mlp_mod.init_mlp(k3, cfg, cfg.d_model, cfg.d_ff)}
+
+
+def init_encdec(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_final_norm": init_norm(cfg, cfg.d_model),
+        "embed": embed_init(ks[2], (cfg.padded_vocab, cfg.d_model),
+                            cfg.compute_dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def encode(params, cfg, src_embeds, *, remat=None):
+    """src_embeds (B, T, D) from the audio-frontend stub."""
+    B, T, _ = src_embeds.shape
+    rope_fn = lambda t: apply_rope(t, default_positions(B, T), cfg.rope_theta)
+    remat = cfg.remat if remat is None else remat
+
+    from repro.distributed.sharding import constrain_residual
+
+    def body(x, lp):
+        from repro.models.decoder import _maybe_dequant
+        lp = _maybe_dequant(lp)
+        h = apply_norm(lp["norm1"], x)
+        y, _ = attn.attn_train(lp["attn"], cfg, h, rope_fn, causal=False)
+        x = x + y
+        h = apply_norm(lp["norm2"], x)
+        return constrain_residual(x + mlp_mod.apply_mlp(lp["ffn"], cfg, h)), None
+
+    if remat:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, src_embeds.astype(cfg.compute_dtype),
+                        params["enc_layers"])
+    return apply_norm(params["enc_final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# decoder (teacher-forced / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _dec_layer_full(cfg, lp, x, enc_out, rope_fn, want_cache, decode_len):
+    h = apply_norm(lp["norm1"], x)
+    y, (k, v) = attn.attn_train(lp["self_attn"], cfg, h, rope_fn, causal=True)
+    x = x + y
+    h = apply_norm(lp["norm_x"], x)
+    ck = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wk"])
+    cv = jnp.einsum("btd,dhk->bthk", enc_out, lp["cross_attn"]["wv"])
+    y, _ = attn.attn_train(lp["cross_attn"], cfg, h, lambda t: t,
+                           causal=False, kv_override=(ck, cv))
+    x = x + y
+    h = apply_norm(lp["norm2"], x)
+    x = x + mlp_mod.apply_mlp(lp["ffn"], cfg, h)
+    cache = None
+    if want_cache:
+        pad = decode_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache = (k, v, ck, cv)
+    return x, cache
+
+
+def decode_stack(params, cfg, tgt_tokens, enc_out, *, want_cache=False,
+                 decode_len=0, remat=None):
+    B, S = tgt_tokens.shape
+    rope_fn = lambda t: apply_rope(t, default_positions(B, S), cfg.rope_theta)
+    x = params["embed"][tgt_tokens]
+    remat = cfg.remat if remat is None else remat
+
+    from repro.distributed.sharding import constrain_residual
+
+    def body(x, lp):
+        from repro.models.decoder import _maybe_dequant
+        x, cache = _dec_layer_full(cfg, _maybe_dequant(lp), x, enc_out,
+                                   rope_fn, want_cache, decode_len)
+        return constrain_residual(x), cache
+
+    if remat and not want_cache:
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+    x, caches = jax.lax.scan(body, x, params["dec_layers"])
+    return x, caches
+
+
+def _logits(params, cfg, x):
+    x = apply_norm(params["final_norm"], x)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits.astype(jnp.float32) + _vocab_bias(cfg)[None, None, :]
+
+
+def encdec_loss(params, cfg, batch, *, remat=None, loss_chunk: int = 1024):
+    """batch: src_embeds (B,T,D), tgt_tokens (B,S).  Chunked head (no full
+    (B,S,V) logits) — see :func:`repro.models.model.head_loss_chunked`."""
+    from repro.models.model import head_loss_chunked
+    enc_out = encode(params, cfg, batch["src_embeds"], remat=remat)
+    tokens = batch["tgt_tokens"]
+    B, S = tokens.shape
+    x, _ = decode_stack(params, cfg, tokens, enc_out, remat=remat)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = (jnp.arange(S) < S - 1)[None, :] * jnp.ones((B, 1), jnp.int32)
+    nll_sum, z_sum, n = head_loss_chunked(params, cfg, x, labels, mask,
+                                          chunk=loss_chunk)
+    nll = nll_sum / jnp.maximum(n, 1.0)
+    loss = nll + Z_LOSS * (z_sum / jnp.maximum(n, 1.0))
+    return loss, {"nll": nll}
+
+
+def encdec_prefill(params, cfg, src_embeds, tgt_tokens, max_len: int):
+    enc_out = encode(params, cfg, src_embeds, remat=False)
+    x, caches = decode_stack(params, cfg, tgt_tokens, enc_out,
+                             want_cache=True, decode_len=max_len, remat=False)
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits[:, 0], {"layers": caches,
+                          "index": jnp.asarray(tgt_tokens.shape[1], jnp.int32)}
+
+
+def _cross_decode(lp, cfg, x, ck, cv):
+    """Dense cross-attention for one query token.  x (B,1,D)."""
+    B, T, KV, hd = ck.shape
+    H = cfg.n_heads
+    G = H // KV
+    q = jnp.einsum("bsd,dhk->bshk", x, lp["wq"])
+    qg = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, ck,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(cv.dtype), cv)
+    return attn.out_proj(lp, o.reshape(B, 1, H, hd))
+
+
+def encdec_decode_step(params, cfg, tokens, cache):
+    """tokens (B,1) -> (logits (B,V), cache)."""
+    B = tokens.shape[0]
+    index = cache["index"]
+    positions = jnp.broadcast_to(index[None, None], (B, 1)).astype(jnp.int32)
+    rope_fn = lambda t: apply_rope(t, positions, cfg.rope_theta)
+    x = params["embed"][tokens]
+
+    def body(x, xs):
+        lp, (k, v, ck, cv) = xs
+        from repro.models.decoder import _maybe_dequant
+        lp = _maybe_dequant(lp)
+        h = apply_norm(lp["norm1"], x)
+        y, k_new, v_new = attn.attn_decode(lp["self_attn"], cfg, h, k, v,
+                                           index, rope_fn)
+        k, v = attn.update_cache(k, v, k_new, v_new, index)
+        x = x + y
+        h = apply_norm(lp["norm_x"], x)
+        x = x + _cross_decode(lp["cross_attn"], cfg, h, ck, cv)
+        h = apply_norm(lp["norm2"], x)
+        x = x + mlp_mod.apply_mlp(lp["ffn"], cfg, h)
+        return x, (k, v, ck, cv)
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_layers"],
+                                           cache["layers"]))
+    logits = _logits(params, cfg, x)
+    return logits[:, 0], {"layers": new_caches, "index": index + 1}
+
+
+def init_encdec_decode_state(cfg, batch: int, max_len: int):
+    KV, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    dt = cfg.compute_dtype
+    caches = (jnp.zeros((L, batch, max_len, KV, hd), dt),
+              jnp.zeros((L, batch, max_len, KV, hd), dt),
+              jnp.zeros((L, batch, cfg.enc_seq_len, KV, hd), dt),
+              jnp.zeros((L, batch, cfg.enc_seq_len, KV, hd), dt))
+    return {"layers": caches, "index": jnp.asarray(max_len - 1, jnp.int32)}

@@ -1,0 +1,91 @@
+"""Streaming linear attention — the paper's sub-quadratic attention (§3.2 GPU).
+
+NANOMIND replaces quadratic attention with a kernelized, streaming variant that
+"maintains running summaries of past keys and values, updating them as new
+tokens arrive and computing outputs via a single matrix-vector pass".  That is
+exactly causal linear attention (Katharopoulos et al.) with feature map
+phi(x) = elu(x)+1:
+
+    S_t = S_{t-1} + phi(k_t) v_t^T          (d x d running summary)
+    z_t = z_{t-1} + phi(k_t)                (d   running normalizer)
+    o_t = (phi(q_t)^T S_t) / (phi(q_t)^T z_t)
+
+Prefill uses the chunked parallel form (intra-chunk quadratic, inter-chunk
+state passing) so the MXU sees dense matmuls; decode is the paper's single
+matvec against the running state.  The Pallas kernel lives in
+``repro.kernels.linear_attention``; this module is its jnp implementation and
+the `attn_impl="linear"` drop-in used for the beyond-paper long_500k runs.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def feature_map(x):
+    return jax.nn.elu(x.astype(jnp.float32)) + 1.0
+
+
+def linear_attn_prefill(q, k, v, *, chunk: int = 256
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Causal linear attention over a full sequence (chunked state-passing).
+
+    q,k (B,S,H,hd), v (B,S,H,hd) — GQA callers expand kv heads first.
+    Returns (out, state (B,H,hd,hd), normalizer (B,H,hd))."""
+    B, S, H, hd = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    qf = feature_map(q).reshape(B, n, chunk, H, hd)
+    kf = feature_map(k).reshape(B, n, chunk, H, hd)
+    vc = v.reshape(B, n, chunk, H, hd).astype(jnp.float32)
+
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+
+    def step(carry, xs):
+        state, z = carry                       # (B,H,hd,hd), (B,H,hd)
+        qi, ki, vi = xs                        # (B,chunk,H,hd)
+        # inter-chunk: contribution of the running state
+        o_inter = jnp.einsum("bchk,bhkd->bchd", qi, state)
+        z_inter = jnp.einsum("bchk,bhk->bch", qi, z)
+        # intra-chunk: causal quadratic within the chunk
+        s = jnp.einsum("bchk,bdhk->bhcd", qi, ki) * mask[None, None]
+        o_intra = jnp.einsum("bhcd,bdhk->bchk", s, vi)
+        z_intra = jnp.einsum("bhcd->bhc", s).transpose(0, 2, 1)  # (B,chunk,H)
+        o = o_inter + o_intra
+        zt = z_inter + z_intra
+        # state update
+        state = state + jnp.einsum("bchk,bchd->bhkd", ki, vi)
+        z = z + kf_sum(ki)
+        return (state, z), (o, zt)
+
+    def kf_sum(ki):
+        return jnp.einsum("bchk->bhk", ki)
+
+    state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    z0 = jnp.zeros((B, H, hd), jnp.float32)
+    (state, z), (o, zt) = jax.lax.scan(
+        step, (state0, z0),
+        (jnp.moveaxis(qf, 1, 0), jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vc, 1, 0)))
+    o = jnp.moveaxis(o, 0, 1).reshape(B, S, H, hd)
+    zt = jnp.moveaxis(zt, 0, 1).reshape(B, S, H)
+    out = o / jnp.maximum(zt, 1e-6)[..., None]
+    return out.astype(q.dtype), state, z
+
+
+def linear_attn_decode(q, k_new, v_new, state, z
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode: single matvec against the running summary.
+
+    q,k_new,v_new (B,1,H,hd); state (B,H,hd,hd); z (B,H,hd)."""
+    qf = feature_map(q[:, 0])                  # (B,H,hd)
+    kf = feature_map(k_new[:, 0])
+    vf = v_new[:, 0].astype(jnp.float32)
+    state = state + jnp.einsum("bhk,bhd->bhkd", kf, vf)
+    z = z + kf
+    o = jnp.einsum("bhk,bhkd->bhd", qf, state)
+    denom = jnp.maximum(jnp.einsum("bhk,bhk->bh", qf, z), 1e-6)
+    out = (o / denom[..., None]).astype(q.dtype)[:, None]
+    return out, state, z

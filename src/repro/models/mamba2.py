@@ -1,0 +1,235 @@
+"""Mamba-2 mixer (SSD — state-space duality, arXiv:2405.21060).
+
+Scalar-per-head decay A, per-token dt, grouped B/C projections, causal
+depthwise conv on (x,B,C), gated RMSNorm, out projection.
+
+The SSD sequence transform here is the *chunked dual form*: intra-chunk
+quadratic attention-like matmuls (MXU-friendly) + inter-chunk state-passing
+scan.  ``ssd_reference`` is the slow sequential recurrence used as the oracle
+in tests; the Pallas kernel (``repro.kernels.ssd``) mirrors the chunked form.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core: h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t ;  y_t = C_t . h_t + D x_t
+#   a_t = exp(dt_t * A)  (A < 0 scalar per head)
+# shapes: x (B,S,H,P), dt (B,S,H), B/C (B,S,G,N) with H % G == 0
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, Bm, Cm, h0=None):
+    """Sequential recurrence oracle.  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    a = jnp.exp(dt * A[None, None, :])                       # (B,S,H)
+
+    def step(h, t):
+        xt, dtt, at = x[:, t], dt[:, t], a[:, t]
+        h = at[..., None, None] * h + (dtt[..., None, None]
+                                       * xt[..., :, None] * Bh[:, t, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch[:, t])
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    h, ys = jax.lax.scan(step, h0.astype(jnp.float32),
+                         jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1)
+    return y.astype(x.dtype), h
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, h0=None, chunk: int = 256
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked dual-form SSD (matches ``ssd_reference`` to fp32 tolerance)."""
+    b, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    xf = x.astype(jnp.float32).reshape(b, nc, chunk, H, P)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, chunk, H)
+    Bf = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32).reshape(b, nc, chunk, H, N)
+    Cf = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32).reshape(b, nc, chunk, H, N)
+    la = dtf * A[None, None, None, :]                        # log a, (b,nc,c,H)
+    cum = jnp.cumsum(la, axis=2)                             # within-chunk cumsum
+
+    # intra-chunk: Y[i] = sum_{j<=i} exp(cum_i - cum_j) * (C_i.B_j) dt_j x_j
+    # NOTE: mask INSIDE the exp — for j > i the argument is large-positive
+    # (cum decreases), and where(mask, exp(x), 0) is inf*0 = NaN in the VJP.
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (b,nc,i,j,H)
+    dec = jnp.exp(jnp.where(mask[None, None, :, :, None], dec, -1e30))
+    cb = jnp.einsum("bkihn,bkjhn->bkijh", Cf, Bf)
+    w = cb * dec * dtf[:, :, None, :, :]
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", w, xf)
+
+    # chunk states: s_k = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,c,H)
+    sbx = jnp.einsum("bkjhn,bkjhp->bkhnp",
+                     Bf * (decay_to_end * dtf)[..., None], xf)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (b,nc,H)
+
+    def step(h, xs):
+        s_k, d_k = xs                                        # (b,H,N,P), (b,H)
+        h_new = d_k[..., None, None] * h + s_k
+        return h_new, h                                       # emit state *before* this chunk
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, N, P), jnp.float32)
+    else:
+        h0 = jnp.swapaxes(h0, -1, -2).astype(jnp.float32)    # (b,H,P,N)->(b,H,N,P)
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(sbx, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (b,nc,H,N,P)
+
+    # inter-chunk contribution: C_i . (exp(cum_i) * h_prev)
+    y_inter = jnp.einsum("bkihn,bkhnp->bkihp", Cf * jnp.exp(cum)[..., None], h_prevs)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P).astype(x.dtype)
+    return y, jnp.swapaxes(h_fin, -1, -2)                    # (b,H,P,N)
+
+
+def ssd_decode_step(h, x, dt, A, Bm, Cm):
+    """One-token recurrence.  h (B,H,P,N); x (B,H,P); dt (B,H); B/C (B,G,N)."""
+    H = x.shape[1]
+    rep = H // Bm.shape[1]
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(dt.astype(jnp.float32) * A[None, :])
+    h = a[..., None, None] * h + (dt.astype(jnp.float32)[..., None, None]
+                                  * x.astype(jnp.float32)[..., :, None]
+                                  * Bh[:, :, None, :])
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    return y.astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# full Mamba-2 mixer layer
+# ---------------------------------------------------------------------------
+
+def _dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    d_conv_ch = d_inner + 2 * s.n_groups * s.d_state
+    return d_inner, H, d_conv_ch
+
+
+def init_mamba(key, cfg):
+    s = cfg.ssm
+    d_inner, H, d_conv_ch = _dims(cfg)
+    dt_proj = 2 * d_inner + 2 * s.n_groups * s.d_state + H  # z,x,B,C,dt widths
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, dt_proj), dt, fan_in=cfg.d_model),
+        "conv_w": dense_init(ks[1], (s.d_conv, d_conv_ch), dt, fan_in=s.d_conv),
+        "conv_b": jnp.zeros((d_conv_ch,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dt),
+        "out_proj": dense_init(ks[3], (d_inner, cfg.d_model), dt, fan_in=d_inner),
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    gs = s.n_groups * s.d_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * gs], axis=-1)
+    return z, xbc, dt                                         # dt: (..., H)
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d.  xbc (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (y.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_forward(p, cfg, x, h0=None, use_chunked=True):
+    """Full-sequence Mamba-2.  x (B,S,D) -> (y (B,S,D), (conv_tail, h_final))."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    B_, S, _ = x.shape
+    gs = s.n_groups * s.d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    conv_tail = xbc[:, -(s.d_conv - 1):, :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + gs], axis=-1)
+    xs = xs.reshape(B_, S, H, s.head_dim)
+    Bm = Bm.reshape(B_, S, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, S, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    fn = ssd_chunked if use_chunked else ssd_reference
+    y, h = fn(xs, dtv, A, Bm, Cm, h0=h0,
+              **({"chunk": s.chunk_size} if use_chunked else {}))
+    y = y + xs * p["D"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (conv_tail, h)
+
+
+def mamba_decode(p, cfg, x, conv_state, h):
+    """One-token decode.  x (B,1,D); conv_state (B,d_conv-1,C); h (B,H,P,N)."""
+    s = cfg.ssm
+    d_inner, H, _ = _dims(cfg)
+    B_ = x.shape[0]
+    gs = s.n_groups * s.d_state
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    window = jnp.concatenate([conv_state, xbc], axis=1)       # (B, d_conv, C)
+    conv_state_new = window[:, 1:, :]
+    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + gs], axis=-1)
+    xs = xs.reshape(B_, H, s.head_dim)
+    Bm = Bm.reshape(B_, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B_, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, h = ssd_decode_step(h, xs, dtv, A, Bm, Cm)
+    y = y + xs * p["D"][None, :, None].astype(y.dtype)
+    y = y.reshape(B_, 1, d_inner)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (conv_state_new, h)
+
+
+def init_mamba_cache(cfg, batch: int):
+    s = cfg.ssm
+    d_inner, H, d_conv_ch = _dims(cfg)
+    return (jnp.zeros((batch, s.d_conv - 1, d_conv_ch), cfg.compute_dtype),
+            jnp.zeros((batch, H, s.head_dim, s.d_state), jnp.float32))

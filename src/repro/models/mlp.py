@@ -1,0 +1,29 @@
+"""Dense FFN variants: SwiGLU / GeGLU (gated) and squared-ReLU / GELU (plain)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import activation, dense_init
+
+GATED = {"swiglu": "silu", "geglu": "gelu"}
+
+
+def init_mlp(key, cfg, d_model: int, d_ff: int):
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], (d_model, d_ff), dt, fan_in=d_model),
+         "w_down": dense_init(ks[1], (d_ff, d_model), dt, fan_in=d_ff)}
+    if cfg.act in GATED:
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dt, fan_in=d_model)
+    return p
+
+
+def apply_mlp(p, cfg, x):
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    if "w_gate" in p:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = activation(GATED[cfg.act])(gate) * up
+    else:
+        h = activation(cfg.act)(up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"])

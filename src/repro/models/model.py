@@ -1,0 +1,266 @@
+"""Top-level language-model API: init / forward / loss / prefill / decode.
+
+Handles the decoder-only families (dense, moe, ssm, hybrid, vlm).  The
+encoder-decoder (audio) family lives in :mod:`repro.models.encdec`; both share
+the same sublayer machinery from :mod:`repro.models.decoder`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decoder as dec
+from repro.models.common import (apply_mrope, apply_norm, apply_rope,
+                                 default_mrope_positions, default_positions,
+                                 dense_init, embed_init, init_norm)
+
+Z_LOSS = 1e-4
+AUX_LOSS = 1e-2
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 5)
+    dt = cfg.compute_dtype
+    qkv_bias = cfg.family == "vlm"  # Qwen2 uses qkv biases
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], (cfg.padded_vocab, cfg.d_model), dt),
+        "layers": dec.init_stack(ks[1], cfg, qkv_bias),
+        "final_norm": init_norm(cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], (cfg.d_model, cfg.padded_vocab),
+                                       dt, fan_in=cfg.d_model)
+    if cfg.vlm:
+        params["vis_proj"] = {
+            "w1": dense_init(ks[3], (cfg.vision_feat_dim, cfg.d_model), dt),
+            "w2": dense_init(ks[4], (cfg.d_model, cfg.d_model), dt),
+        }
+    return params
+
+
+def make_rope_fn(cfg, positions, mrope_positions=None):
+    if cfg.rope == "none":
+        return lambda t: t
+    if cfg.rope == "mrope":
+        return lambda t: apply_mrope(t, mrope_positions, cfg.rope_theta)
+    return lambda t: apply_rope(t, positions, cfg.rope_theta, cfg.rope_frac)
+
+
+def _vocab_bias(cfg):
+    """-inf bias on padded vocab rows so they never receive probability."""
+    v = jnp.arange(cfg.padded_vocab)
+    return jnp.where(v < cfg.vocab_size, 0.0, -1e30).astype(jnp.float32)
+
+
+def _embed(params, cfg, tokens, vision_feats=None):
+    x = params["embed"][tokens]
+    if cfg.vlm and vision_feats is not None:
+        vp = params["vis_proj"]
+        v = jax.nn.gelu(jnp.einsum("bnf,fd->bnd",
+                                   vision_feats.astype(cfg.compute_dtype),
+                                   vp["w1"]))
+        v = jnp.einsum("bnd,de->bne", v, vp["w2"])
+        x = jnp.concatenate([v, x[:, v.shape[1]:]], axis=1)
+    return x
+
+
+def _head(params, cfg, x):
+    from repro.core.quantize import QTensor, dequantize
+    x = apply_norm(params["final_norm"], x)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    if isinstance(w, QTensor):
+        w = dequantize(w)                      # fuses into the matmul
+    w = w.T if cfg.tie_embeddings else w
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return logits.astype(jnp.float32) + _vocab_bias(cfg)[None, None, :]
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def lm_forward(params, cfg: ModelConfig, tokens, *, vision_feats=None,
+               mrope_positions=None, remat=None):
+    B, S = tokens.shape
+    positions = default_positions(B, S)
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = default_mrope_positions(B, S)
+    rope_fn = make_rope_fn(cfg, positions, mrope_positions)
+    x = _embed(params, cfg, tokens, vision_feats)
+    x, _, aux = dec.stack_forward(params["layers"], cfg, x, rope_fn,
+                                  causal=True, remat=remat)
+    return _head(params, cfg, x), aux
+
+
+def head_loss_chunked(params, cfg: ModelConfig, x, labels, mask,
+                      chunk: int = 1024):
+    """Cross-entropy over the vocab WITHOUT materializing (B, S, V) logits.
+
+    Scans the head matmul + softmax-xent over sequence chunks; each chunk's
+    logits are transient (recomputed in the backward via checkpoint), so peak
+    memory is (B, chunk, V)/shards instead of (B, S, V)/shards.  x (B,S,D);
+    labels (B,S) int32; mask (B,S) {0,1}.  Returns (nll_sum, z_sum, n)."""
+    from repro.distributed.sharding import constrain_batch_only
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    bias = _vocab_bias(cfg)
+    # gather the sequence dim before the chunk scan: scanning a seq-sharded
+    # dim would dynamic-slice across shards every iteration
+    x = constrain_batch_only(x)
+
+    xc = x.reshape(B, n, chunk, D)
+    lc = labels.reshape(B, n, chunk)
+    mc = mask.reshape(B, n, chunk)
+
+    @jax.checkpoint
+    def body(carry, xs):
+        nll_sum, z_sum = carry
+        xi, li, mi = xs                                # (B,chunk,D), (B,chunk)
+        xi = apply_norm(params["final_norm"], xi)
+        logits = jnp.einsum("bsd,dv->bsv", xi, w).astype(jnp.float32)
+        logits = logits + bias[None, None, :]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        true_logit = jnp.take_along_axis(logits, li[..., None],
+                                         axis=-1)[..., 0]
+        m = mi.astype(jnp.float32)
+        nll_sum = nll_sum + jnp.sum((lse - true_logit) * m)
+        z_sum = z_sum + jnp.sum(jnp.square(lse) * m)
+        return (nll_sum, z_sum), None
+
+    (nll_sum, z_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0),
+         jnp.moveaxis(mc, 1, 0)))
+    return nll_sum, z_sum, jnp.sum(mask.astype(jnp.float32))
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, remat=None,
+            loss_chunk: int = 1024):
+    """Next-token cross-entropy (+ z-loss + MoE aux).  batch["tokens"] (B,S).
+
+    Uses the chunked head (no full-seq logits) — required at the 4k x 256
+    train cells where (B, S, V) fp32 would not fit."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = default_positions(B, S)
+    mrope_positions = batch.get("mrope_positions")
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = default_mrope_positions(B, S)
+    rope_fn = make_rope_fn(cfg, positions, mrope_positions)
+    x = _embed(params, cfg, tokens, batch.get("vision_feats"))
+    x, _, aux = dec.stack_forward(params["layers"], cfg, x, rope_fn,
+                                  causal=True, remat=remat)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = (jnp.arange(S) < S - 1)[None, :] * jnp.ones((B, 1), jnp.int32)
+    if "loss_mask" in batch:
+        mask = mask * batch["loss_mask"]
+    nll_sum, z_sum, n = head_loss_chunked(params, cfg, x, labels, mask,
+                                          chunk=loss_chunk)
+    nll = nll_sum / jnp.maximum(n, 1.0)
+    z = z_sum / jnp.maximum(n, 1.0)
+    loss = nll + Z_LOSS * z + AUX_LOSS * aux
+    return loss, {"nll": nll, "z_loss": z, "aux_loss": aux}
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+
+def lm_prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+               vision_feats=None, mrope_positions=None):
+    """Run the prompt, build caches padded to ``max_len``.
+
+    Returns (last_token_logits (B, V), cache)."""
+    B, S = tokens.shape
+    positions = default_positions(B, S)
+    if cfg.rope == "mrope" and mrope_positions is None:
+        mrope_positions = default_mrope_positions(B, S)
+    rope_fn = make_rope_fn(cfg, positions, mrope_positions)
+    x = _embed(params, cfg, tokens, vision_feats)
+    x, caches, _ = dec.stack_forward(params["layers"], cfg, x, rope_fn,
+                                     causal=True, want_cache=True,
+                                     decode_len=max_len, remat=False)
+    logits = _head(params, cfg, x[:, -1:])
+    return logits[:, 0], {"layers": caches,
+                          "index": jnp.asarray(S, jnp.int32)}
+
+
+def lm_decode_step(params, cfg: ModelConfig, tokens, cache):
+    """One decode step.  tokens (B,1) -> (logits (B,V), new cache).
+
+    cache["index"] may be a scalar (lockstep decode, dry-run cells) or a
+    (B,) vector of per-slot lengths (continuous batching)."""
+    B = tokens.shape[0]
+    index = jnp.asarray(cache["index"])
+    if index.ndim == 0:
+        positions = jnp.broadcast_to(index[None, None],
+                                     (B, 1)).astype(jnp.int32)
+    else:
+        positions = index[:, None].astype(jnp.int32)
+    mrope = jnp.stack([positions] * 3) if cfg.rope == "mrope" else None
+    rope_fn = make_rope_fn(cfg, positions, mrope)
+    x = _embed(params, cfg, tokens)
+    x, new_caches = dec.stack_decode(params["layers"], cfg, x,
+                                     cache["layers"], index, rope_fn)
+    logits = _head(params, cfg, x)
+    return logits[:, 0], {"layers": new_caches, "index": index + 1}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      start_index: Optional[int] = None):
+    """Cache for a decode-only entry (dry-run decode cells: a full cache of
+    ``max_len`` tokens already exists; the step appends one)."""
+    idx = max_len - 1 if start_index is None else start_index
+    return {"layers": dec.init_cache(cfg, batch, max_len),
+            "index": jnp.asarray(idx, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter count (MODEL_FLOPS = 6 N D)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig, active_only: bool = False) -> int:
+    D, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    total = 0
+    for pos in range(dec.group_size(cfg)):
+        mixer, ffn = dec.sublayer_spec(cfg, pos)
+        if mixer == "attn":
+            total += D * hd * (H + 2 * KV) + H * hd * D
+        else:
+            s = cfg.ssm
+            d_inner = s.expand * D
+            ch = d_inner + 2 * s.n_groups * s.d_state
+            Hm = d_inner // s.head_dim
+            total += (D * (2 * d_inner + 2 * s.n_groups * s.d_state + Hm)
+                      + s.d_conv * ch + ch + 3 * Hm + d_inner + d_inner * D)
+        if ffn == "mlp":
+            n_mats = 3 if cfg.act in ("swiglu", "geglu") else 2
+            total += n_mats * D * cfg.d_ff
+        elif ffn == "moe":
+            m = cfg.moe
+            E = m.top_k if active_only else m.n_experts
+            total += D * m.n_experts  # router (always dense)
+            total += E * 3 * D * m.d_ff_expert
+            if m.n_shared:
+                total += 3 * D * (m.d_ff_shared or m.d_ff_expert * m.n_shared)
+        total += 2 * D  # norms
+    total *= dec.n_groups(cfg)
+    total += cfg.padded_vocab * D * (1 if cfg.tie_embeddings else 2)
+    if cfg.vlm:
+        total += cfg.vision_feat_dim * D + D * D
+    if cfg.encdec:
+        enc_layer = (D * hd * (H + 2 * KV) + H * hd * D
+                     + 2 * D * cfg.d_ff + 2 * D)
+        cross = D * hd * (H + 2 * KV) + H * hd * D + D
+        total += cfg.n_enc_layers * enc_layer + cfg.n_layers * cross
+    return int(total)

@@ -1,0 +1,101 @@
+"""Mixture-of-Experts FFN: top-k routed experts + optional shared experts.
+
+Dispatch is the canonical GShard grouped one-hot einsum: tokens are split into
+small groups (``group_size`` tokens) and each group gets a fixed per-expert
+capacity C = ceil(group_size * top_k * capacity_factor / E).  Under SPMD the
+group axis is sharded with the batch (`data`) and the expert axis with the
+`model` mesh axis, so the dispatch/combine einsums lower to all-to-alls (EP).
+
+Experts are *bricks at finer grain* in the paper's sense: the scheduler's
+placement axis for MoE archs is which expert shard lives on which chip
+(DESIGN.md §5).  Dispatch-einsum overhead is real FLOPs and is visible in the
+roofline useful-FLOPs ratio; the sort-based dispatch lives in the perf log.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.mlp import init_mlp, apply_mlp
+
+GROUP_SIZE = 256
+
+
+def capacity(cfg_moe, group_size: int = GROUP_SIZE) -> int:
+    c = math.ceil(group_size * cfg_moe.top_k * cfg_moe.capacity_factor
+                  / cfg_moe.n_experts)
+    return max(4, c)
+
+
+def init_moe(key, cfg, d_model: int):
+    m = cfg.moe
+    dt = cfg.compute_dtype
+    ks = jax.random.split(key, 5)
+    E, F = m.n_experts, m.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), jnp.float32, fan_in=d_model),
+        "w_up": dense_init(ks[1], (E, d_model, F), dt, fan_in=d_model),
+        "w_gate": dense_init(ks[2], (E, d_model, F), dt, fan_in=d_model),
+        "w_down": dense_init(ks[3], (E, F, d_model), dt, fan_in=F),
+    }
+    if m.n_shared:
+        # all assigned MoE archs use gated (SwiGLU) FFNs
+        p["shared"] = init_mlp(ks[4], cfg, d_model,
+                               m.d_ff_shared or m.d_ff_expert * m.n_shared)
+    return p
+
+
+def route(logits, top_k: int, cap: int):
+    """logits (G, S, E) fp32 -> combine (G,S,E,C) fp32, dispatch bf16, aux."""
+    G, S, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, top_k)                  # (G,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((G, E), jnp.int32)
+    combine = jnp.zeros((G, S, E, cap), jnp.float32)
+    for j in range(top_k):
+        oh = jax.nn.one_hot(idx[..., j], E, dtype=jnp.int32)  # (G,S,E)
+        pos = counts[:, None, :] + jnp.cumsum(oh, axis=1) - oh
+        counts = counts + oh.sum(axis=1)
+        keep = (pos < cap) & (oh > 0)                          # (G,S,E)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, 0), cap, dtype=jnp.float32)
+        combine = combine + (gates[..., j, None, None]
+                             * keep[..., None].astype(jnp.float32) * pos_oh)
+    dispatch = (combine > 0).astype(jnp.bfloat16)
+    # load-balance aux loss (Switch): E * mean(f_e * p_e)
+    me = probs.mean(axis=(0, 1))                               # (E,)
+    f = (counts.sum(axis=0) / max(1, G * S * top_k)).astype(jnp.float32)
+    aux = E * jnp.sum(me * f)
+    return combine, dispatch, aux
+
+
+def apply_moe(p, cfg, x, group_size: int = GROUP_SIZE
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B,S,D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    N = B * S
+    gs = min(group_size, N)
+    G = N // gs
+    xg = x.reshape(G, gs, D)
+    cap = capacity(m, gs)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    combine, dispatch, aux = route(logits, m.top_k, cap)
+
+    xe = jnp.einsum("gsd,gsec->gecd", xg, dispatch)            # (G,E,C,D)
+    up = jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    gate = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])
+    h = jax.nn.silu(gate) * up
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    y = jnp.einsum("gecd,gsec->gsd", ye, combine.astype(ye.dtype))
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    if "shared" in p:
+        y = y + apply_mlp(p["shared"], cfg, x)
+    return y, aux

@@ -1,0 +1,2 @@
+"""Serving substrate: slot-based KV cache, continuous batching engine,
+sampling — with the paper's TABM hand-off and battery-aware throttling."""

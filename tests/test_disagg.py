@@ -1,0 +1,20 @@
+"""Disaggregated submesh serving (the paper's NPU/GPU split at pod scale):
+encoder submesh -> SubmeshPipe (ICI) -> TABM -> decoder submesh.
+Subprocess: needs 8 placeholder devices."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_serve_disagg_pipeline():
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve_disagg"],
+        capture_output=True, text=True, timeout=600, env=env,
+        cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "OK: disaggregated" in proc.stdout

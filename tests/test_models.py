@@ -1,0 +1,160 @@
+"""Per-arch smoke tests (reduced configs) + decode-path consistency.
+
+Smoke: one train step + prefill + decode per assigned arch, asserting
+output shapes and finiteness (the brief's required reduced-config tests).
+
+Consistency: prefill+decode must reproduce the teacher-forced forward's
+next-token logits for every cache family (KV, SSM state, hybrid, linear).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+from repro.launch.steps import (build_serve_step, build_train_step,
+                                init_params)
+from repro.models import encdec as ED
+from repro.models import model as M
+from repro.training.optimizer import OptConfig, init_opt
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, B=2, S=64):
+    batch = {}
+    if cfg.encdec:
+        batch["src_embeds"] = jnp.full((B, 32, cfg.d_model), 0.01)
+        batch["tgt_tokens"] = (jnp.arange(B * S).reshape(B, S) % 60 + 3
+                               ).astype(jnp.int32)
+    else:
+        batch["tokens"] = (jnp.arange(B * S).reshape(B, S) % 60 + 3
+                           ).astype(jnp.int32)
+        if cfg.vlm:
+            batch["vision_feats"] = jnp.full(
+                (B, cfg.vision_tokens, cfg.vision_feat_dim), 0.01)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_train_step(key, arch):
+    """One forward/train step on CPU: shapes + no NaNs (assignment rule)."""
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    opt_cfg = OptConfig(lr=1e-3)
+    opt = init_opt(params, opt_cfg)
+    step = jax.jit(build_train_step(cfg, opt_cfg))
+    params2, opt2, metrics = step(params, opt, _batch(cfg))
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = any(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                              - b.astype(jnp.float32)))) > 0
+        for a, b in zip(jax.tree.leaves(params2), jax.tree.leaves(params)))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_prefill_decode(key, arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    B, S, max_len = 2, 16, 32
+    if cfg.encdec:
+        logits, cache = ED.encdec_prefill(
+            params, cfg, jnp.full((B, 8, cfg.d_model), 0.01),
+            jnp.ones((B, S), jnp.int32), max_len)
+    else:
+        logits, cache = M.lm_prefill(
+            params, cfg, jnp.ones((B, S), jnp.int32), max_len,
+            vision_feats=(jnp.full((B, cfg.vision_tokens,
+                                    cfg.vision_feat_dim), 0.01)
+                          if cfg.vlm else None))
+    assert logits.shape == (B, cfg.padded_vocab)
+    serve = jax.jit(build_serve_step(cfg))
+    for _ in range(3):
+        logits, cache = serve(params, jnp.ones((B, 1), jnp.int32), cache)
+    assert logits.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b",
+                                  "deepseek-moe-16b", "qwen2-vl-7b"])
+def test_decode_matches_teacher_forcing(key, arch):
+    """Greedy decode logits == forward logits on the same prefix, for every
+    cache family (attention KV, SSD state, hybrid interleave, MoE)."""
+    cfg = get_config(arch).reduced()
+    # MoE routing under capacity pressure differs between a (B,S) forward
+    # and a (B,1) decode; widen capacity so routing is identical.
+    if cfg.moe is not None:
+        import dataclasses
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(key, cfg)
+    B, S, extra = 1, 24, 4
+    tokens = (jnp.arange(B * (S + extra)).reshape(B, -1) % 50 + 3
+              ).astype(jnp.int32)
+    vision = (jnp.full((B, cfg.vision_tokens, cfg.vision_feat_dim), 0.01)
+              if cfg.vlm else None)
+    full_logits, _ = M.lm_forward(params, cfg, tokens, vision_feats=vision)
+
+    _, cache = M.lm_prefill(params, cfg, tokens[:, :S], S + extra + 1,
+                            vision_feats=vision)
+    for t in range(S, S + extra):
+        logits, cache = M.lm_decode_step(params, cfg, tokens[:, t:t + 1],
+                                         cache)
+        ref = full_logits[:, t]
+        got = logits
+        top_ref = int(jnp.argmax(ref[0, :cfg.vocab_size]))
+        top_got = int(jnp.argmax(got[0, :cfg.vocab_size]))
+        assert top_got == top_ref, (arch, t)
+        np.testing.assert_allclose(
+            np.asarray(got[0, :cfg.vocab_size], np.float32),
+            np.asarray(ref[0, :cfg.vocab_size], np.float32),
+            rtol=0.1, atol=0.35)
+
+
+def test_linear_attention_variant_decodes(key):
+    """The paper's attn_impl="linear" drop-in works end to end."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                              attn_impl="linear", subquadratic=True)
+    params = init_params(key, cfg)
+    tokens = (jnp.arange(40)[None] % 50 + 3).astype(jnp.int32)
+    full_logits, _ = M.lm_forward(params, cfg, tokens)
+    _, cache = M.lm_prefill(params, cfg, tokens[:, :32], 40)
+    logits, cache = M.lm_decode_step(params, cfg, tokens[:, 32:33], cache)
+    assert int(jnp.argmax(logits[0, :cfg.vocab_size])) == \
+        int(jnp.argmax(full_logits[0, 32, :cfg.vocab_size]))
+
+
+def test_cell_applicability_rules():
+    """long_500k runs only for sub-quadratic archs (assignment rule)."""
+    ok, _ = cell_applicable(get_config("mamba2-1.3b"), SHAPES["long_500k"])
+    assert ok
+    ok, _ = cell_applicable(get_config("jamba-1.5-large-398b"),
+                            SHAPES["long_500k"])
+    assert ok
+    for arch in ("deepseek-67b", "qwen2-vl-7b", "seamless-m4t-large-v2"):
+        ok, why = cell_applicable(get_config(arch), SHAPES["long_500k"])
+        assert not ok and "attention" in why
+
+
+def test_configs_match_assignment():
+    """Exact published numbers from the assignment table."""
+    c = get_config("deepseek-67b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (95, 8192, 64, 8, 22016, 102400)
+    c = get_config("dbrx-132b")
+    assert c.moe.n_experts == 16 and c.moe.top_k == 4 and c.d_ff == 10752
+    c = get_config("deepseek-moe-16b")
+    assert c.moe.n_experts == 64 and c.moe.top_k == 6 and c.moe.n_shared == 2
+    c = get_config("mamba2-1.3b")
+    assert c.ssm.d_state == 128 and c.d_ff == 0 and c.n_layers == 48
+    c = get_config("jamba-1.5-large-398b")
+    assert c.hybrid_group == 8 and c.moe.top_k == 2 and c.vocab_size == 65536
+    c = get_config("seamless-m4t-large-v2")
+    assert c.encdec and c.vocab_size == 256206
+    c = get_config("qwen2-vl-7b")
+    assert c.rope == "mrope" and c.vocab_size == 152064

@@ -1,0 +1,101 @@
+"""W4A16 serving path (the paper's core technique at pod scale) + the
+cache-update kernel: correctness of the quantized decode end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.quantize import PROFILES, quantize_tree
+from repro.kernels.cache_update import cache_row_update, ref_cache_row_update
+from repro.launch.steps import abstract_params, init_params
+from repro.models import model as M
+
+
+def test_quantized_decode_runs_and_tracks_fp(key):
+    """QTensor params flow through prefill + decode; outputs stay close to
+    the bf16 model (top-1 mostly agrees at q4)."""
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=2)
+    params = init_params(key, cfg)
+    qparams = quantize_tree(params, PROFILES["nanomind-serve"])
+    tokens = (jnp.arange(24)[None] % 60 + 3).astype(jnp.int32)
+
+    lg_f, cache_f = M.lm_prefill(params, cfg, tokens, 32)
+    lg_q, cache_q = M.lm_prefill(qparams, cfg, tokens, 32)
+    agree = 0
+    for _ in range(4):
+        t_f = jnp.argmax(lg_f, -1)[:, None].astype(jnp.int32)
+        t_q = jnp.argmax(lg_q, -1)[:, None].astype(jnp.int32)
+        agree += int(t_f[0, 0] == t_q[0, 0])
+        lg_f, cache_f = M.lm_decode_step(params, cfg, t_f, cache_f)
+        lg_q, cache_q = M.lm_decode_step(qparams, cfg, t_q, cache_q)
+    assert agree >= 3                    # q4 tracks fp on most steps
+    assert np.isfinite(np.asarray(lg_q, np.float32)).all()
+
+
+def test_abstract_quant_params_shapes():
+    """eval_shape of the quantized tree (what the dry-run lowers against)."""
+    from repro.core.quantize import QTensor
+    cfg = get_config("deepseek-67b")
+    p = abstract_params(cfg, quant_policy="nanomind-serve")
+    w = p["layers"][0]["ffn"]["w_up"]
+    assert isinstance(w, QTensor)
+    assert w.codes.shape == (95, 8192, 22016 // 8)
+    assert w.scales.shape == (95, 8192, 22016 // 32)
+    # group 32 divides every 16-way shard of the last dim (EXPERIMENTS §Perf)
+    assert (22016 // 16) % 32 == 0
+
+
+def test_quant_leaf_sharding_rules():
+    """QTensor codes/scales inherit the parent weight's rule (the
+    FlattenedIndexKey regression from §Perf decode it2)."""
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as sh
+
+    class StubMesh:
+        devices = np.empty((16, 16), object)
+        axis_names = ("data", "model")
+
+    cfg = get_config("deepseek-67b")
+    p = abstract_params(cfg, quant_policy="nanomind-serve")
+    sh.set_mode("serve")
+    try:
+        specs = sh.tree_param_specs(StubMesh(), p)
+        w_up = specs["layers"][0]["ffn"]["w_up"]
+        leaves = jax.tree.leaves(w_up, is_leaf=lambda x: isinstance(x, P))
+        codes_spec = leaves[0]
+        assert "model" in tuple(codes_spec), codes_spec   # TP preserved
+    finally:
+        sh.set_mode("tp")
+
+
+@pytest.mark.parametrize("shape", [(4, 64, 2, 16), (2, 128, 8, 32),
+                                   (1, 256, 4, 64)])
+def test_cache_update_kernel(key, shape):
+    B, S, KV, hd = shape
+    ks = jax.random.split(key, 2)
+    cache = jax.random.normal(ks[0], shape, jnp.float32)
+    row = jax.random.normal(ks[1], (B, KV, hd), jnp.float32)
+    idx = jnp.asarray([(i * 7 + 3) % S for i in range(B)], jnp.int32)
+    ref = ref_cache_row_update(cache, row, idx)
+    out = cache_row_update(cache.copy(), row, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_cache_update_scalar_index(key):
+    cache = jnp.zeros((2, 16, 2, 8))
+    row = jnp.ones((2, 2, 8))
+    out = cache_row_update(cache, row, jnp.asarray(5), interpret=True)
+    assert float(out[:, 5].sum()) == 2 * 2 * 8
+    assert float(out.sum()) == 2 * 2 * 8
+
+
+def test_sharding_modes_roundtrip():
+    from repro.distributed import sharding as sh
+    assert sh.get_mode() == "tp"
+    sh.set_mode("fsdp")
+    assert sh.get_mode() == "fsdp"
+    sh.set_mode("tp")
+    with pytest.raises(AssertionError):
+        sh.set_mode("bogus")

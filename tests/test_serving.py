@@ -1,0 +1,113 @@
+"""Serving engine: exactness vs lockstep decode, continuous batching,
+TABM path, battery throttling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.power import BatteryAwareExecutor, PMU
+from repro.launch.steps import init_params
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import bucket_length
+from repro.serving.sampling import greedy, sample
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=2)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reference_decode(cfg, params, prompt, n):
+    logits, cache = M.lm_prefill(params, cfg, jnp.asarray(prompt)[None], 256)
+    toks = [int(jnp.argmax(logits[0]))]
+    for _ in range(n - 1):
+        lg, cache = M.lm_decode_step(
+            params, cfg, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks
+
+
+def test_engine_matches_reference(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, n_slots=4, max_len=256)
+    prompts = [np.arange(5, 5 + n) % 200 + 3 for n in (9, 17, 33)]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, tokens=p, max_new_tokens=8))
+    done = eng.run()
+    assert len(done) == 3
+    for req in done:
+        ref = _reference_decode(cfg, params, prompts[req.rid], 8)
+        assert req.out_tokens[:8] == ref, req.rid
+
+
+def test_slot_reuse_more_requests_than_slots(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=256)
+    for i in range(6):
+        eng.submit(Request(rid=i, tokens=np.arange(3 + i) + 3,
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 6
+    assert eng.stats.prefills == 6
+    assert len(eng.slots.free) == 2            # all slots returned
+
+
+def test_battery_critical_stops_admission(setup):
+    cfg, params = setup
+    ex = BatteryAwareExecutor(PMU())
+    ex.pmu.level = 0.05                        # CRITICAL
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=256, executor=ex)
+    eng.submit(Request(rid=0, tokens=np.arange(5) + 3, max_new_tokens=4))
+    for _ in range(5):
+        eng.step()
+    assert len(eng.done) == 0                  # nothing admitted
+    ex.pmu.level = 1.0
+    done = eng.run()
+    assert len(done) == 1                      # resumes when charged
+
+
+def test_vlm_tabm_path(key):
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(key, cfg)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    feats = np.full((1, cfg.vision_tokens, cfg.vision_feat_dim), 0.01,
+                    np.float32)
+    eng.submit(Request(rid=0, tokens=np.arange(6) + 3, max_new_tokens=4,
+                       vision_feats=feats))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) >= 4
+    assert eng.tabm.stats["writes"] == 1 and eng.tabm.stats["reads"] == 1
+
+
+def test_bucketing():
+    assert bucket_length(1) == 128
+    assert bucket_length(128) == 128
+    assert bucket_length(129) == 256
+    assert bucket_length(5000) == 4096
+
+
+def test_sampling_functions(key):
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(greedy(logits)[0]) == 1
+    t = sample(logits, key, temperature=1e-4)
+    assert int(t[0]) == 1
+    tk = sample(jnp.asarray([[0.0, 5.0, 4.9, -2.0]]), key,
+                temperature=2.0, top_k=2)
+    assert int(tk[0]) in (1, 2)
+    tp = sample(logits, key, temperature=1.0, top_p=0.5)
+    assert int(tp[0]) == 1
+
+
+def test_e2e_latency_and_throughput_metrics(setup):
+    cfg, params = setup
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=256)
+    eng.submit(Request(rid=0, tokens=np.arange(8) + 3, max_new_tokens=4))
+    done = eng.run()
+    assert done[0].e2e_latency is not None and done[0].e2e_latency > 0
+    assert done[0].first_token_t is not None
+    mem = eng.memory_bytes()
+    assert mem["weights"] > 0 and mem["kv_pool"] > 0

@@ -1,0 +1,141 @@
+"""Sharding rule table: divisibility guarantees and per-leaf rules.
+
+Uses a stub 16x16 "mesh" (the rules only read axis_names / device-grid
+shape), so the production-mesh decisions are unit-testable on 1 CPU device.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, list_archs
+from repro.distributed import sharding as sh
+from repro.launch.steps import abstract_cache, abstract_params, input_specs
+from repro.configs.base import SHAPES
+
+
+class StubMesh:
+    def __init__(self, shape=(16, 16), axes=("data", "model")):
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_names = axes
+
+
+MESH = StubMesh()
+MESH3 = StubMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, name):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))[name]
+
+
+def _check_divisible(spec_tree, shapes_tree, mesh):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ok = []
+
+    def visit(spec, sds):
+        for dim, names in zip(sds.shape, tuple(spec) + (None,) * 10):
+            if names is None:
+                continue
+            names = (names,) if isinstance(names, str) else names
+            total = int(np.prod([sizes[n] for n in names]))
+            assert dim % total == 0, (spec, sds.shape)
+        ok.append(1)
+
+    jax.tree.map(visit, spec_tree, shapes_tree,
+                 is_leaf=lambda x: isinstance(x, P))
+    assert ok
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_specs_divisible_all_archs(arch):
+    cfg = get_config(arch)
+    shapes = abstract_params(cfg)
+    specs = sh.tree_param_specs(MESH, shapes)
+    _check_divisible(specs, shapes, MESH)
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "jamba-1.5-large-398b",
+                                  "qwen2-vl-7b"])
+def test_param_specs_divisible_multipod(arch):
+    cfg = get_config(arch)
+    shapes = abstract_params(cfg)
+    specs = sh.tree_param_specs(MESH3, shapes)
+    _check_divisible(specs, shapes, MESH3)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+@pytest.mark.parametrize("shape", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape):
+    cfg = get_config(arch)
+    from repro.configs.base import cell_applicable
+    cell = SHAPES[shape]
+    if not cell_applicable(cfg, cell)[0]:
+        pytest.skip("cell not applicable")
+    shapes = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+    specs = sh.tree_cache_specs(MESH, shapes)
+    _check_divisible(specs, shapes, MESH)
+
+
+def test_rule_table_expectations():
+    cfg = get_config("deepseek-67b")
+    shapes = abstract_params(cfg)
+    specs = sh.tree_param_specs(MESH, shapes)
+    layer0 = specs["layers"][0]
+    # attention: H=64 divisible by 16 -> heads on model; no hd fallback
+    assert layer0["mixer"]["wq"] == P(None, "data", "model", None)
+    # GQA kv=8 indivisible -> replicated over model, FSDP kept
+    assert layer0["mixer"]["wk"] == P(None, "data", None, None)
+    assert layer0["mixer"]["wo"] == P(None, "model", None, "data")
+    assert layer0["ffn"]["w_up"] == P(None, "data", "model")
+    assert layer0["ffn"]["w_down"] == P(None, "model", "data")
+    assert specs["embed"] == P("model", "data")
+    assert specs["lm_head"] == P("data", "model")
+    assert specs["final_norm"]["scale"] == P()
+
+
+def test_moe_expert_parallel_rule():
+    cfg = get_config("dbrx-132b")
+    specs = sh.tree_param_specs(MESH, abstract_params(cfg))
+    moe = specs["layers"][0]["ffn"]
+    assert moe["w_up"] == P(None, "model", "data", None)     # EP on experts
+    assert moe["w_down"] == P(None, "model", None, "data")
+    assert moe["router"] == P(None, "data", None)
+
+
+def test_qwen2_indivisible_heads_fall_back():
+    cfg = get_config("qwen2-vl-7b")                          # 28 heads
+    specs = sh.tree_param_specs(MESH, abstract_params(cfg))
+    wq = specs["layers"][0]["mixer"]["wq"]
+    assert wq == P(None, "data", None, None)                 # replicated TP
+
+
+def test_batch_specs():
+    cell = SHAPES["train_4k"]
+    cfg = get_config("deepseek-67b")
+    specs = sh.tree_batch_specs(MESH, input_specs(cfg, cell))
+    assert specs["tokens"][0] in (("data",), "data")
+    # long_500k batch=1: replicated
+    cfg2 = get_config("mamba2-1.3b")
+    specs2 = sh.tree_batch_specs(MESH, input_specs(cfg2, SHAPES["long_500k"]))
+    assert all(x is None for x in specs2["tokens"])
+
+
+def test_cache_seq_sharding_flash_decode():
+    """decode_32k: batch over data, cache sequence over model (SP)."""
+    cfg = get_config("deepseek-67b")
+    cell = SHAPES["decode_32k"]
+    shapes = abstract_cache(cfg, cell.global_batch, cell.seq_len)
+    specs = sh.tree_cache_specs(MESH, shapes)
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    kv = [(p, s) for p, s in flat
+          if "layers" in "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                                  for q in p)]
+    assert kv
+    for _, spec in kv:
+        entries = tuple(spec)
+        # sequence dim (3rd-from-last) on "model"; batch dim on "data"
+        assert entries[-3] == "model"
+        assert entries[-4] in ("data", ("data",))

@@ -1,0 +1,202 @@
+"""Training substrate: optimizer, loop, checkpoints, compression, data."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as hst
+
+from repro.configs import get_config
+from repro.data import PackedLMDataset, ShardedLoader, multimodal_batch_iter
+from repro.distributed import checkpoint as ck
+from repro.distributed.compression import (ErrorFeedback, compress,
+                                           decompress)
+from repro.launch.steps import init_params
+from repro.training.optimizer import OptConfig, adamw_update, init_opt, \
+    schedule_lr
+from repro.training.train_loop import (TrainConfig, build_accum_train_step,
+                                       fit)
+
+
+def test_loss_decreases_and_resume_equivalence(key):
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=2)
+    oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    with tempfile.TemporaryDirectory() as d:
+        it = multimodal_batch_iter(cfg, global_batch=4, seq_len=64)
+        res = fit(cfg, oc,
+                  TrainConfig(steps=10, ckpt_dir=d, ckpt_every=5,
+                              log_every=100), it)
+        assert res.metrics_history[-1]["loss"] < res.metrics_history[0]["loss"]
+        # crash + restart: resumes from step 10
+        it2 = multimodal_batch_iter(cfg, global_batch=4, seq_len=64)
+        res2 = fit(cfg, oc,
+                   TrainConfig(steps=12, ckpt_dir=d, ckpt_every=5,
+                               log_every=100), it2)
+        assert res2.recovery.events[0]["kind"] == "restore"
+        assert res2.metrics_history[0]["step"] == 11
+
+
+def test_grad_accum_matches_full_batch(key):
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=2)
+    params = init_params(key, cfg)
+    oc = OptConfig(lr=1e-3)
+    batch = {"tokens": (jnp.arange(4 * 64).reshape(4, 64) % 60 + 3
+                        ).astype(jnp.int32)}
+    p1, _, m1 = jax.jit(build_accum_train_step(cfg, oc, 1))(
+        params, init_opt(params, oc), batch)
+    p2, _, m2 = jax.jit(build_accum_train_step(cfg, oc, 2))(
+        params, init_opt(params, oc), batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-2, atol=1e-4)
+
+
+def test_lr_schedule_shapes():
+    oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                   schedule="cosine", min_lr_frac=0.1)
+    lrs = [float(schedule_lr(oc, jnp.asarray(s))) for s in
+           (1, 5, 10, 50, 100)]
+    assert lrs[0] < lrs[1] < lrs[2]
+    assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+    assert lrs[2] > lrs[3] > lrs[4]
+    assert lrs[4] >= 1e-4 * 0.99
+
+
+def test_weight_decay_mask(key):
+    """Norm scales / biases are exempt from decoupled weight decay."""
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=1)
+    params = init_params(key, cfg)
+    # large effective decay so the bf16 weights move visibly in one step
+    oc = OptConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                   schedule="constant")
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    p2, _, _ = adamw_update(params, zeros, init_opt(params, oc), oc)
+    # with zero grads, decayed leaves shrink; exempt leaves unchanged
+    scale_before = params["final_norm"]["scale"]
+    scale_after = p2["final_norm"]["scale"]
+    np.testing.assert_array_equal(np.asarray(scale_after),
+                                  np.asarray(scale_before))
+    w_before = params["lm_head"]
+    w_after = p2["lm_head"]
+    assert float(jnp.mean(jnp.abs(w_after))) < float(
+        jnp.mean(jnp.abs(w_before)))
+
+
+def test_bf16_optimizer_states(key):
+    cfg = get_config("stablelm-1.6b").reduced(n_layers=1)
+    params = init_params(key, cfg)
+    oc = OptConfig(state_dtype="bfloat16")
+    opt = init_opt(params, oc)
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(opt["m"]))
+    batch = {"tokens": jnp.ones((2, 32), jnp.int32)}
+    step = jax.jit(build_accum_train_step(cfg, oc, 1))
+    p2, opt2, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(opt2["m"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+@given(seed=hst.integers(0, 1000))
+def test_checkpoint_roundtrip_mixed_dtypes(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": jnp.asarray(rng.standard_normal((3, 4)), jnp.bfloat16),
+            "b": (jnp.arange(5, dtype=jnp.int32),
+                  {"c": jnp.asarray(rng.standard_normal(7), jnp.float32)}),
+            "step": jnp.asarray(seed, jnp.int32)}
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 7, tree)
+        got, step, _ = ck.restore(d, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_gc_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 2, 3, 4, 5):
+            ck.save(d, s, {"x": jnp.ones(3)}, keep=2)
+        assert ck.latest_step(d) == 5
+        steps = sorted(int(p.split("_")[1]) for p in os.listdir(d))
+        assert steps == [4, 5]
+
+
+def test_async_checkpointer():
+    with tempfile.TemporaryDirectory() as d:
+        acp = ck.AsyncCheckpointer(d)
+        acp.save_async(3, {"x": jnp.arange(10)})
+        acp.wait()
+        got, step, _ = ck.restore(d, {"x": jnp.arange(10)})
+        assert step == 3
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+@given(seed=hst.integers(0, 500), scale=hst.floats(1e-4, 1e3))
+def test_compress_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((3, 130)) * scale, jnp.float32)
+    q, s = compress(g)
+    dq = decompress(q, s, g.shape, g.dtype)
+    blocks, _ = np.asarray(g).reshape(-1), None
+    # per-block bound: amax/127/2 (round-to-nearest)
+    gb = np.pad(np.asarray(g).reshape(-1), (0, (-g.size) % 256))
+    gb = gb.reshape(-1, 256)
+    bound = np.abs(gb).max(1) / 127 / 2 + 1e-7
+    err = np.abs(np.asarray(dq) - np.asarray(g)).reshape(-1)
+    err = np.pad(err, (0, (-g.size) % 256)).reshape(-1, 256).max(1)
+    assert np.all(err <= bound + 1e-6)
+
+
+def test_error_feedback_preserves_signal(key):
+    """Sum of compressed grads with error feedback tracks the true sum."""
+    ef = ErrorFeedback()
+    rng = np.random.default_rng(0)
+    true_sum = None
+    fed_sum = None
+    for _ in range(20):
+        g = {"w": jnp.asarray(rng.standard_normal((64,)) * 0.1, jnp.float32)}
+        dq = ef.apply(g)
+        true_sum = g["w"] if true_sum is None else true_sum + g["w"]
+        fed_sum = dq["w"] if fed_sum is None else fed_sum + dq["w"]
+    resid = float(jnp.max(jnp.abs(true_sum - fed_sum)))
+    # residual memory keeps the drift bounded by ~one quantization step
+    assert resid < 0.1 * float(jnp.max(jnp.abs(true_sum)))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_seek():
+    ds1 = PackedLMDataset(1000, 64, seed=5)
+    l1 = ShardedLoader(ds1, global_batch=4)
+    first = [next(l1) for _ in range(3)]
+    ds2 = PackedLMDataset(1000, 64, seed=5)
+    l2 = ShardedLoader(ds2, global_batch=4)
+    l2.seek(2)
+    replay = next(l2)
+    np.testing.assert_array_equal(first[2]["tokens"], replay["tokens"])
+
+
+def test_host_sharding_partitions_batch():
+    full = ShardedLoader(PackedLMDataset(1000, 32, seed=1), global_batch=4)
+    b_full = next(full)
+    h0 = ShardedLoader(PackedLMDataset(1000, 32, seed=1), global_batch=4,
+                       host_id=0, n_hosts=2)
+    h1 = ShardedLoader(PackedLMDataset(1000, 32, seed=1), global_batch=4,
+                       host_id=1, n_hosts=2)
+    b0, b1 = next(h0), next(h1)
+    merged = np.empty_like(b_full["tokens"])
+    merged[0::2] = b0["tokens"]
+    merged[1::2] = b1["tokens"]
+    np.testing.assert_array_equal(merged, b_full["tokens"])
