@@ -1,0 +1,15 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: check test examples
+
+# tier-1 pytest + reduced lm/vlm dry-runs (no TPU needed) — the CI gate
+check:
+	bash scripts/check.sh
+
+test:
+	python -m pytest -x -q
+
+examples:
+	python examples/quickstart.py
+	python examples/low_power_cascade.py

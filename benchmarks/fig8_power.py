@@ -33,11 +33,13 @@ def _pipeline(arch="llava-onevision-0.5b"):
     """The paper's full pipeline, including the REAL vision-encoder brick
     (SigLip-so400m-class) the stub frontend stands in for — its placement
     (NPU vs GPU) is where the paper's energy saving comes from."""
-    from repro.core.bricks import Brick
+    from repro.core.bricks import Brick, Port
     cfg = get_config(arch)
     g = decompose(cfg)
     enc = Brick("vision_encoder", "encoder", (),
-                lambda p, c, f: f, static_shape=True, quant_label="fp16",
+                lambda p, c, ctx: ctx["vision_feats"],
+                in_ports=(Port("vision_feats"),), out_port=Port("patches"),
+                static_shape=True, quant_label="fp16",
                 flops_per_token=2 * SIGLIP_PARAMS,
                 param_bytes=int(SIGLIP_PARAMS * 2))
     g.bricks = [enc if b.name == "vision_frontend" else b for b in g.bricks]

@@ -9,6 +9,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.bricks import decompose
+from repro.core.plan import compile_plan
 from repro.core.scheduler import (edge_accelerators, populate_brick_bytes,
                                   schedule)
 from repro.launch.steps import init_params
@@ -21,10 +22,22 @@ params = init_params(jax.random.PRNGKey(0), cfg)
 # 2. decompose into bricks and pick a placement (the paper's core move)
 graph = decompose(cfg)
 populate_brick_bytes(graph, params)
-placement = schedule(graph, edge_accelerators(), n_tokens=64,
-                     objective="latency")
+accels = edge_accelerators()
+placement = schedule(graph, accels, n_tokens=64, objective="latency")
 print("bricks:    ", graph.names())
 print("placement: ", placement)
+
+# 2b. the placement is executable: compile it to an ExecutionPlan (bound,
+#     jit-cached per-brick callables) and run one forward through it
+plan = compile_plan(graph, params, placement=placement, accels=accels)
+print("plan:      ", plan.describe())
+rng = np.random.default_rng(0)
+logits, _ = plan.run({
+    "tokens": rng.integers(3, 400, (1, 16)).astype(np.int32),
+    "vision_feats": rng.standard_normal(
+        (1, cfg.vision_tokens, cfg.vision_feat_dim)).astype(np.float32)
+    * 0.02})
+print("plan run:  ", tuple(logits.shape), "logits")
 
 # 3. serve one multimodal request through the continuous-batching engine
 #    (encoder -> TABM ring slot -> decoder, zero-copy hand-off)

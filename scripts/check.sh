@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Tier-1 gate, runnable without TPU hardware: the full pytest suite plus a
+# reduced lower+compile dry-run for one lm and one vlm arch, so ExecutionPlan
+# or sharding regressions surface from a plain CPU container.
+#
+#     make check        (or: bash scripts/check.sh [extra pytest args])
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+# two failures are pre-existing at the seed commit (cf0ac05, verified by
+# running them in a seed worktree) and tracked in ROADMAP open items:
+#   - jamba hybrid decode top-1 drifts from teacher forcing
+#   - q4 quantized decode top-1 agreement below threshold
+# deselect them so this gate is green exactly when nothing NEW regresses
+python -m pytest -x -q "$@" \
+    --deselect "tests/test_models.py::test_decode_matches_teacher_forcing[jamba-1.5-large-398b]" \
+    --deselect "tests/test_serve_quant.py::test_quantized_decode_runs_and_tracks_fp"
+
+echo "== reduced dry-run: lm arch =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.dryrun --arch stablelm-1.6b --shape decode_32k \
+    --reduced --out /tmp/repro-check/dryrun
+
+echo "== reduced dry-run: vlm arch =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.dryrun --arch llava-onevision-0.5b \
+    --shape decode_32k --reduced --out /tmp/repro-check/dryrun
+
+echo "OK: check passed"

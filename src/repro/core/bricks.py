@@ -4,15 +4,22 @@ NANOMIND's first insight: LMMs are inherently modular — vision encoder,
 projector, multimodal embedding, language decoder, audio encoder — and the
 modules can be *decoupled and executed independently*, each on the hardware
 that suits it.  A :class:`Brick` is one such unit: it owns a subset of the
-parameter pytree, exposes a pure apply function, and carries the metadata
-the scheduler needs (compute/memory footprints, static-shape discipline,
-quantization label).
+parameter pytree, exposes a pure apply function over named ports, and
+carries the metadata the scheduler needs (compute/memory footprints,
+static-shape discipline, quantization label).
 
 ``decompose(cfg)`` builds the BrickGraph for any assigned arch:
 
     vlm:     vision_frontend* -> projector -> embed -> decoder -> head
     audio:   audio_frontend* -> encoder -> embed -> decoder -> head
     lm:      embed -> decoder -> head          (*frontends are stubs)
+
+Every brick has one uniform entry point — ``apply(params_slice, cfg, ctx)``
+where ``ctx`` maps the brick's declared input :class:`Port` names to arrays
+— so callers never dispatch on ``brick.kind``.  The dataflow between bricks
+is explicit in the port declarations; :mod:`repro.core.plan` compiles the
+chain into bound per-brick callables (the one runtime behind the serving
+engine, the cascade runner, and the scheduler's Placement).
 
 Bricks are the unit of: placement (core/scheduler), zero-copy hand-off
 (core/tabm), sequential low-power execution (core/cascade), and hybrid
@@ -31,6 +38,19 @@ from repro.configs.base import ModelConfig
 
 
 @dataclass(frozen=True)
+class Port:
+    """A typed dataflow endpoint of a brick.
+
+    ``dtype_kind``: "float" | "int" — validated when values bind at runtime.
+    ``optional``: the brick runs without it (e.g. a text-only request through
+    a vlm chain has no ``vision_embeds``)."""
+
+    name: str
+    dtype_kind: str = "float"
+    optional: bool = False
+
+
+@dataclass(frozen=True)
 class Brick:
     """One independently executable module."""
 
@@ -38,7 +58,9 @@ class Brick:
     kind: str                       # frontend | encoder | projector | embed
                                     # | decoder | head
     param_keys: Tuple[str, ...]     # top-level params entries this brick owns
-    apply: Callable                 # (params_slice, cfg, *inputs) -> outputs
+    apply: Callable                 # (params_slice, cfg, ctx) -> out array
+    in_ports: Tuple[Port, ...] = ()
+    out_port: Port = Port("out")
     static_shape: bool = False      # paper §NPU: fixed input shapes only
     quant_label: str = "bf16"       # default per-brick precision (Fig. 7)
     flops_per_token: float = 0.0    # scheduler cost model inputs
@@ -62,10 +84,15 @@ class BrickGraph:
         return [(a.name, b.name) for a, b in zip(self.bricks, self.bricks[1:])]
 
     def brick(self, name: str) -> Brick:
-        for b in self.bricks:
-            if b.name == name:
-                return b
-        raise KeyError(name)
+        # dict lookup, rebuilt only when the bricks list is replaced
+        # (populate_brick_bytes and tests reassign graph.bricks wholesale)
+        if self.__dict__.get("_index_src") is not self.bricks:
+            self.__dict__["_index"] = {b.name: b for b in self.bricks}
+            self.__dict__["_index_src"] = self.bricks
+        try:
+            return self.__dict__["_index"][name]
+        except KeyError:
+            raise KeyError(name) from None
 
     def names(self) -> List[str]:
         return [b.name for b in self.bricks]
@@ -75,43 +102,71 @@ class BrickGraph:
 # brick apply functions (thin wrappers over the model substrate)
 # ---------------------------------------------------------------------------
 
-def _apply_projector(p, cfg, vision_feats):
+def _apply_vision_frontend(p, cfg, ctx):
+    # STUB per the assignment: input_specs() provides precomputed patch
+    # features; the projector onward is real.
+    return ctx["vision_feats"]
+
+
+def _apply_projector(p, cfg, ctx):
     vp = p["vis_proj"]
     v = jax.nn.gelu(jnp.einsum("bnf,fd->bnd",
-                               vision_feats.astype(cfg.compute_dtype),
+                               ctx["patches"].astype(cfg.compute_dtype),
                                vp["w1"]))
     return jnp.einsum("bnd,de->bne", v, vp["w2"])
 
 
-def _apply_embed(p, cfg, tokens, vision_embeds=None):
+def _apply_embed(p, cfg, ctx):
+    tokens = ctx["tgt_tokens"] if cfg.encdec else ctx["tokens"]
     x = p["embed"][tokens]
+    vision_embeds = ctx.get("vision_embeds")
     if vision_embeds is not None:
-        x = jnp.concatenate([vision_embeds, x[:, vision_embeds.shape[1]:]],
-                            axis=1)
+        x = jnp.concatenate([vision_embeds.astype(x.dtype),
+                             x[:, vision_embeds.shape[1]:]], axis=1)
     return x
 
 
-def _apply_decoder(p, cfg, x, positions=None):
+def _apply_decoder(p, cfg, ctx):
     from repro.models import decoder as dec
     from repro.models.model import make_rope_fn
     from repro.models.common import default_positions, default_mrope_positions
+    x = ctx["hidden"]
     B, S, _ = x.shape
-    pos = default_positions(B, S) if positions is None else positions
+    pos = default_positions(B, S)
     mrope = default_mrope_positions(B, S) if cfg.rope == "mrope" else None
     rope_fn = make_rope_fn(cfg, pos, mrope)
     x, _, _ = dec.stack_forward(p["layers"], cfg, x, rope_fn, causal=True)
     return x
 
 
-def _apply_head(p, cfg, x):
+def _apply_encdec_decoder(p, cfg, ctx):
+    from repro.models.common import apply_rope, default_positions
+    from repro.models.encdec import _dec_layer_full
+    x, enc_out = ctx["hidden"], ctx["enc_out"]
+    B, S, _ = x.shape
+    rope_fn = lambda t: apply_rope(t, default_positions(B, S), cfg.rope_theta)
+
+    def body(xc, lp):
+        xc, _ = _dec_layer_full(cfg, lp, xc, enc_out, rope_fn, False, 0)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, p["dec_layers"])
+    return x
+
+
+def _apply_head(p, cfg, ctx):
     from repro.models.model import _head
     # head brick owns final_norm (+ lm_head or the tied embed table)
-    return _head(p, cfg, x)
+    return _head(p, cfg, ctx["hidden"])
 
 
-def _apply_audio_encoder(p, cfg, src_embeds):
+def _apply_audio_frontend(p, cfg, ctx):
+    return ctx["src_embeds"]
+
+
+def _apply_audio_encoder(p, cfg, ctx):
     from repro.models.encdec import encode
-    return encode(p, cfg, src_embeds)
+    return encode(p, cfg, ctx["audio_frames"])
 
 
 def _brick_flops(cfg: ModelConfig, kind: str) -> float:
@@ -138,34 +193,47 @@ def decompose(cfg: ModelConfig) -> BrickGraph:
     """The paper's model decomposition for any assigned arch."""
     bricks: List[Brick] = []
 
-    def add(name, kind, keys, fn, static=False, quant="bf16"):
-        bricks.append(Brick(name, kind, tuple(keys), fn, static_shape=static,
-                            quant_label=quant,
+    def add(name, kind, keys, fn, ins, out, static=False, quant="bf16"):
+        bricks.append(Brick(name, kind, tuple(keys), fn,
+                            in_ports=tuple(ins), out_port=out,
+                            static_shape=static, quant_label=quant,
                             flops_per_token=_brick_flops(cfg, kind)))
 
     if cfg.vlm:
-        # frontend is a STUB per the assignment: input_specs() provides
-        # precomputed patch features; the projector onward is real.
-        add("vision_frontend", "frontend", (), lambda p, c, f: f,
+        add("vision_frontend", "frontend", (), _apply_vision_frontend,
+            ins=(Port("vision_feats"),), out=Port("patches"),
             static=True, quant="fp16")
         add("projector", "projector", ("vis_proj",), _apply_projector,
+            ins=(Port("patches"),), out=Port("vision_embeds"),
             static=True, quant="fp16")
     if cfg.encdec:
-        add("audio_frontend", "frontend", (), lambda p, c, f: f,
+        add("audio_frontend", "frontend", (), _apply_audio_frontend,
+            ins=(Port("src_embeds"),), out=Port("audio_frames"),
             static=True, quant="fp16")
         add("audio_encoder", "encoder",
             ("enc_layers", "enc_final_norm"), _apply_audio_encoder,
+            ins=(Port("audio_frames"),), out=Port("enc_out"),
             static=True, quant="fp16")
-    add("embedding", "embed", ("embed",), _apply_embed, quant="fp16")
-    add("decoder", "decoder",
-        ("layers",) if not cfg.encdec else ("dec_layers",),
-        _apply_decoder, quant="q4f16")
+    tok_port = Port("tgt_tokens" if cfg.encdec else "tokens", "int")
+    embed_ins = [tok_port]
+    if cfg.vlm:
+        embed_ins.append(Port("vision_embeds", optional=True))
+    add("embedding", "embed", ("embed",), _apply_embed,
+        ins=embed_ins, out=Port("hidden"), quant="fp16")
+    if cfg.encdec:
+        add("decoder", "decoder", ("dec_layers",), _apply_encdec_decoder,
+            ins=(Port("hidden"), Port("enc_out")), out=Port("hidden"),
+            quant="q4f16")
+    else:
+        add("decoder", "decoder", ("layers",), _apply_decoder,
+            ins=(Port("hidden"),), out=Port("hidden"), quant="q4f16")
     head_keys = ["final_norm"]
     if not cfg.tie_embeddings:
         head_keys.append("lm_head")
     else:
         head_keys.append("embed")             # tied: head reads the table
-    add("head", "head", head_keys, _apply_head, quant="q4f16")
+    add("head", "head", head_keys, _apply_head,
+        ins=(Port("hidden"),), out=Port("logits"), quant="q4f16")
     return BrickGraph(cfg, bricks)
 
 

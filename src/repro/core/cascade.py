@@ -6,136 +6,40 @@ loaded, performs its task, is released, and passes only the *minimal* output
 (a text string or an embedding vector) to the next stage: "a lightweight,
 domino-like chain" whose peak memory is max(brick) instead of sum(bricks).
 
-Implementation: brick params live host-side (numpy); ``run_once`` device_puts
-one brick's params, applies it, then deletes the device buffers before the
-next brick loads.  A high-water-mark tracker proves the max-not-sum claim
-(benchmarks/fig8_power.py and tests/test_cascade.py assert it).
+The cascade is now a *residency strategy*, not an interpreter: it compiles
+the BrickGraph with :func:`repro.core.plan.compile_plan` at
+``residency="one-brick"`` — brick params live host-side (numpy) and every
+``run_once`` loads one brick, applies it through the same jit-cached
+callable the serving engine uses, then deletes the device buffers before
+the next brick loads.  There is no per-kind dispatch here; the dataflow is
+the bricks' declared ports.  The high-water-mark trace proves the
+max-not-sum claim (benchmarks/fig8_power.py and tests/test_cascade.py).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.core.bricks import BrickGraph
+from repro.core.plan import PlanEvent, PlanTrace, compile_plan
 
-from repro.core.bricks import Brick, BrickGraph
-
-
-def _nbytes(tree) -> int:
-    total = 0
-    for leaf in jax.tree.leaves(tree):
-        if hasattr(leaf, "nbytes"):
-            total += int(leaf.nbytes)
-        elif hasattr(leaf, "size"):
-            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
-    return total
-
-
-@dataclass
-class CascadeEvent:
-    brick: str
-    phase: str                 # load | execute | release
-    t: float
-    resident_bytes: int
-
-
-@dataclass
-class CascadeTrace:
-    events: List[CascadeEvent] = field(default_factory=list)
-    peak_bytes: int = 0
-    sum_bytes: int = 0         # what a monolithic load would have held
-
-    def record(self, brick, phase, resident):
-        self.events.append(CascadeEvent(brick, phase, time.time(), resident))
-        self.peak_bytes = max(self.peak_bytes, resident)
+# historical names, still the public API of this module
+CascadeEvent = PlanEvent
+CascadeTrace = PlanTrace
 
 
 class CascadeRunner:
-    """Event-triggered sequential pipeline over a BrickGraph."""
+    """Event-triggered sequential pipeline over a BrickGraph: a thin
+    ``resident="one-brick"`` strategy over the shared ExecutionPlan."""
 
     def __init__(self, graph: BrickGraph, host_params: Dict[str, Any]):
-        """host_params: the full param pytree as HOST (numpy) arrays —
-        cascade mode keeps nothing resident between events."""
+        """host_params: the full param pytree — held HOST-side (numpy) by
+        the plan; cascade mode keeps nothing resident between events."""
         self.graph = graph
-        self.host_params = jax.tree.map(np.asarray, host_params)
         self.cfg = graph.cfg
-
-    def _load(self, brick: Brick):
-        sub = brick.params_of(self.host_params)
-        return jax.tree.map(jnp.asarray, sub)
+        self.plan = compile_plan(graph, host_params, residency="one-brick")
 
     def run_once(self, inputs: Dict[str, Any],
-                 trace: Optional[CascadeTrace] = None) -> Any:
-        """One event-triggered inference pass: embed -> decoder -> head
-        (plus frontend/projector/encoder bricks when the arch has them).
-        Returns final logits."""
-        trace = trace if trace is not None else CascadeTrace()
-        trace.sum_bytes = _nbytes(self.host_params)
-        resident = 0
-        x: Any = None
-        vision_embeds = None
-        enc_out = None
-
-        for brick in self.graph.bricks:
-            dev_params = self._load(brick)
-            resident += _nbytes(dev_params)
-            trace.record(brick.name, "load", resident)
-
-            if brick.kind == "frontend":
-                out = inputs.get("vision_feats", inputs.get("src_embeds"))
-            elif brick.kind == "projector":
-                vision_embeds = brick.apply(dev_params, self.cfg,
-                                            inputs["vision_feats"])
-                out = vision_embeds
-            elif brick.kind == "encoder":
-                enc_out = brick.apply(dev_params, self.cfg,
-                                      inputs["src_embeds"])
-                out = enc_out
-            elif brick.kind == "embed":
-                tok = inputs.get("tokens", inputs.get("tgt_tokens"))
-                x = brick.apply(dev_params, self.cfg, tok, vision_embeds)
-                out = x
-            elif brick.kind == "decoder":
-                if self.cfg.encdec:
-                    # enc-dec decoder consumes x from the embed brick
-                    x = self._encdec_decoder(dev_params, x, enc_out)
-                else:
-                    x = brick.apply(dev_params, self.cfg, x)
-                out = x
-            else:  # head
-                out = brick.apply(dev_params, self.cfg, x)
-            out = jax.block_until_ready(out)
-            trace.record(brick.name, "execute", resident)
-
-            # release: only `out` survives to the next stage
-            for leaf in jax.tree.leaves(dev_params):
-                if hasattr(leaf, "delete"):
-                    try:
-                        leaf.delete()
-                    except Exception:
-                        pass
-            resident -= _nbytes(dev_params)
-            trace.record(brick.name, "release", resident)
-            del dev_params
-        return out, trace
-
-    def _encdec_decoder(self, dev_params, x, enc_out):
-        from repro.models import attention as attn
-        from repro.models import mlp as mlp_mod
-        from repro.models.common import apply_norm, apply_rope, \
-            default_positions
-        from repro.models.encdec import _dec_layer_full
-        cfg = self.cfg
-        B, S, _ = x.shape
-        rope_fn = lambda t: apply_rope(t, default_positions(B, S),
-                                       cfg.rope_theta)
-
-        def body(xc, lp):
-            xc, _ = _dec_layer_full(cfg, lp, xc, enc_out, rope_fn, False, 0)
-            return xc, None
-
-        x, _ = jax.lax.scan(body, x, dev_params["dec_layers"])
-        return x
+                 trace: Optional[CascadeTrace] = None):
+        """One event-triggered inference pass through every brick.
+        Returns (final logits, residency trace)."""
+        return self.plan.run(inputs, trace=trace)

@@ -1,0 +1,398 @@
+"""ExecutionPlan — the one brick runtime (paper §3.1–3.2 made executable).
+
+This module compiles ``(BrickGraph, Placement, TABM ring, SubmeshPipes)``
+into *bound, jit-cached per-brick callables* with typed input/output ports.
+It is the single execution path behind the serving engine, the cascade
+runner, and the scheduler — the three previously divergent interpreters of
+a BrickGraph.
+
+Paper-term → API mapping:
+
+* **Model decomposition (§3.1)** — the :class:`~repro.core.bricks.BrickGraph`
+  chain with per-brick :class:`~repro.core.bricks.Port` declarations.  The
+  plan validates the wiring at compile time (every required input port is
+  either produced upstream or named an external input) and type-checks port
+  values (int tokens vs float features) when they bind.
+* **Module-level offloading (§3.2)** — a ``Placement`` from
+  :func:`repro.core.scheduler.schedule` binds each brick to an
+  :class:`~repro.core.scheduler.Accelerator`.  When accelerators carry real
+  submeshes (pod mode), brick weights are device_put onto their submesh at
+  compile time and every cross-accelerator edge gets a
+  :class:`~repro.core.scheduler.SubmeshPipe` — a sharding-preserving
+  device_put over ICI, never through the host.
+* **Embeddings zero-copy transfer / TABM (§3.2)** — the edge whose producer
+  emits ``vision_embeds`` routes through a
+  :class:`~repro.core.tabm.RingBuffer`: :meth:`ExecutionPlan.produce` runs
+  the upstream (encoder-side) stages and commits into a slot (donation =
+  the TPU zero-copy), :meth:`ExecutionPlan.consume` binds the oldest READY
+  slot for the decoder side, and a full ring stalls the producer — the
+  backpressure signal the engine's admission loop obeys.
+* **On-demand cascade (§3.2, Fig. 2)** — ``residency="one-brick"`` keeps
+  params host-side and runs each brick load → execute → release, recording
+  a :class:`PlanTrace` that proves peak memory is max(brick) not
+  sum(bricks).  ``residency="resident"`` (default) binds all brick params
+  once for serving.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bricks import Brick, BrickGraph, Port
+
+
+class PlanError(RuntimeError):
+    pass
+
+
+def _nbytes(tree) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        elif hasattr(leaf, "size"):
+            total += int(leaf.size) * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# trace (the cascade's residency evidence; cheap enough to always record)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanEvent:
+    brick: str
+    phase: str                 # load | execute | release
+    t: float
+    resident_bytes: int
+
+
+@dataclass
+class PlanTrace:
+    events: List[PlanEvent] = field(default_factory=list)
+    peak_bytes: int = 0
+    sum_bytes: int = 0         # what a monolithic load would have held
+
+    def record(self, brick, phase, resident):
+        self.events.append(PlanEvent(brick, phase, time.time(), resident))
+        self.peak_bytes = max(self.peak_bytes, resident)
+
+
+# ---------------------------------------------------------------------------
+# compiled steps
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanStep:
+    """One brick bound to its accelerator, params, and jitted callable."""
+
+    brick: Brick
+    fn: Callable                       # jitted (params, ctx) -> out
+    params: Any                        # device tree (resident) | host tree
+    accel: Optional[object] = None     # scheduler.Accelerator or None
+    inbound: Dict[str, Callable] = field(default_factory=dict)
+    # inbound: port name -> transfer fn applied when the value was produced
+    # on a different accelerator (SubmeshPipe.transfer / device_put)
+
+
+class ExecutionPlan:
+    """Bound, executable form of a BrickGraph.
+
+    Built by :func:`compile_plan`; see the module docstring for the paper
+    mapping.  The three consumers:
+
+    * ``plan.run(inputs)`` — one full forward pass (logits), used by tests,
+      examples, and the cascade runner.
+    * ``plan.produce / consume / release`` — the TABM edge split into its
+      producer/consumer halves, used by the serving engine so vision
+      encoding and decoder admission decouple through the ring.
+    * ``plan.brick_params(name)`` — the placement-bound weights, used by
+      launchers that keep specialized compiled fns (cached prefill/decode).
+    """
+
+    def __init__(self, graph: BrickGraph, steps: List[PlanStep], *,
+                 residency: str, tabm=None, tabm_producer: Optional[int] = None,
+                 tabm_transfer: Optional[Callable] = None,
+                 input_ports: Tuple[Port, ...] = ()):
+        self.graph = graph
+        self.cfg = graph.cfg
+        self.steps = steps
+        self.residency = residency
+        self.tabm = tabm
+        self._tabm_producer = tabm_producer
+        self._tabm_transfer = tabm_transfer
+        self.input_ports = input_ports
+        # "what a monolithic load would have held": each top-level param
+        # entry once — tied-embedding archs share "embed" between the
+        # embedding and head bricks and must not count it twice
+        merged: Dict[str, Any] = {}
+        for s in steps:
+            merged.update(s.params)
+        self._sum_bytes = _nbytes(merged)
+
+    # -- introspection ------------------------------------------------------
+    def brick_params(self, name: str) -> Any:
+        for s in self.steps:
+            if s.brick.name == name:
+                return s.params
+        raise KeyError(name)
+
+    def describe(self) -> str:
+        rows = []
+        for s in self.steps:
+            ins = ",".join(p.name + ("?" if p.optional else "")
+                           for p in s.brick.in_ports)
+            acc = s.accel.name if s.accel is not None else "-"
+            rows.append(f"{s.brick.name}({ins})->{s.brick.out_port.name}@{acc}")
+        return " | ".join(rows)
+
+    # -- execution ----------------------------------------------------------
+    @staticmethod
+    def _check_port(port: Port, value):
+        kind = jnp.asarray(value).dtype.kind if not hasattr(value, "dtype") \
+            else jnp.dtype(value.dtype).kind
+        want = "iu" if port.dtype_kind == "int" else "fV"
+        if kind not in want + ("b" if port.dtype_kind == "int" else ""):
+            raise PlanError(f"port {port.name!r} expects {port.dtype_kind} "
+                            f"values, got dtype kind {kind!r}")
+
+    def _gather(self, step: PlanStep, env, env_src):
+        ctx = {}
+        for port in step.brick.in_ports:
+            if port.name not in env or env[port.name] is None:
+                if port.optional:
+                    continue
+                raise PlanError(f"brick {step.brick.name!r} missing required "
+                                f"input port {port.name!r}")
+            v = env[port.name]
+            self._check_port(port, v)
+            src = env_src.get(port.name)
+            if src is not step.accel and port.name in step.inbound:
+                v = step.inbound[port.name](v)
+            ctx[port.name] = v
+        return ctx
+
+    def _load(self, step: PlanStep):
+        if self.residency == "one-brick":
+            return jax.tree.map(jnp.asarray, step.params)
+        return step.params
+
+    def _unload(self, dev_params):
+        for leaf in jax.tree.leaves(dev_params):
+            if hasattr(leaf, "delete"):
+                try:
+                    leaf.delete()
+                except Exception:
+                    pass
+
+    def run(self, inputs: Dict[str, Any],
+            trace: Optional[PlanTrace] = None) -> Tuple[Any, PlanTrace]:
+        """One full inference pass through every brick.  Returns the final
+        brick's output (logits) and the residency trace.  When a TABM ring
+        is attached, the vision_embeds edge really goes through a slot
+        (commit -> bind -> release), so the ring lifecycle is exercised on
+        every pass."""
+        trace = trace if trace is not None else PlanTrace()
+        trace.sum_bytes = max(trace.sum_bytes, self._sum_bytes)
+        one_brick = self.residency == "one-brick"
+        resident = 0 if one_brick else self._sum_bytes
+        env: Dict[str, Any] = dict(inputs)
+        env_src: Dict[str, Any] = {k: None for k in env}
+        out = None
+        ring_slot = None
+        for i, step in enumerate(self.steps):
+            dev_params = self._load(step)
+            if one_brick:
+                resident += _nbytes(dev_params)
+            trace.record(step.brick.name, "load", resident)
+
+            ctx = self._gather(step, env, env_src)
+            out = step.fn(dev_params, ctx)
+            if one_brick:
+                out = jax.block_until_ready(out)
+            trace.record(step.brick.name, "execute", resident)
+
+            if self.tabm is not None and i == self._tabm_producer:
+                out, ring_slot = self._through_ring(out)
+            env[step.brick.out_port.name] = out
+            env_src[step.brick.out_port.name] = step.accel
+
+            if one_brick:
+                # release: only `out` survives to the next stage
+                self._unload(dev_params)
+                resident -= _nbytes(dev_params)
+            trace.record(step.brick.name, "release", resident)
+            del dev_params
+        if ring_slot is not None:
+            self.tabm.release(ring_slot)
+        return out, trace
+
+    def _through_ring(self, out):
+        """Synchronous TABM crossing inside run(): commit the producer's
+        output to a slot, immediately bind it back as the consumer view."""
+        if out.shape[0] != 1:
+            raise PlanError("TABM slots hold one request's embeds (batch 1)")
+        slot = self.tabm.acquire_write()
+        if slot is None:
+            raise PlanError("TABM ring full inside a synchronous run(); "
+                            "a prior consumer never released its slot")
+        v = out if self._tabm_transfer is None else self._tabm_transfer(out)
+        self.tabm.commit_write(slot, v[0])
+        got = self.tabm.acquire_read()
+        assert got is not None
+        s, view, n = got
+        return view[None, :n], s
+
+    # -- TABM edge, split for the engine's producer/consumer decoupling -----
+    def produce(self, inputs: Dict[str, Any]) -> Optional[int]:
+        """Producer half: acquire a ring slot, run the stages upstream of
+        the TABM edge, commit.  Returns the slot id, or None when the ring
+        is FULL — the caller must stall and retry (backpressure), never
+        bypass the ring."""
+        if self.tabm is None:
+            raise PlanError("plan compiled without a TABM ring")
+        slot = self.tabm.acquire_write()
+        if slot is None:
+            return None
+        try:
+            env: Dict[str, Any] = dict(inputs)
+            env_src: Dict[str, Any] = {k: None for k in env}
+            out = None
+            for step in self.steps[: self._tabm_producer + 1]:
+                ctx = self._gather(step, env, env_src)
+                out = step.fn(self._load(step), ctx)
+                env[step.brick.out_port.name] = out
+                env_src[step.brick.out_port.name] = step.accel
+            if out.shape[0] != 1:
+                raise PlanError("TABM slots hold one request's embeds")
+            v = out if self._tabm_transfer is None else self._tabm_transfer(out)
+            self.tabm.commit_write(slot, v[0])
+        except Exception:
+            self.tabm.abort_write(slot)
+            raise
+        return slot
+
+    def consume(self):
+        """Consumer half: bind the oldest READY slot.  Returns
+        (slot, view, n_tokens) or None when nothing is ready."""
+        if self.tabm is None:
+            raise PlanError("plan compiled without a TABM ring")
+        return self.tabm.acquire_read()
+
+    def release(self, slot: int):
+        self.tabm.release(slot)
+
+
+# ---------------------------------------------------------------------------
+# compiler
+# ---------------------------------------------------------------------------
+
+def _bind_params(brick: Brick, params, accel, residency: str):
+    sub = brick.params_of(params)
+    if residency == "one-brick":
+        return jax.tree.map(np.asarray, sub)       # host-side until loaded
+    if accel is not None and getattr(accel, "mesh", None) is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(sub, NamedSharding(accel.mesh, P()))
+    return sub
+
+
+def _make_fn(brick: Brick, cfg):
+    # one jit per brick; jit's own cache handles per-shape retraces, so the
+    # engine/cascade/scheduler paths all share compiled executables
+    return jax.jit(lambda p, ctx, _b=brick: _b.apply(p, cfg, ctx))
+
+
+def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
+                 tabm=None, residency: str = "resident") -> ExecutionPlan:
+    """Compile a BrickGraph (+ optional Placement and TABM ring) into an
+    :class:`ExecutionPlan`.
+
+    placement: a :class:`~repro.core.scheduler.Placement` or a raw
+        ``{brick_name: accel_name}`` dict; requires ``accels``.
+    accels: the accelerator list the placement names refer to.  Accelerators
+        with a real ``mesh`` get their brick weights device_put onto the
+        submesh and SubmeshPipe transfers on cross-accelerator edges.
+    tabm: a :class:`~repro.core.tabm.RingBuffer` for the vision_embeds
+        edge (the paper's zero-copy hand-off).
+    residency: "resident" (serving: params bound once) | "one-brick"
+        (cascade: load -> execute -> release, host-side between events).
+    """
+    if residency not in ("resident", "one-brick"):
+        raise PlanError(f"unknown residency {residency!r}")
+    assignment = getattr(placement, "assignment", placement)
+    by_name = {a.name: a for a in (accels or [])}
+    if assignment:
+        missing = [b.name for b in graph.bricks if b.name not in assignment]
+        if missing:
+            raise PlanError(f"placement misses bricks: {missing}")
+        unknown = sorted(set(assignment.values()) - set(by_name))
+        if unknown:
+            raise PlanError(f"placement names unknown accelerators: {unknown}")
+
+    # wiring validation + external input discovery
+    produced: Dict[str, Brick] = {}
+    externals: List[Port] = []
+    for b in graph.bricks:
+        for p in b.in_ports:
+            if p.name not in produced and not p.optional \
+                    and all(e.name != p.name for e in externals):
+                externals.append(p)
+        produced[b.out_port.name] = b
+
+    steps: List[PlanStep] = []
+    src_accel: Dict[str, Any] = {}                 # port -> producing accel
+    pipes: Dict[Tuple[str, str], Any] = {}
+    for b in graph.bricks:
+        accel = by_name[assignment[b.name]] if assignment else None
+        inbound: Dict[str, Callable] = {}
+        if accel is not None and accel.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.core.scheduler import SubmeshPipe
+            dst_sharding = NamedSharding(accel.mesh, P())
+            for p in b.in_ports:
+                src = src_accel.get(p.name)
+                if src is accel:
+                    continue
+                if src is not None and src.mesh is not None:
+                    key = (src.name, accel.name)
+                    if key not in pipes:
+                        pipes[key] = SubmeshPipe(src, accel, P())
+                    inbound[p.name] = pipes[key].transfer
+                else:       # external input (or host-side producer)
+                    inbound[p.name] = (
+                        lambda v, s=dst_sharding: jax.device_put(v, s))
+        steps.append(PlanStep(
+            brick=b, fn=_make_fn(b, graph.cfg),
+            params=_bind_params(b, params, accel, residency),
+            accel=accel, inbound=inbound))
+        src_accel[b.out_port.name] = accel
+
+    # the TABM edge: the brick producing vision_embeds hands off through the
+    # ring; the transfer (if the consumer sits on another submesh) happens
+    # producer-side so the pool can live consumer-side
+    tabm_producer = tabm_transfer = None
+    if tabm is not None:
+        for i, s in enumerate(steps):
+            if s.brick.out_port.name == "vision_embeds":
+                tabm_producer = i
+                break
+        if tabm_producer is None:
+            raise PlanError("tabm ring given but no brick produces "
+                            "'vision_embeds'")
+        nxt = steps[tabm_producer + 1] if tabm_producer + 1 < len(steps) \
+            else None
+        if nxt is not None and "vision_embeds" in nxt.inbound:
+            tabm_transfer = nxt.inbound.pop("vision_embeds")
+
+    plan = ExecutionPlan(graph, steps, residency=residency, tabm=tabm,
+                         tabm_producer=tabm_producer,
+                         tabm_transfer=tabm_transfer,
+                         input_ports=tuple(externals))
+    plan.pipes = pipes
+    return plan

@@ -217,8 +217,8 @@ def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
     lat = e = 0.0
     per = {}
     prev = None
-    for b, a in zip(bricks, order):
-        c = costs[bricks.index(b)][a]
+    for i, (b, a) in enumerate(zip(bricks, order)):
+        c = costs[i][a]
         per[b.name] = c
         lat += c.latency_s
         e += c.energy_j

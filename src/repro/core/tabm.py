@@ -54,11 +54,14 @@ class TABMError(RuntimeError):
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_slot(pool: jnp.ndarray, slot: jnp.ndarray,
-                embeds: jnp.ndarray, n_tokens: jnp.ndarray) -> jnp.ndarray:
+                embeds: jnp.ndarray) -> jnp.ndarray:
     """pool (n_slots, max_tokens, d) <- embeds (tokens, d) at `slot`.
 
     The pool is DONATED: XLA writes in place (alias), the paper's
-    'NPU writes embeddings directly into a buffer slot'."""
+    'NPU writes embeddings directly into a buffer slot'.  The slot's padded
+    tail is zeroed by construction (fresh zeros buffer), so no dead
+    valid-length argument rides through the jitted signature — the host
+    control plane tracks n_tokens in ``self.tokens``."""
     t, d = embeds.shape
     padded = jnp.zeros((pool.shape[1], d), pool.dtype)
     padded = jax.lax.dynamic_update_slice(padded, embeds.astype(pool.dtype),
@@ -129,14 +132,22 @@ class RingBuffer:
         n = embeds.shape[0]
         if n > self.max_tokens:
             raise TABMError(f"{n} tokens > slot capacity {self.max_tokens}")
-        self.pool = _write_slot(self.pool, jnp.asarray(slot), embeds,
-                                jnp.asarray(n))
+        self.pool = _write_slot(self.pool, jnp.asarray(slot), embeds)
         self.tokens[slot] = n
         self._transition(slot, READY_TO_READ)
         self.stats["writes"] += 1
 
     def abort_write(self, slot: int):
+        """Producer abandons an acquired slot.  FIFO ring: only the most
+        recently acquired slot can abort, and the write pointer rewinds to
+        it — otherwise a later commit would land ahead of the read pointer
+        and wedge the ring (reads stuck on a FREE slot)."""
+        if self.states[slot] == ALLOCATED_FOR_WRITE \
+                and (slot + 1) % self.n_slots != self._write_ptr:
+            raise TABMError(f"abort_write out of order: slot {slot} is not "
+                            f"the most recent acquire")
         self._transition(slot, FREE)
+        self._write_ptr = slot
 
     def acquire_read(self) -> Optional[Tuple[int, jnp.ndarray, int]]:
         """Consumer takes the oldest READY slot: (slot, view, n_tokens)."""

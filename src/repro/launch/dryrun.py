@@ -1,10 +1,16 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if "--xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512"
+                               ).strip()
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
-The two lines above MUST run before any jax import — jax locks the device
+The lines above MUST run before any jax import — jax locks the device
 count at first init.  512 placeholder host devices back both the 16x16
-single-pod mesh and the 2x16x16 multi-pod mesh.
+single-pod mesh and the 2x16x16 multi-pod mesh; unrelated pre-set
+XLA_FLAGS are preserved, and a pre-set device count wins so ``--reduced``
+CI runs can use 8 devices — see scripts/check.sh.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b \
@@ -125,13 +131,21 @@ def pick_mode(cfg, cell, requested: str = "auto") -> str:
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool, out_dir=None,
-             verbose=True, mode: str = "tp", overrides=None, quant=None):
+             verbose=True, mode: str = "tp", overrides=None, quant=None,
+             reduced=False):
     import dataclasses
     cfg = get_config(arch)
     if overrides:
         cfg = dataclasses.replace(cfg, **overrides)
     cell = SHAPES[shape]
     mesh_name = "2x16x16" if multi_pod else "16x16"
+    if reduced:
+        # CI-sized cell: same lower+compile+roofline path, 8 host devices
+        cfg = cfg.reduced()
+        cell = dataclasses.replace(cell, name=cell.name + "-reduced",
+                                   seq_len=min(cell.seq_len, 256),
+                                   global_batch=min(cell.global_batch, 8))
+        mesh_name = "2x4"
     ok, why = cell_applicable(cfg, cell)
     rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "mode": mode,
            "quant": quant}
@@ -142,7 +156,10 @@ def run_cell(arch: str, shape: str, multi_pod: bool, out_dir=None,
             print(f"[{arch} x {shape} x {mesh_name}] SKIP: {why}")
         return rec
 
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if reduced:
+        mesh = jax.make_mesh((2, 4), ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     t0 = time.time()
     try:
@@ -196,6 +213,9 @@ def main(argv=None):
                     help="quant profile for serving cells, e.g. "
                          "nanomind-default (the paper's W4A16)")
     ap.add_argument("--print-hlo", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CI mode: reduced config + shrunken cell on a 2x4 "
+                         "mesh (set XLA_FLAGS device_count=8 in the env)")
     args = ap.parse_args(argv)
     mode = pick_mode(get_config(args.arch), SHAPES[args.shape], args.mode)
     overrides = {}
@@ -207,7 +227,8 @@ def main(argv=None):
                 if not isinstance(getattr(get_config(args.arch), k), bool) \
                 else v.lower() == "true"
     rec = run_cell(args.arch, args.shape, args.multipod, args.out, mode=mode,
-                   overrides=overrides, quant=args.quant)
+                   overrides=overrides, quant=args.quant,
+                   reduced=args.reduced)
     if rec.get("status") == "error":
         print(rec.get("traceback", ""), file=sys.stderr)
         sys.exit(1)

@@ -80,6 +80,10 @@ def main(argv=None):
               f"{np.percentile(lat, 95):.2f}s")
     print(f"  memory: weights={mem['weights']/1e6:.1f}MB "
           f"kv={mem['kv_pool']/1e6:.1f}MB tabm={mem['tabm']/1e6:.2f}MB")
+    if eng.tabm is not None:
+        # every vision hand-off really went through the ring: writes ==
+        # reads == served vlm requests, stalls = producer backpressure
+        print(f"  tabm ring: {eng.tabm.stats}")
 
 
 if __name__ == "__main__":

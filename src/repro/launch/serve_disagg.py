@@ -4,8 +4,11 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 The pod's "model" axis is sliced into two profile-heterogeneous submeshes
 (core/scheduler.make_virtual_accelerators): the encoder slice runs the
-static-shape vision brick (≙ the paper's NPU), the decoder slice runs the
-W4A16 language model (≙ the GPU).  The hand-off is the TABM edge:
+static-shape vision bricks (≙ the paper's NPU), the decoder slice runs the
+W4A16 language model (≙ the GPU).  The placement is no longer only
+cost-modeled: it compiles to an ExecutionPlan whose brick weights are
+device_put onto their submesh and whose cross-submesh edges are SubmeshPipes,
+so the hand-off really moves over ICI:
 
     encoder submesh --(SubmeshPipe: sharding-preserving device_put,
                        pure ICI, no host round trip)--> ring slot
@@ -24,7 +27,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.scheduler import SubmeshPipe, make_virtual_accelerators
+from repro.core.bricks import decompose
+from repro.core.plan import compile_plan
+from repro.core.scheduler import (make_virtual_accelerators,
+                                  populate_brick_bytes, schedule)
 from repro.core.tabm import RingBuffer
 from repro.launch.steps import init_params
 from repro.models import model as M
@@ -33,26 +39,38 @@ from repro.models import model as M
 def main():
     cfg = get_config("llava-onevision-0.5b").reduced()
     mesh = jax.make_mesh((2, 4), ("data", "model"))
-    enc_acc, dec_acc = make_virtual_accelerators(mesh, fractions=(0.25, 0.75))
+    accels = make_virtual_accelerators(mesh, fractions=(0.25, 0.75))
+    enc_acc, dec_acc = accels
     print(f"pod mesh {mesh.devices.shape}; encoder submesh "
           f"{enc_acc.mesh.devices.shape}, decoder submesh "
           f"{dec_acc.mesh.devices.shape}")
 
     params = init_params(jax.random.PRNGKey(0), cfg)
-    # encoder brick weights live on the encoder submesh; decoder weights on
-    # the decoder submesh — module-level placement, the paper's core move
-    enc_params = jax.device_put(
-        params["vis_proj"], NamedSharding(enc_acc.mesh, P()))
-    dec_params = jax.device_put(
-        {k: v for k, v in params.items() if k != "vis_proj"},
-        NamedSharding(dec_acc.mesh, P()))
+    graph = decompose(cfg)
+    populate_brick_bytes(graph, params)
+    # the cost model's own pick, for reference
+    print("scheduler:", schedule(graph, accels,
+                                 n_tokens=cfg.vision_tokens))
+    # module-level placement, the paper's core move: static-shape vision
+    # bricks on the encoder submesh, the language model decoder-side
+    assignment = {b.name: (enc_acc.name if b.static_shape else dec_acc.name)
+                  for b in graph.bricks}
 
-    @jax.jit
-    def encode(vp, feats):
-        v = jax.nn.gelu(jnp.einsum("bnf,fd->bnd",
-                                   feats.astype(cfg.compute_dtype),
-                                   vp["w1"]))
-        return jnp.einsum("bnd,de->bne", v, vp["w2"])
+    # TABM pool lives decoder-side; the plan's SubmeshPipe moves encoder
+    # output over ICI into the ring
+    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
+                      dim=cfg.d_model,
+                      sharding=NamedSharding(dec_acc.mesh, P()))
+    plan = compile_plan(graph, params, placement=assignment, accels=accels,
+                        tabm=ring)
+    print("plan:", plan.describe())
+
+    # decoder-side weights come from the plan's placement binding (already
+    # device_put onto the decoder submesh) — prefill/decode keep their own
+    # cache-building compiled fns over those bound params
+    dec_params = {}
+    for name in ("embedding", "decoder", "head"):
+        dec_params.update(plan.brick_params(name))
 
     def prefill(p, tokens, vision_embeds):
         x = p["embed"][tokens]
@@ -73,28 +91,18 @@ def main():
     decode = jax.jit(lambda p, t, c: M.lm_decode_step(p, cfg, t, c),
                      donate_argnums=(2,))
 
-    # TABM pool lives decoder-side; the pipe moves encoder output over ICI
-    pipe = SubmeshPipe(enc_acc, dec_acc, P())
-    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
-                      dim=cfg.d_model,
-                      sharding=NamedSharding(dec_acc.mesh, P()))
-
     rng = np.random.default_rng(0)
     t0 = time.time()
     for event in range(3):
         feats = jnp.asarray(rng.standard_normal(
             (1, cfg.vision_tokens, cfg.vision_feat_dim)) * 0.02,
             jnp.float32)
-        # 1. encoder brick on the "NPU" submesh
-        emb = encode(enc_params, jax.device_put(
-            feats, NamedSharding(enc_acc.mesh, P())))
-        # 2. ICI hand-off + TABM slot (zero-copy via donation)
-        emb_dec = pipe.transfer(emb)
-        slot = ring.acquire_write()
-        ring.commit_write(slot, emb_dec[0])
-        got = ring.acquire_read()
-        s, view, n = got
-        # 3. decoder prefill binds the slot; then a few decode steps
+        # 1+2. producer half: frontend + projector bricks on the "NPU"
+        # submesh, ICI hand-off, TABM commit (zero-copy via donation)
+        slot = plan.produce({"vision_feats": feats})
+        assert slot is not None
+        # 3. consumer half: decoder prefill binds the slot; then decode
+        s, view, n = plan.consume()
         tokens = jnp.asarray(rng.integers(3, 200, (1, 16)), jnp.int32)
         logits, cache = prefill(dec_params, tokens, view[None, :n])
         out = [int(jnp.argmax(logits[0]))]
@@ -102,7 +110,7 @@ def main():
             lg, cache = decode(dec_params,
                                jnp.asarray([[out[-1]]], jnp.int32), cache)
             out.append(int(jnp.argmax(lg[0])))
-        ring.release(s)
+        plan.release(s)
         print(f"event {event}: encoder@{enc_acc.mesh.devices.shape} -> "
               f"tabm slot {s} -> decoder@{dec_acc.mesh.devices.shape}: "
               f"{out}")

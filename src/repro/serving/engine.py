@@ -1,15 +1,24 @@
 """Continuous-batching serving engine with the paper's full pipeline:
 
-  modality frontend (stub) -> encoder/projector brick -> TABM ring slot ->
+  modality frontend (stub) -> projector brick -> TABM ring slot ->
   decoder prefill (bucketed static shapes) -> slot cache -> batched decode
 
-Paper mechanisms wired in:
-* **module-level offloading** — when the engine is built with submeshes
-  (core/scheduler.make_virtual_accelerators) the encoder brick runs on the
-  "NPU" slice and decode on the "GPU" slice, hand-off via SubmeshPipe;
-  single-mesh mode keeps the same code path with a no-op pipe.
-* **TABM** — encoder outputs land in a RingBuffer slot; the decoder binds
-  the slot as prefill input (zero-copy via donation; see core/tabm.py).
+The vision path is not reimplemented here: the engine compiles the
+BrickGraph into an :class:`repro.core.plan.ExecutionPlan` and drives the
+plan's TABM edge as a real producer/consumer pair —
+
+* **producer** (``_stage``): ``plan.produce`` runs the frontend/projector
+  bricks and commits the embeds into a ring slot, possibly several steps
+  before the request is admitted.  A FULL ring stalls staging (requests
+  stay queued) — backpressure, never a silent ring bypass.
+* **consumer** (``_bind_vision``): at admission the oldest READY slot is
+  bound as the prefill's vision input (zero-copy via donation; see
+  core/tabm.py) and released once the prefill has consumed it.
+
+Other paper mechanisms wired in:
+* **module-level offloading** — the same plan compiles against submesh
+  accelerators (core/scheduler.make_virtual_accelerators) for the pod-mode
+  NPU/GPU split; see launch/serve_disagg.py.
 * **battery-aware execution** — admission/batch knobs come from the
   three-state policy; CRITICAL switches to cascade one-shot inference.
 * **static shapes** — prompts bucket-pad (kv_cache.bucket_length): one
@@ -29,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.bricks import decompose
+from repro.core.plan import compile_plan
 from repro.core.power import BatteryAwareExecutor, PMU, PowerState
 from repro.core.tabm import RingBuffer
 from repro.models import model as M
@@ -49,7 +60,9 @@ class Request:
     first_token_t: Optional[float] = None
     finish_t: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
-    slot: Optional[int] = None
+    slot: Optional[int] = None                 # KV-cache slot once admitted
+    tabm_slot: Optional[int] = None            # ring slot once staged
+    staged: bool = False                       # producer half already ran
 
     @property
     def e2e_latency(self) -> Optional[float]:
@@ -91,6 +104,9 @@ class ServingEngine:
         self.tabm = RingBuffer(n_slots=max(2, n_slots // 2),
                                max_tokens=cfg.vision_tokens or 1,
                                dim=cfg.d_model) if cfg.vlm else None
+        # the one brick runtime: vision staging routes through the plan's
+        # projector brick and TABM edge (no inline reimplementation)
+        self.plan = compile_plan(decompose(cfg), params, tabm=self.tabm)
 
         self._prefill_cache: Dict[int, Any] = {}
         self._decode = jax.jit(
@@ -139,32 +155,51 @@ class ServingEngine:
             self._prefill_cache[bucket] = jax.jit(fn)
         return self._prefill_cache[bucket]
 
-    def _encode_vision(self, req: Request) -> Optional[jnp.ndarray]:
-        """Encoder brick -> TABM slot -> bind for the decoder (zero-copy)."""
-        if not (self.cfg.vlm and req.vision_feats is not None):
+    def _stage(self):
+        """Producer half of the TABM edge: run the plan's frontend/projector
+        stages for queued vlm requests and commit the embeds into ring
+        slots, ahead of (and decoupled from) KV-slot admission.  A FULL
+        ring stalls the producer — the stalled request stays at the queue
+        head and staging retries next step (backpressure, never a bypass)."""
+        if self.tabm is None:
+            return
+        for req in self.queue:
+            if req.staged:
+                continue
+            if req.vision_feats is None:
+                req.staged = True              # text-only: nothing to commit
+                continue
+            slot = self.plan.produce(
+                {"vision_feats": jnp.asarray(req.vision_feats)})
+            if slot is None:                   # FULL -> stall, retry later
+                break
+            req.tabm_slot = slot
+            req.staged = True
+
+    def _bind_vision(self, req: Request) -> Optional[jnp.ndarray]:
+        """Consumer half: bind the oldest READY ring slot as the prefill's
+        vision input.  FIFO commit order == FIFO admission order, so the
+        bound slot is this request's."""
+        if req.tabm_slot is None:
             return None
-        vp = self.params["vis_proj"]
-        feats = jnp.asarray(req.vision_feats)
-        v = jax.nn.gelu(jnp.einsum(
-            "bnf,fd->bnd", feats.astype(self.cfg.compute_dtype), vp["w1"]))
-        v = jnp.einsum("bnd,de->bne", v, vp["w2"])
-        slot = self.tabm.acquire_write()
-        if slot is None:                       # ring full: backpressure
-            return v
-        self.tabm.commit_write(slot, v[0])
-        got = self.tabm.acquire_read()
-        assert got is not None
-        s, view, n = got
-        self.tabm.release(s)
+        got = self.plan.consume()
+        assert got is not None and got[0] == req.tabm_slot
+        slot, view, n = got
         return view[None, :n]
 
     def _admit(self):
         state, knobs, _ = self.executor.current()
+        power_ok = (knobs.admission_rate > 0
+                    or state is PowerState.UNCONSTRAINED)
+        if power_ok:
+            self._stage()                      # producer runs ahead
         budget = min(len(self.slots.free), knobs.max_batch)
-        if knobs.admission_rate <= 0 and state is not PowerState.UNCONSTRAINED:
+        if not power_ok:
             budget = 0
         while self.queue and budget > 0:
             req = self.queue[0]
+            if self.tabm is not None and not req.staged:
+                break                          # producer stalled on FULL ring
             slot = self.slots.take_slot()
             if slot is None:
                 break
@@ -175,10 +210,12 @@ class ServingEngine:
                                    buckets=self._buckets())
             padded = np.zeros((1, bucket), np.int32)
             padded[0, :len(prompt)] = prompt      # right-pad into the bucket
-            vision = self._encode_vision(req)
+            vision = self._bind_vision(req)
             logits, cache = self._prefill_fn(bucket)(
                 self.params, jnp.asarray(padded), vision,
                 jnp.asarray([len(prompt)], jnp.int32))
+            if req.tabm_slot is not None:      # prefill consumed the view
+                self.plan.release(req.tabm_slot)
             self.slots.insert(slot, cache, len(prompt))
             req.slot = slot
             self.live[slot] = req

@@ -1,0 +1,134 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The container this repo targets does not ship hypothesis and nothing may be
+pip-installed, so conftest.py falls back to this shim: it implements just
+the surface the test-suite uses — ``given`` over ``integers / floats /
+sampled_from / lists / tuples`` strategies plus the ``settings`` /
+``HealthCheck`` profile plumbing — as deterministic seeded random sampling
+(default 25 examples per test, matching the "ci" profile).  It does NOT
+shrink failures or remember a database; with the real hypothesis installed
+this module is never imported.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class HealthCheck:
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    large_base_example = "large_base_example"
+
+
+class settings:
+    _profiles: dict = {}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):                    # used as @settings(...)
+        fn._stub_settings = self.kwargs
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = {"max_examples": 25, **cls._profiles.get(name, {})}
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rnd: fn(self._draw(rnd)))
+
+
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return SearchStrategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_):
+    return SearchStrategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def booleans():
+    return SearchStrategy(lambda rnd: rnd.random() < 0.5)
+
+
+def sampled_from(seq):
+    seq = list(seq)
+    return SearchStrategy(lambda rnd: rnd.choice(seq))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(rnd):
+        n = rnd.randint(min_size, max_size)
+        return [elements.draw(rnd) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rnd: tuple(s.draw(rnd) for s in strategies))
+
+
+def given(*_args, **strategy_kwargs):
+    if _args:
+        raise TypeError("stub @given supports keyword strategies only")
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = int(settings._current.get("max_examples", 25))
+            n = int(getattr(fn, "_stub_settings", {}).get("max_examples", n))
+            # deterministic per-test seed so failures reproduce
+            rnd = random.Random(f"stub:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                drawn = {k: s.draw(rnd) for k, s in strategy_kwargs.items()}
+                fn(*args, **drawn, **kwargs)
+        # hide the drawn params from pytest's fixture resolution: the
+        # wrapper's visible signature keeps only real fixtures (like `key`)
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in strategy_kwargs]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        del wrapper.__wrapped__                # pytest must not unwrap to fn
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+    return decorate
+
+
+def assume(condition):
+    return bool(condition)
+
+
+def _install():
+    mod = types.ModuleType("hypothesis")
+    mod.HealthCheck = HealthCheck
+    mod.settings = settings
+    mod.given = given
+    mod.assume = assume
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                 "tuples"):
+        setattr(st, name, globals()[name])
+    st.SearchStrategy = SearchStrategy
+    mod.strategies = st
+    mod.__is_stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st
+
+
+_install()

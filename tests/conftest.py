@@ -8,7 +8,14 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 import pytest
-from hypothesis import HealthCheck, settings
+
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    # the target container has no hypothesis and nothing may be installed;
+    # _hypothesis_stub registers a deterministic sampling shim in its place
+    import _hypothesis_stub  # noqa: F401  (self-installs into sys.modules)
+    from hypothesis import HealthCheck, settings
 
 settings.register_profile(
     "ci", max_examples=25, deadline=None,

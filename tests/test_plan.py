@@ -1,0 +1,161 @@
+"""ExecutionPlan: one runtime behind engine, cascade, and scheduler.
+
+Covers the api_redesign acceptance criteria:
+* engine-path, cascade-path, and monolithic forward produce identical
+  logits for the same params/inputs (lm and vlm archs);
+* a Placement from schedule() on edge_accelerators() compiles to an
+  ExecutionPlan that really executes (vlm logits match monolithic);
+* CascadeRunner contains no per-kind dispatch;
+* the TABM lifecycle FULL -> stall -> drain drives through the engine path.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import cascade as cascade_mod
+from repro.core.bricks import decompose
+from repro.core.cascade import CascadeRunner
+from repro.core.plan import PlanError, PlanTrace, compile_plan
+from repro.core.scheduler import (edge_accelerators, populate_brick_bytes,
+                                  schedule)
+from repro.core.tabm import RingBuffer
+from repro.launch.steps import init_params
+from repro.models.model import lm_forward
+from repro.serving.engine import Request, ServingEngine
+
+
+def _setup(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(3, 200, (1, 24)), jnp.int32)
+    inputs = {"tokens": tokens}
+    if cfg.vlm:
+        inputs["vision_feats"] = jnp.asarray(
+            rng.standard_normal((1, cfg.vision_tokens, cfg.vision_feat_dim))
+            * 0.02, jnp.float32)
+    return cfg, params, inputs
+
+
+@pytest.mark.parametrize("arch", ["stablelm-1.6b", "llava-onevision-0.5b"])
+def test_plan_cascade_monolithic_identical_logits(key, arch):
+    """The three execution paths are the same function."""
+    cfg, params, inputs = _setup(arch, key)
+    mono, _ = lm_forward(params, cfg, inputs["tokens"],
+                         vision_feats=inputs.get("vision_feats"))
+    mono = np.asarray(mono, np.float32)
+
+    plan = compile_plan(decompose(cfg), params)          # engine runtime
+    out_plan, _ = plan.run(inputs)
+    np.testing.assert_allclose(np.asarray(out_plan, np.float32), mono,
+                               rtol=2e-2, atol=2e-2)
+
+    out_casc, trace = CascadeRunner(decompose(cfg), params).run_once(inputs)
+    np.testing.assert_allclose(np.asarray(out_casc, np.float32), mono,
+                               rtol=2e-2, atol=2e-2)
+    assert trace.peak_bytes < trace.sum_bytes            # one-brick residency
+
+
+def test_schedule_output_is_executable(key):
+    """Placement on edge_accelerators() -> compile_plan -> one vlm
+    inference; logits match the monolithic forward and the TABM edge's
+    full slot lifecycle ran."""
+    cfg, params, inputs = _setup("llava-onevision-0.5b", key)
+    graph = decompose(cfg)
+    populate_brick_bytes(graph, params)
+    accels = edge_accelerators()
+    placement = schedule(graph, accels, n_tokens=24, objective="latency")
+    assert set(placement.assignment) == set(graph.names())
+
+    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
+                      dim=cfg.d_model)
+    plan = compile_plan(graph, params, placement=placement, accels=accels,
+                        tabm=ring)
+    out, _ = plan.run(inputs)
+    mono, _ = lm_forward(params, cfg, inputs["tokens"],
+                         vision_feats=inputs["vision_feats"])
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(mono, np.float32),
+                               rtol=2e-2, atol=2e-2)
+    assert ring.stats["writes"] == ring.stats["reads"] == 1
+    assert all(s == 0 for s in ring.states)              # slot released
+
+
+def test_cascade_has_no_kind_dispatch():
+    src = inspect.getsource(cascade_mod)
+    assert ".kind" not in src
+    assert "elif" not in inspect.getsource(CascadeRunner)
+
+
+def test_engine_first_token_matches_monolithic(key):
+    """Engine path (plan vision staging + TABM bind + bucketed prefill)
+    agrees with the monolithic forward at the first sampled position."""
+    for arch in ("stablelm-1.6b", "llava-onevision-0.5b"):
+        cfg, params, inputs = _setup(arch, key)
+        mono, _ = lm_forward(params, cfg, inputs["tokens"],
+                             vision_feats=inputs.get("vision_feats"))
+        want = int(jnp.argmax(mono[0, -1]))
+        eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+        eng.submit(Request(rid=0,
+                           tokens=np.asarray(inputs["tokens"][0]),
+                           vision_feats=(np.asarray(inputs["vision_feats"])
+                                         if cfg.vlm else None),
+                           max_new_tokens=2))
+        done = eng.run()
+        assert done[0].out_tokens[0] == want, arch
+
+
+def test_engine_tabm_full_stall_drain(key):
+    """FULL -> stall -> drain through the engine: more vlm requests than
+    ring slots; the producer stalls on the full ring (stats count it), no
+    request ever bypasses the ring, and everything drains."""
+    cfg, params, _ = _setup("llava-onevision-0.5b", key)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    assert eng.tabm.n_slots == 2
+    rng = np.random.default_rng(0)
+    n_req = 5
+    for i in range(n_req):
+        eng.submit(Request(
+            rid=i, tokens=np.arange(6) + 3, max_new_tokens=4,
+            vision_feats=rng.standard_normal(
+                (1, cfg.vision_tokens, cfg.vision_feat_dim)
+            ).astype(np.float32) * 0.02))
+    eng.step()
+    # after one step: ring filled (2 commits) and the 3rd request stalled
+    assert eng.tabm.stats["writes"] >= 2
+    assert eng.tabm.stats["stalls"] >= 1
+    done = eng.run()
+    assert len(done) == n_req
+    # zero-copy accounting: every request's embeds went through the ring
+    assert eng.tabm.stats["writes"] == n_req
+    assert eng.tabm.stats["reads"] == n_req
+    assert all(s == 0 for s in eng.tabm.states)          # fully drained
+
+
+def test_plan_port_validation(key):
+    cfg, params, inputs = _setup("llava-onevision-0.5b", key)
+    plan = compile_plan(decompose(cfg), params)
+    assert [p.name for p in plan.input_ports] == ["vision_feats", "tokens"]
+    with pytest.raises(PlanError):               # missing required port
+        plan.run({"tokens": inputs["tokens"]})
+    with pytest.raises(PlanError):               # int port fed floats
+        plan.run({"tokens": inputs["tokens"].astype(jnp.float32),
+                  "vision_feats": inputs["vision_feats"]})
+
+
+def test_plan_one_brick_residency_trace(key):
+    """one-brick residency: load/execute/release per brick, residency
+    returns to zero, peak is max-not-sum (same contract the old cascade
+    interpreter proved)."""
+    cfg, params, inputs = _setup("stablelm-1.6b", key)
+    plan = compile_plan(decompose(cfg), params, residency="one-brick")
+    _, trace = plan.run(inputs, trace=PlanTrace())
+    phases = [(e.brick, e.phase) for e in trace.events]
+    for b in plan.graph.names():
+        assert (b, "load") in phases and (b, "release") in phases
+    assert trace.events[-1].resident_bytes == 0
+    assert 0 < trace.peak_bytes < trace.sum_bytes

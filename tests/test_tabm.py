@@ -53,6 +53,27 @@ def test_fifo_ordering():
         rb.release(slot)
 
 
+def test_abort_write_rewinds_pointer():
+    """An aborted acquire must not desync the FIFO: the next producer gets
+    the same slot back and reads still come out in commit order."""
+    rb = make(n=2)
+    s = rb.acquire_write()
+    rb.abort_write(s)
+    s2 = rb.acquire_write()
+    assert s2 == s                             # pointer rewound, not skipped
+    rb.commit_write(s2, jnp.full((1, 16), 7.0))
+    slot, view, _ = rb.acquire_read()          # read pointer still aligned
+    assert slot == s2 and float(view[0, 0]) == pytest.approx(7.0, abs=1e-2)
+    rb.release(slot)
+    # out-of-order abort is rejected (FIFO ring invariant)
+    a = rb.acquire_write()
+    b = rb.acquire_write()
+    with pytest.raises(TABMError):
+        rb.abort_write(a)
+    rb.abort_write(b)                          # most recent: fine
+    rb.abort_write(a)                          # now the most recent
+
+
 def test_illegal_transitions_raise():
     rb = make()
     with pytest.raises(TABMError):
