@@ -18,6 +18,9 @@ python -m pytest -x -q "$@" \
     --deselect "tests/test_models.py::test_decode_matches_teacher_forcing[jamba-1.5-large-398b]" \
     --deselect "tests/test_serve_quant.py::test_quantized_decode_runs_and_tracks_fp"
 
+echo "== docs lint (core docstrings + README quickstart smoke) =="
+python scripts/docs_lint.py --docs
+
 echo "== reduced dry-run: lm arch =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.dryrun --arch stablelm-1.6b --shape decode_32k \

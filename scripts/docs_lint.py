@@ -1,0 +1,86 @@
+#!/usr/bin/env python
+"""Docs lint — keeps documentation from rotting silently.
+
+Two gates, both wired into scripts/check.sh:
+
+1. **Docstring lint** (always): every module under ``src/repro/core/``
+   must open with a module docstring — these are the paper-mapping
+   modules (bricks, plan, tabm, scheduler, power, cascade, quantize) and
+   their docstrings are the primary paper-term documentation.
+
+2. **README smoke** (``--docs``): every ```python fenced block in
+   README.md (and any file passed via --readme) is executed, in order,
+   in one shared namespace.  If the quickstart drifts from the real API,
+   check fails instead of shipping a broken first-run experience.
+
+Usage:
+    python scripts/docs_lint.py            # docstring lint only
+    python scripts/docs_lint.py --docs     # + execute README code blocks
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def lint_docstrings(pkg_dir: pathlib.Path) -> list[str]:
+    errors = []
+    for path in sorted(pkg_dir.glob("*.py")):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        if path.name == "__init__.py" and not tree.body:
+            continue                       # empty package marker is fine
+        if ast.get_docstring(tree) is None:
+            errors.append(f"{path.relative_to(ROOT)}: missing module "
+                          f"docstring")
+    return errors
+
+
+def run_readme_blocks(md_path: pathlib.Path) -> list[str]:
+    errors = []
+    blocks = _FENCE.findall(md_path.read_text())
+    ns: dict = {"__name__": "__docs__"}
+    for i, src in enumerate(blocks, 1):
+        try:
+            exec(compile(src, f"{md_path.name}[python block {i}]", "exec"),
+                 ns)
+        except Exception as e:             # report, keep linting the rest
+            errors.append(f"{md_path.name} python block {i} failed: "
+                          f"{type(e).__name__}: {e}")
+    if not blocks:
+        errors.append(f"{md_path.name}: no ```python blocks found — "
+                      f"quickstart missing?")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--docs", action="store_true",
+                    help="also execute README ```python blocks (smoke)")
+    ap.add_argument("--readme", default="README.md",
+                    help="markdown file whose python blocks --docs runs")
+    args = ap.parse_args(argv)
+
+    sys.path.insert(0, str(ROOT / "src"))
+    errors = lint_docstrings(ROOT / "src" / "repro" / "core")
+    for doc in ("README.md", "docs/ARCHITECTURE.md", "docs/TABM.md"):
+        if not (ROOT / doc).exists():
+            errors.append(f"{doc}: missing")
+    if args.docs and not errors:
+        errors += run_readme_blocks(ROOT / args.readme)
+
+    for e in errors:
+        print(f"docs-lint: {e}", file=sys.stderr)
+    print("docs-lint: OK" if not errors
+          else f"docs-lint: {len(errors)} problem(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

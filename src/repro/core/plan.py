@@ -234,29 +234,47 @@ class ExecutionPlan:
 
     def _through_ring(self, out):
         """Synchronous TABM crossing inside run(): commit the producer's
-        output to a slot, immediately bind it back as the consumer view."""
+        output to a slot, immediately bind it back as the consumer view.
+        A failed commit aborts the write — the slot must never be left in
+        STAGING (same contract as produce())."""
         if out.shape[0] != 1:
             raise PlanError("TABM slots hold one request's embeds (batch 1)")
         slot = self.tabm.acquire_write()
         if slot is None:
             raise PlanError("TABM ring full inside a synchronous run(); "
                             "a prior consumer never released its slot")
-        v = out if self._tabm_transfer is None else self._tabm_transfer(out)
-        self.tabm.commit_write(slot, v[0])
+        try:
+            v = out if self._tabm_transfer is None \
+                else self._tabm_transfer(out)
+            self.tabm.commit_write(slot, v[0])
+        except Exception:
+            self.tabm.abort_write(slot)
+            raise
         got = self.tabm.acquire_read()
         assert got is not None
         s, view, n = got
         return view[None, :n], s
 
     # -- TABM edge, split for the engine's producer/consumer decoupling -----
-    def produce(self, inputs: Dict[str, Any]) -> Optional[int]:
+    def produce(self, inputs: Dict[str, Any], *, block: bool = False,
+                timeout: Optional[float] = None) -> Optional[int]:
         """Producer half: acquire a ring slot, run the stages upstream of
-        the TABM edge, commit.  Returns the slot id, or None when the ring
-        is FULL — the caller must stall and retry (backpressure), never
-        bypass the ring."""
+        the TABM edge (vision encode -> projector), commit.  Returns the
+        slot id, or None when the ring is FULL — the caller must stall and
+        retry (backpressure), never bypass the ring.
+
+        ``block=True`` parks the calling thread on a FULL ring until a
+        consumer releases a slot (or the ring is closed / `timeout`
+        expires, returning None) — this is where the engine's
+        StagingWorker stalls, off the decode loop.
+
+        Error contract: if any upstream brick (e.g. the projector) raises,
+        the acquired slot is aborted back to EMPTY before the exception
+        propagates, so a staging failure can never wedge the ring; the
+        caller owns surfacing the error on the originating request."""
         if self.tabm is None:
             raise PlanError("plan compiled without a TABM ring")
-        slot = self.tabm.acquire_write()
+        slot = self.tabm.acquire_write(block=block, timeout=timeout)
         if slot is None:
             return None
         try:
@@ -277,12 +295,21 @@ class ExecutionPlan:
             raise
         return slot
 
-    def consume(self):
+    def consume(self, *, block: bool = False,
+                timeout: Optional[float] = None):
         """Consumer half: bind the oldest READY slot.  Returns
-        (slot, view, n_tokens) or None when nothing is ready."""
+        (slot, view, n_tokens) or None when nothing is ready (with
+        ``block=True``: only on timeout or a closed ring)."""
         if self.tabm is None:
             raise PlanError("plan compiled without a TABM ring")
-        return self.tabm.acquire_read()
+        return self.tabm.acquire_read(block=block, timeout=timeout)
+
+    def wait_ready(self, slot: int, timeout: Optional[float] = None) -> bool:
+        """Block until `slot` is committed — the decode loop's per-slot
+        ready wait, replacing inline staging."""
+        if self.tabm is None:
+            raise PlanError("plan compiled without a TABM ring")
+        return self.tabm.wait_ready(slot, timeout)
 
     def release(self, slot: int):
         self.tabm.release(slot)

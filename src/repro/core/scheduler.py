@@ -238,6 +238,35 @@ def populate_brick_bytes(graph: BrickGraph, params) -> None:
 
 
 # ---------------------------------------------------------------------------
+# admission-depth hook (the async TABM producer/consumer pipeline)
+# ---------------------------------------------------------------------------
+
+def staged_ahead_depth(ring) -> int:
+    """How far the producer has run ahead of the consumer: slots STAGING or
+    READY in the TABM ring.  Distinct from ``ring.occupancy`` — a CONSUMED
+    slot still occupies the ring but is *behind* the consumer, so it says
+    nothing about how much staged work the decoder has banked."""
+    return ring.staged_ahead()
+
+
+def staging_budget(ring, in_flight: int, max_ahead: Optional[int] = None
+                   ) -> int:
+    """How many more requests the engine may hand to the staging worker.
+
+    ``in_flight``: requests already handed over but not yet committed (the
+    worker's queue + the one it is staging).  ``max_ahead`` caps total
+    staged-ahead depth; default = ring size (the producer would block on
+    FULL beyond that anyway, and a bounded hand-off queue keeps shutdown
+    cancellation cheap).  This is the admission check the async engine
+    uses instead of raw ring occupancy — and the hook a future
+    per-request slot-class policy extends: size ``max_ahead`` per request
+    class (image count / resolution bucket) and charge each class its own
+    budget instead of one FIFO depth."""
+    cap = ring.n_slots if max_ahead is None else max_ahead
+    return max(0, cap - staged_ahead_depth(ring) - in_flight)
+
+
+# ---------------------------------------------------------------------------
 # pod-mode hand-off (the TABM edge between submeshes)
 # ---------------------------------------------------------------------------
 

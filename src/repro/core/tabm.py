@@ -1,51 +1,86 @@
 """Token-Aware Buffer Manager (TABM) — the paper's zero-copy hand-off
-(§3.2 "Embeddings Zero-Copy Transfer in Unified Memory").
+(§3.2 "Embeddings Zero-Copy Transfer in Unified Memory"), now a
+*thread-safe* producer/consumer ring so the vision encoder really runs
+concurrently with decode (docs/TABM.md has the full contract).
 
 NANOMIND's TABM manages a shared ring-buffer pool in unified DRAM: the NPU
 encoder (producer) writes embeddings directly into a slot which the GPU
 decoder (consumer) binds as input — no CPU staging copy.  Slot lifecycle:
 
-    FREE -> ALLOCATED_FOR_WRITE -> READY_TO_READ -> ALLOCATED_FOR_READ -> FREE
+    EMPTY -> STAGING -> READY -> CONSUMED -> EMPTY
+
+(the paper's FREE / ALLOCATED_FOR_WRITE / READY_TO_READ /
+ALLOCATED_FOR_READ; the old names remain importable aliases).
 
 TPU adaptation (DESIGN.md §2): "unified DRAM" becomes device-resident HBM;
-"zero-copy" becomes **buffer donation** — ``write_slot`` donates the pool
+"zero-copy" becomes **buffer donation** — ``commit_write`` donates the pool
 array, so XLA aliases the update in place (one dynamic-update-slice, no
 fresh allocation), and the consumer binds the slot as a dynamic-slice view
 that fuses into its first matmul.  Between *submeshes* the hand-off is a
 sharding-preserving device_put (pure ICI, never through the host) — see
 core/scheduler.SubmeshPipe.
 
+Concurrency model (the async producer/consumer engine, serving/engine.py):
+
+* every state transition happens under one ``threading.Condition``; device
+  ops on the pool (``_write_slot`` donation, ``_read_slot`` bind) also run
+  under it, because donation invalidates the previous pool buffer and a
+  concurrent reader must never dispatch against a donated array;
+* ``acquire_write(block=True)`` stalls the *producer thread* on a FULL
+  ring — the paper's backpressure signal — instead of making the engine's
+  admission loop poll; ``close()`` wakes every blocked thread for shutdown;
+* :meth:`wait_ready` is the per-slot ready wait: the consumer blocks on
+  exactly the slot it is waiting for (engine prefill binds slot k without
+  scanning the ring), and is woken — with a False result — if that slot's
+  write is aborted or the ring closes;
+* a seqlock-style **generation counter** per slot increments on every
+  transition: a consumer that captured ``(view, gen)`` at ``acquire_read``
+  can assert with :meth:`view_valid` that its zero-copy view still belongs
+  to its request and the slot was not recycled underneath it (the same
+  counter lets ``wait_ready`` distinguish this lifecycle's commit from a
+  later request's).
+
 The control plane (this class) is host-side Python — exactly like the
 paper's lightweight CPU runtime: it never touches token data, only slot
-states, and provides the scheduling signals (occupancy) the power policy
-reads.
+states, and provides the scheduling signals (occupancy, staged-ahead
+depth) the power policy and admission read.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+import threading
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-FREE = 0
-ALLOCATED_FOR_WRITE = 1
-READY_TO_READ = 2
-ALLOCATED_FOR_READ = 3
+EMPTY = 0
+STAGING = 1
+READY = 2
+CONSUMED = 3
 
-_STATE_NAMES = {FREE: "FREE", ALLOCATED_FOR_WRITE: "ALLOCATED_FOR_WRITE",
-                READY_TO_READ: "READY_TO_READ",
-                ALLOCATED_FOR_READ: "ALLOCATED_FOR_READ"}
+# legacy names (paper §3.2 wording) — same state machine
+FREE = EMPTY
+ALLOCATED_FOR_WRITE = STAGING
+READY_TO_READ = READY
+ALLOCATED_FOR_READ = CONSUMED
 
-_VALID = {FREE: {ALLOCATED_FOR_WRITE},
-          ALLOCATED_FOR_WRITE: {READY_TO_READ, FREE},
-          READY_TO_READ: {ALLOCATED_FOR_READ},
-          ALLOCATED_FOR_READ: {FREE}}
+_STATE_NAMES = {EMPTY: "EMPTY", STAGING: "STAGING", READY: "READY",
+                CONSUMED: "CONSUMED"}
+
+_VALID = {EMPTY: {STAGING},
+          STAGING: {READY, EMPTY},
+          READY: {CONSUMED},
+          CONSUMED: {EMPTY}}
 
 
 class TABMError(RuntimeError):
     pass
+
+
+class TABMClosed(TABMError):
+    """Raised/signalled when the ring was closed while a thread waited."""
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +119,7 @@ def _read_slot(pool: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
 
 @dataclass
 class RingBuffer:
-    """One TABM pool: device array + host-side slot state machine."""
+    """One TABM pool: device array + thread-safe host-side slot machine."""
 
     n_slots: int
     max_tokens: int
@@ -98,13 +133,18 @@ class RingBuffer:
         if self.sharding is not None:
             pool = jax.device_put(pool, self.sharding)
         self.pool = pool
-        self.states: List[int] = [FREE] * self.n_slots
+        self.states: List[int] = [EMPTY] * self.n_slots
         self.tokens: List[int] = [0] * self.n_slots
+        # seqlock-style: +1 on every transition; captured at acquire_read
+        # so a zero-copy view can be validated against slot recycling
+        self.generation: List[int] = [0] * self.n_slots
         self._write_ptr = 0
         self._read_ptr = 0
-        self.stats = {"writes": 0, "reads": 0, "stalls": 0}
+        self._cond = threading.Condition()
+        self._closed = False
+        self.stats = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0}
 
-    # -- state machine ------------------------------------------------------
+    # -- state machine (always called with self._cond held) -----------------
     def _transition(self, slot: int, to: int):
         frm = self.states[slot]
         if to not in _VALID[frm]:
@@ -112,71 +152,200 @@ class RingBuffer:
                 f"slot {slot}: illegal {_STATE_NAMES[frm]} -> "
                 f"{_STATE_NAMES[to]}")
         self.states[slot] = to
+        self.generation[slot] += 1
 
-    def acquire_write(self) -> Optional[int]:
+    def acquire_write(self, block: bool = False,
+                      timeout: Optional[float] = None) -> Optional[int]:
         """Producer asks for a slot; None = ring full (producer must stall —
-        the paper's producer/consumer smoothing signal)."""
-        slot = self._write_ptr
-        if self.states[slot] != FREE:
-            self.stats["stalls"] += 1
-            return None
-        self._transition(slot, ALLOCATED_FOR_WRITE)
-        self._write_ptr = (slot + 1) % self.n_slots
-        return slot
+        the paper's producer/consumer smoothing signal).
+
+        ``block=True`` parks the calling thread until the head slot frees
+        (the async engine's StagingWorker stalls *here*, off the step
+        loop); returns None only on timeout or :meth:`close`."""
+        with self._cond:
+            if self.states[self._write_ptr] != EMPTY:
+                self.stats["stalls"] += 1
+            if block:
+                ok = self._cond.wait_for(
+                    lambda: self._closed
+                    or self.states[self._write_ptr] == EMPTY,
+                    timeout)
+                if not ok or self._closed:
+                    return None
+            slot = self._write_ptr
+            if self.states[slot] != EMPTY:
+                return None
+            self._transition(slot, STAGING)
+            self._write_ptr = (slot + 1) % self.n_slots
+            return slot
 
     def commit_write(self, slot: int, embeds: jnp.ndarray):
-        """Zero-copy write (donated pool) then mark READY_TO_READ."""
-        if self.states[slot] != ALLOCATED_FOR_WRITE:
-            raise TABMError(f"commit on slot {slot} in "
-                            f"{_STATE_NAMES[self.states[slot]]}")
-        n = embeds.shape[0]
-        if n > self.max_tokens:
-            raise TABMError(f"{n} tokens > slot capacity {self.max_tokens}")
-        self.pool = _write_slot(self.pool, jnp.asarray(slot), embeds)
-        self.tokens[slot] = n
-        self._transition(slot, READY_TO_READ)
-        self.stats["writes"] += 1
+        """Zero-copy write (donated pool) then mark READY."""
+        with self._cond:
+            if self.states[slot] != STAGING:
+                raise TABMError(f"commit on slot {slot} in "
+                                f"{_STATE_NAMES[self.states[slot]]}")
+            n = embeds.shape[0]
+            if n > self.max_tokens:
+                raise TABMError(
+                    f"{n} tokens > slot capacity {self.max_tokens}")
+            # donation invalidates the old pool buffer — must not race a
+            # concurrent _read_slot dispatch, hence inside the lock
+            self.pool = _write_slot(self.pool, jnp.asarray(slot), embeds)
+            self.tokens[slot] = n
+            self._transition(slot, READY)
+            self.stats["writes"] += 1
+            self._cond.notify_all()
 
     def abort_write(self, slot: int):
-        """Producer abandons an acquired slot.  FIFO ring: only the most
-        recently acquired slot can abort, and the write pointer rewinds to
-        it — otherwise a later commit would land ahead of the read pointer
-        and wedge the ring (reads stuck on a FREE slot)."""
-        if self.states[slot] == ALLOCATED_FOR_WRITE \
-                and (slot + 1) % self.n_slots != self._write_ptr:
-            raise TABMError(f"abort_write out of order: slot {slot} is not "
-                            f"the most recent acquire")
-        self._transition(slot, FREE)
-        self._write_ptr = slot
+        """Producer abandons an acquired slot (staging failed or the engine
+        is shutting down).  FIFO ring: only the most recently acquired slot
+        can abort, and the write pointer rewinds to it — otherwise a later
+        commit would land ahead of the read pointer and wedge the ring
+        (reads stuck on an EMPTY slot)."""
+        with self._cond:
+            if self.states[slot] != STAGING:
+                raise TABMError(f"abort_write on slot {slot} in "
+                                f"{_STATE_NAMES[self.states[slot]]} — only "
+                                f"a STAGING slot can abort (consumers use "
+                                f"release)")
+            if (slot + 1) % self.n_slots != self._write_ptr:
+                raise TABMError(
+                    f"abort_write out of order: slot {slot} is not "
+                    f"the most recent acquire")
+            self._transition(slot, EMPTY)
+            self.tokens[slot] = 0
+            self._write_ptr = slot
+            self.stats["aborts"] += 1
+            self._cond.notify_all()
 
-    def acquire_read(self) -> Optional[Tuple[int, jnp.ndarray, int]]:
+    def acquire_read(self, block: bool = False,
+                     timeout: Optional[float] = None
+                     ) -> Optional[Tuple[int, jnp.ndarray, int]]:
         """Consumer takes the oldest READY slot: (slot, view, n_tokens)."""
-        slot = self._read_ptr
-        if self.states[slot] != READY_TO_READ:
-            return None
-        self._transition(slot, ALLOCATED_FOR_READ)
-        self._read_ptr = (slot + 1) % self.n_slots
-        view = _read_slot(self.pool, jnp.asarray(slot))
-        self.stats["reads"] += 1
-        return slot, view, self.tokens[slot]
+        with self._cond:
+            if block:
+                ok = self._cond.wait_for(
+                    lambda: self._closed
+                    or self.states[self._read_ptr] == READY,
+                    timeout)
+                if not ok or self._closed:
+                    return None
+            slot = self._read_ptr
+            if self.states[slot] != READY:
+                return None
+            self._transition(slot, CONSUMED)
+            self._read_ptr = (slot + 1) % self.n_slots
+            view = _read_slot(self.pool, jnp.asarray(slot))
+            self.stats["reads"] += 1
+            return slot, view, self.tokens[slot]
 
     def release(self, slot: int):
-        """Consumer returns a slot.  Only legal from ALLOCATED_FOR_READ —
-        a producer abandoning a write must use abort_write."""
-        if self.states[slot] != ALLOCATED_FOR_READ:
-            raise TABMError(f"release on slot {slot} in "
-                            f"{_STATE_NAMES[self.states[slot]]}")
-        self._transition(slot, FREE)
-        self.tokens[slot] = 0
+        """Consumer returns a slot.  Only legal from CONSUMED — a producer
+        abandoning a write must use abort_write."""
+        with self._cond:
+            if self.states[slot] != CONSUMED:
+                raise TABMError(f"release on slot {slot} in "
+                                f"{_STATE_NAMES[self.states[slot]]}")
+            self._transition(slot, EMPTY)
+            self.tokens[slot] = 0
+            self._cond.notify_all()
+
+    # -- per-slot waiting / seqlock validation ------------------------------
+    def wait_ready(self, slot: int, timeout: Optional[float] = None) -> bool:
+        """Block until `slot` is committed (READY or beyond).  The engine's
+        consumer half waits here — on the exact slot its request owns —
+        instead of polling the ring.
+
+        Returns False on timeout, on :meth:`close`, or when the slot's
+        current lifecycle ends without a commit (the producer aborted) —
+        detected via the generation counter, so a waiter can never hang on
+        a slot that will no longer become READY, nor mistake a later
+        request's commit (after abort + recycle) for its own.  Call with
+        the slot in STAGING or later."""
+        with self._cond:
+            st = self.states[slot]
+            if st in (READY, CONSUMED):
+                return True
+            if st != STAGING:
+                return False                   # no live write to wait on
+            g0 = self.generation[slot]         # this lifecycle's STAGING gen
+            self._cond.wait_for(
+                lambda: self._closed or self.generation[slot] != g0,
+                timeout)                       # any transition ends the wait
+            # committed in THIS lifecycle — not a later request's commit
+            # after an abort recycled the slot (generation arithmetic:
+            # commit bumps to g0+1, a subsequent consume to g0+2)
+            return (not self._closed
+                    and ((self.states[slot] == READY
+                          and self.generation[slot] == g0 + 1)
+                         or (self.states[slot] == CONSUMED
+                             and self.generation[slot] == g0 + 2)))
+
+    def slot_generation(self, slot: int) -> int:
+        with self._cond:
+            return self.generation[slot]
+
+    def view_valid(self, slot: int, gen: int) -> bool:
+        """Seqlock check: a view captured at acquire_read (generation `gen`)
+        is valid while the slot is still CONSUMED at that generation — i.e.
+        it was not released/recycled for a later request."""
+        with self._cond:
+            return self.states[slot] == CONSUMED \
+                and self.generation[slot] == gen
+
+    # -- shutdown / drain ---------------------------------------------------
+    def close(self):
+        """Wake every thread blocked in acquire_write/acquire_read; they
+        return None.  Idempotent; part of the engine drain protocol."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def drain(self) -> int:
+        """Release every READY and CONSUMED slot in FIFO order so the ring
+        ends fully EMPTY (engine shutdown with staged-but-unconsumed
+        slots).  STAGING slots are the producer's to abort — draining with
+        one still staging means the worker was not joined first."""
+        drained = 0
+        with self._cond:
+            if any(s == STAGING for s in self.states):
+                raise TABMError("drain with a slot still STAGING — join the "
+                                "producer thread before draining")
+            # consumed-but-unreleased slots belong to requests that will
+            # never prefill; recycle them
+            for slot in range(self.n_slots):
+                if self.states[slot] == CONSUMED:
+                    self._transition(slot, EMPTY)
+                    self.tokens[slot] = 0
+                    drained += 1
+            while self.states[self._read_ptr] == READY:
+                slot = self._read_ptr
+                self._transition(slot, CONSUMED)
+                self._transition(slot, EMPTY)
+                self.tokens[slot] = 0
+                self._read_ptr = (slot + 1) % self.n_slots
+                drained += 1
+            self._cond.notify_all()
+        return drained
 
     # -- signals ------------------------------------------------------------
     @property
     def occupancy(self) -> float:
-        busy = sum(s != FREE for s in self.states)
+        busy = sum(s != EMPTY for s in self.states)
         return busy / self.n_slots
 
     def ready_count(self) -> int:
-        return sum(s == READY_TO_READ for s in self.states)
+        return sum(s == READY for s in self.states)
+
+    def staged_ahead(self) -> int:
+        """Slots the producer holds ahead of the consumer (STAGING+READY) —
+        the admission-depth signal core/scheduler.staging_budget reads."""
+        return sum(s in (STAGING, READY) for s in self.states)
 
     @property
     def nbytes(self) -> int:

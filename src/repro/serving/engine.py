@@ -1,19 +1,39 @@
-"""Continuous-batching serving engine with the paper's full pipeline:
+"""Continuous-batching serving engine — a two-stage async pipeline:
 
-  modality frontend (stub) -> projector brick -> TABM ring slot ->
-  decoder prefill (bucketed static shapes) -> slot cache -> batched decode
+    producer thread (StagingWorker)          consumer (step loop)
+    ------------------------------           ---------------------
+    vision encode -> projector ->            plan.consume (per-slot
+    plan.produce -> TABM ring commit         ready wait) -> prefill ->
+    (blocks on FULL = backpressure)          batched decode
 
 The vision path is not reimplemented here: the engine compiles the
 BrickGraph into an :class:`repro.core.plan.ExecutionPlan` and drives the
 plan's TABM edge as a real producer/consumer pair —
 
-* **producer** (``_stage``): ``plan.produce`` runs the frontend/projector
-  bricks and commits the embeds into a ring slot, possibly several steps
-  before the request is admitted.  A FULL ring stalls staging (requests
-  stay queued) — backpressure, never a silent ring bypass.
-* **consumer** (``_bind_vision``): at admission the oldest READY slot is
-  bound as the prefill's vision input (zero-copy via donation; see
-  core/tabm.py) and released once the prefill has consumed it.
+* **producer** (:class:`StagingWorker`): a dedicated thread pulls admitted
+  requests from an admission queue and runs ``plan.produce`` (vision
+  encode -> projector -> ring commit) *off the step loop*, so request
+  k+1's vision encode overlaps request k's decode — the paper's TABM
+  smoothing made actually concurrent.  A FULL ring blocks the producer
+  thread inside ``acquire_write`` (backpressure, never a silent bypass);
+  admission hands requests to the worker against a staged-ahead depth
+  budget (core/scheduler.staging_budget), not raw ring occupancy.
+* **consumer** (``_bind_vision``): at admission the request's committed
+  slot is bound as the prefill's vision input after a per-slot ready wait
+  (``wait_ready``; zero-copy via donation, see core/tabm.py) and released once the
+  prefill has consumed it — validated by the ring's seqlock generation.
+
+Lifecycle: ``shutdown()`` (or the context manager) stops the worker —
+closing the ring wakes a producer stalled on FULL — joins the thread,
+drains staged-but-unconsumed slots back to EMPTY, and resolves every
+outstanding request (queued or live mid-decode) as failed with
+:class:`EngineClosed`; an engine dropped without shutdown is reaped by a
+finalizer so the producer thread never leaks.  A staging error (e.g. the projector
+raising) aborts the ring write inside ``plan.produce`` and surfaces on the
+originating request's ``error`` field; the request finishes failed instead
+of wedging the pipeline.  ``async_staging=False`` keeps the old inline
+single-threaded staging — bit-identical tokens, used as the equivalence
+oracle in tests/test_engine_async.py.
 
 Other paper mechanisms wired in:
 * **module-level offloading** — the same plan compiles against submesh
@@ -25,11 +45,17 @@ Other paper mechanisms wired in:
   compiled prefill per bucket, one compiled decode step, never recompiled.
 
 Metrics mirror the paper's evaluation: tokens/s, end-to-end latency
-(submit -> finish), modeled energy, memory (pool + weights).
+(submit -> finish), modeled energy, memory (pool + weights).  ``trace``
+records the producer/consumer interleaving ((event, rid, t) tuples) —
+the overlap evidence the async tests assert on.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
+import weakref
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -41,12 +67,17 @@ from repro.configs.base import ModelConfig
 from repro.core.bricks import decompose
 from repro.core.plan import compile_plan
 from repro.core.power import BatteryAwareExecutor, PMU, PowerState
-from repro.core.tabm import RingBuffer
+from repro.core.scheduler import staging_budget
+from repro.core.tabm import RingBuffer, TABMError
 from repro.models import model as M
 from repro.serving.kv_cache import SlotCache, bucket_length
 from repro.serving.sampling import sample
 
 EOS_ID = 1
+
+
+class EngineClosed(RuntimeError):
+    """The engine shut down before this request could complete."""
 
 
 @dataclass
@@ -62,7 +93,18 @@ class Request:
     out_tokens: List[int] = field(default_factory=list)
     slot: Optional[int] = None                 # KV-cache slot once admitted
     tabm_slot: Optional[int] = None            # ring slot once staged
-    staged: bool = False                       # producer half already ran
+    stage_submitted: bool = False              # handed to the StagingWorker
+    error: Optional[BaseException] = None      # staging/engine failure
+    _tabm_gen: Optional[int] = None            # seqlock gen at consume
+    _staged_ev: threading.Event = field(default_factory=threading.Event,
+                                        repr=False)
+
+    @property
+    def staged(self) -> bool:
+        """Producer half already ran (committed or failed).  Derived from
+        the event so the admission check and the idle park can never
+        desynchronize."""
+        return self._staged_ev.is_set()
 
     @property
     def e2e_latency(self) -> Optional[float]:
@@ -75,11 +117,93 @@ class EngineStats:
     prefills: int = 0
     steps: int = 0
     finished: int = 0
+    failed: int = 0
     start_t: float = field(default_factory=time.time)
 
     def tokens_per_s(self) -> float:
         dt = time.time() - self.start_t
         return self.decoded_tokens / dt if dt > 0 else 0.0
+
+
+_STOP = object()
+
+
+class StagingWorker:
+    """The pipeline's producer stage: one thread draining an admission
+    queue through ``plan.produce``.
+
+    The worker owns the ring-write side of the TABM contract: it blocks
+    *inside* ``acquire_write`` on a FULL ring (so backpressure stalls the
+    producer thread, never the decode loop), aborts the slot if a brick
+    raises, and attaches any failure to the originating request before
+    flagging it staged.  ``shutdown`` closes the ring first — waking a
+    stalled producer — then joins; requests still queued at that point are
+    cancelled with :class:`EngineClosed`."""
+
+    def __init__(self, plan, trace):
+        self.plan = plan
+        self._trace = trace                     # (event, rid) -> None
+        self._q: "queue.Queue" = queue.Queue()
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._in_flight = 0                     # handed over, not yet staged
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    def start(self):
+        if self._thread is None:
+            self._thread = threading.Thread(
+                target=self._run, name="tabm-staging", daemon=True)
+            self._thread.start()
+
+    def submit(self, req: Request):
+        if self._stop.is_set():
+            raise EngineClosed("staging worker already shut down")
+        self.start()
+        with self._lock:
+            self._in_flight += 1
+        self._q.put(req)
+
+    def _run(self):
+        while True:
+            item = self._q.get()
+            if item is _STOP:
+                break
+            req: Request = item
+            try:
+                if self._stop.is_set():
+                    raise EngineClosed("engine shut down before staging")
+                self._trace("stage_start", req.rid)
+                slot = self.plan.produce(
+                    {"vision_feats": jnp.asarray(req.vision_feats)},
+                    block=True)
+                if slot is None:                # ring closed mid-stall
+                    raise EngineClosed("ring closed while staging stalled")
+                req.tabm_slot = slot
+                self._trace("stage_commit", req.rid)
+            except BaseException as e:          # propagate to the request
+                req.error = e
+                self._trace("stage_error", req.rid)
+            finally:
+                with self._lock:
+                    self._in_flight -= 1
+                req._staged_ev.set()            # marks staged
+
+    def shutdown(self, timeout: float = 10.0) -> bool:
+        """Stop accepting, cancel in-flight staging, join the thread.
+        Returns True when the thread is fully dead (no daemon leak)."""
+        self._stop.set()
+        if self.plan.tabm is not None:
+            self.plan.tabm.close()              # wakes a FULL-ring stall
+        if self._thread is None:
+            return True
+        self._q.put(_STOP)
+        self._thread.join(timeout)
+        return not self._thread.is_alive()
 
 
 class ServingEngine:
@@ -88,7 +212,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_len: int = 2048, executor: Optional[
                      BatteryAwareExecutor] = None,
-                 rng_seed: int = 0):
+                 rng_seed: int = 0, async_staging: bool = True):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -100,6 +224,9 @@ class ServingEngine:
         self.done: List[Request] = []
         self.stats = EngineStats()
         self.key = jax.random.PRNGKey(rng_seed)
+        # producer/consumer interleaving evidence: (event, rid, t); bounded
+        # so a long-running server doesn't grow it without limit
+        self.trace: "deque[tuple]" = deque(maxlen=4096)
         # TABM pool between encoder and decoder bricks (vlm archs)
         self.tabm = RingBuffer(n_slots=max(2, n_slots // 2),
                                max_tokens=cfg.vision_tokens or 1,
@@ -107,6 +234,26 @@ class ServingEngine:
         # the one brick runtime: vision staging routes through the plan's
         # projector brick and TABM edge (no inline reimplementation)
         self.plan = compile_plan(decompose(cfg), params, tabm=self.tabm)
+        # producer stage: own thread unless the caller opts back into the
+        # synchronous single-threaded pipeline (the equivalence oracle)
+        self.async_staging = bool(async_staging and self.tabm is not None)
+        self._worker = None
+        if self.async_staging:
+            # the worker must reference the engine only weakly (the live
+            # thread roots the worker), or a dropped engine could never be
+            # collected and its producer thread would leak; the finalizer
+            # joins the thread for callers that skip shutdown()
+            wself = weakref.ref(self)
+
+            def _trace(event, rid):
+                eng = wself()
+                if eng is not None:
+                    eng._trace_event(event, rid)
+
+            self._worker = StagingWorker(self.plan, _trace)
+            self._finalizer = weakref.finalize(
+                self, StagingWorker.shutdown, self._worker, 1.0)
+        self._closed = False
 
         self._prefill_cache: Dict[int, Any] = {}
         self._decode = jax.jit(
@@ -115,6 +262,10 @@ class ServingEngine:
 
     # -- public api ----------------------------------------------------------
     def submit(self, req: Request):
+        if self._closed:
+            raise EngineClosed("engine already shut down")
+        if self.tabm is None or req.vision_feats is None:
+            req._staged_ev.set()           # text-only: nothing to commit
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -122,7 +273,49 @@ class ServingEngine:
             self.step()
         return self.done
 
+    def shutdown(self, timeout: float = 10.0) -> bool:
+        """Tear the pipeline down: stop+join the producer thread (a FULL
+        stall is woken via ring close), drain staged-but-unconsumed slots
+        back to EMPTY, and resolve every outstanding request — live
+        mid-decode ones keep their partial tokens — as failed with
+        EngineClosed.  Idempotent; returns True when no worker thread is
+        left alive."""
+        self._closed = True
+        joined = True
+        if self._worker is not None:
+            joined = self._worker.shutdown(timeout)
+            if joined:
+                # torn down manually; a thread that outlived the join
+                # timeout keeps its finalizer as the reaping safety net
+                self._finalizer.detach()
+        elif self.tabm is not None:
+            self.tabm.close()
+        if self.tabm is not None and joined:
+            self.tabm.drain()              # READY/CONSUMED leftovers -> EMPTY
+        for slot, req in list(self.live.items()):
+            if req.error is None:
+                req.error = EngineClosed("engine shut down mid-decode")
+            self.slots.release(slot)
+            self._fail(req)                # partial out_tokens are kept
+        self.live.clear()
+        while self.queue:
+            req = self.queue.pop(0)
+            if req.error is None:
+                req.error = EngineClosed("engine shut down before admission")
+            self._fail(req)
+        return joined
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.shutdown()
+        return False
+
     # -- internals -----------------------------------------------------------
+    def _trace_event(self, event: str, rid: int):
+        self.trace.append((event, rid, time.monotonic()))
+
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_cache:
             cfg = self.cfg
@@ -156,43 +349,95 @@ class ServingEngine:
         return self._prefill_cache[bucket]
 
     def _stage(self):
-        """Producer half of the TABM edge: run the plan's frontend/projector
-        stages for queued vlm requests and commit the embeds into ring
-        slots, ahead of (and decoupled from) KV-slot admission.  A FULL
-        ring stalls the producer — the stalled request stays at the queue
-        head and staging retries next step (backpressure, never a bypass)."""
+        """Synchronous fallback producer (``async_staging=False``): run the
+        plan's frontend/projector stages inline for queued vlm requests.
+        A FULL ring stalls the producer — the stalled request stays at the
+        queue head and staging retries next step (backpressure, never a
+        bypass)."""
         if self.tabm is None:
             return
         for req in self.queue:
             if req.staged:
                 continue
-            if req.vision_feats is None:
-                req.staged = True              # text-only: nothing to commit
+            if not req.stage_submitted:    # one stage_start per request,
+                req.stage_submitted = True  # even across FULL-stall retries
+                self._trace_event("stage_start", req.rid)
+            try:
+                slot = self.plan.produce(
+                    {"vision_feats": jnp.asarray(req.vision_feats)})
+            except Exception as e:             # surface on the owning request
+                req.error = e
+                req._staged_ev.set()            # marks staged
+                self._trace_event("stage_error", req.rid)
                 continue
-            slot = self.plan.produce(
-                {"vision_feats": jnp.asarray(req.vision_feats)})
             if slot is None:                   # FULL -> stall, retry later
                 break
             req.tabm_slot = slot
-            req.staged = True
+            req._staged_ev.set()           # marks staged
+            self._trace_event("stage_commit", req.rid)
+
+    def _feed_staging(self):
+        """Admission's producer hand-off: give the worker more requests only
+        while the staged-ahead depth budget (scheduler hook) allows — the
+        ring itself would block the worker past that anyway, and a bounded
+        hand-off queue keeps shutdown cancellation cheap."""
+        # n_slots + 1: one request beyond ring capacity may be handed over,
+        # so a FULL ring stalls the producer *thread* inside acquire_write
+        # (the paper's backpressure point) instead of starving it at the
+        # hand-off; shutdown wakes that stall via ring close
+        budget = staging_budget(self.tabm, self._worker.in_flight,
+                                max_ahead=self.tabm.n_slots + 1)
+        for req in self.queue:
+            if budget <= 0:
+                break
+            if req.staged or req.stage_submitted or req.vision_feats is None:
+                continue
+            req.stage_submitted = True
+            self._worker.submit(req)
+            budget -= 1
 
     def _bind_vision(self, req: Request) -> Optional[jnp.ndarray]:
-        """Consumer half: bind the oldest READY ring slot as the prefill's
-        vision input.  FIFO commit order == FIFO admission order, so the
-        bound slot is this request's."""
+        """Consumer half: per-slot ready wait on the request's slot, then
+        bind the oldest READY ring slot as the prefill's vision input.
+        FIFO commit order == FIFO admission order, so the bound slot is
+        this request's; the seqlock generation is captured so release can
+        assert the zero-copy view stayed valid across the prefill."""
         if req.tabm_slot is None:
             return None
+        # normally immediate — admission only runs once `staged` is set,
+        # which the worker sets strictly after commit — but this is the
+        # formal consumer-side gate (and the blocking point if admission
+        # ever runs ahead of the staged flag)
+        if not self.plan.wait_ready(req.tabm_slot, timeout=30.0):
+            raise TABMError(
+                f"slot {req.tabm_slot} did not become READY (aborted, "
+                f"ring closed, or timed out)")
         got = self.plan.consume()
-        assert got is not None and got[0] == req.tabm_slot
+        if got is None or got[0] != req.tabm_slot:
+            # enforced with a real raise (not assert): this is the FIFO
+            # contract the whole zero-copy hand-off stands on
+            raise TABMError(
+                f"consume returned {got and got[0]}, expected request "
+                f"{req.rid}'s slot {req.tabm_slot} (FIFO order broken)")
         slot, view, n = got
+        req._tabm_gen = self.tabm.slot_generation(slot)
         return view[None, :n]
+
+    def _fail(self, req: Request):
+        req.finish_t = req.finish_t or time.time()
+        self.stats.failed += 1
+        self._trace_event("failed", req.rid)
+        self.done.append(req)
 
     def _admit(self):
         state, knobs, _ = self.executor.current()
         power_ok = (knobs.admission_rate > 0
                     or state is PowerState.UNCONSTRAINED)
         if power_ok:
-            self._stage()                      # producer runs ahead
+            if self._worker is not None:
+                self._feed_staging()           # producer thread runs ahead
+            else:
+                self._stage()                  # sync fallback: inline
         budget = min(len(self.slots.free), knobs.max_batch)
         if not power_ok:
             budget = 0
@@ -200,30 +445,65 @@ class ServingEngine:
             req = self.queue[0]
             if self.tabm is not None and not req.staged:
                 break                          # producer stalled on FULL ring
+            # error is read only after the staged flag: the worker stores
+            # error before staged=True, so a failed request can never slip
+            # through as staged-with-no-slot and prefill without vision
+            if req.error is not None:          # staging failed: finish failed
+                self.queue.pop(0)
+                self._fail(req)
+                continue
             slot = self.slots.take_slot()
             if slot is None:
                 break
             self.queue.pop(0)
             budget -= 1
-            prompt = np.asarray(req.tokens, np.int32)
-            bucket = bucket_length(len(prompt),
-                                   buckets=self._buckets())
-            padded = np.zeros((1, bucket), np.int32)
-            padded[0, :len(prompt)] = prompt      # right-pad into the bucket
-            vision = self._bind_vision(req)
-            logits, cache = self._prefill_fn(bucket)(
-                self.params, jnp.asarray(padded), vision,
-                jnp.asarray([len(prompt)], jnp.int32))
-            if req.tabm_slot is not None:      # prefill consumed the view
-                self.plan.release(req.tabm_slot)
+            try:
+                prompt = np.asarray(req.tokens, np.int32)
+                bucket = bucket_length(len(prompt),
+                                       buckets=self._buckets())
+                padded = np.zeros((1, bucket), np.int32)
+                padded[0, :len(prompt)] = prompt  # right-pad into the bucket
+                vision = self._bind_vision(req)
+                logits, cache = self._prefill_fn(bucket)(
+                    self.params, jnp.asarray(padded), vision,
+                    jnp.asarray([len(prompt)], jnp.int32))
+                if req.tabm_slot is not None:  # prefill consumed the view
+                    if not self.tabm.view_valid(req.tabm_slot,
+                                                req._tabm_gen):
+                        raise TABMError(
+                            f"slot {req.tabm_slot} recycled under request "
+                            f"{req.rid}'s zero-copy view (seqlock "
+                            f"violation)")
+                    self.plan.release(req.tabm_slot)
+            except Exception as e:
+                # neither the KV slot nor a consumed ring slot may leak,
+                # and the request must still be accounted for (e.g. the
+                # ring closed under a concurrent shutdown mid-admission):
+                # fail this request, keep serving
+                if (req.tabm_slot is not None and req._tabm_gen is not None
+                        and self.tabm.view_valid(req.tabm_slot,
+                                                 req._tabm_gen)):
+                    self.plan.release(req.tabm_slot)   # consumed, unreleased
+                self.slots.release(slot)
+                req.error = e
+                self._fail(req)
+                continue
             self.slots.insert(slot, cache, len(prompt))
             req.slot = slot
             self.live[slot] = req
             self.stats.prefills += 1
+            self._trace_event("prefill", req.rid)
             # first token from the prefill logits
             tok = self._pick(logits, req)
             req.out_tokens.append(int(tok[0]))
             req.first_token_t = time.time()
+        if (self._worker is not None and not self.live and self.queue
+                and self.queue[0].error is None
+                and self.queue[0].stage_submitted   # worker WILL stage it —
+                and not self.queue[0].staged):      # power-gated heads won't
+            # idle consumer waiting on the producer: park briefly on the
+            # head request's staged event instead of hot-spinning the loop
+            self.queue[0]._staged_ev.wait(0.05)
 
     def _pick(self, logits, req: Request):
         if req.temperature == 0.0:
@@ -248,6 +528,7 @@ class ServingEngine:
         logits, self.slots.cache = self._decode(
             self.params, jnp.asarray(tokens), self.slots.cache)
         self.stats.steps += 1
+        self._trace_event("decode_step", self.stats.steps)
 
         finished = []
         for slot, req in list(self.live.items()):
@@ -261,9 +542,11 @@ class ServingEngine:
                 req.finish_t = time.time()
                 finished.append(slot)
         for slot in finished:
-            self.done.append(self.live.pop(slot))
+            req = self.live.pop(slot)
+            self.done.append(req)
             self.slots.release(slot)
             self.stats.finished += 1
+            self._trace_event("finish", req.rid)
 
     # -- reporting -----------------------------------------------------------
     def memory_bytes(self) -> Dict[str, int]:

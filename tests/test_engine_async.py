@@ -1,0 +1,235 @@
+"""Async TABM producer/consumer pipeline (serving/engine.StagingWorker).
+
+Covers the issue's acceptance criteria:
+* **overlap** — request k+1's vision encode begins (and commits) before
+  request k's last decode step, asserted on the engine's interleaving
+  trace with the requests pinned mid-decode so the evidence is
+  deterministic, not timing luck;
+* **equivalence** — greedy tokens from the async pipeline are identical to
+  the synchronous single-threaded path (same plan, same ring, one thread);
+* **drain protocol** — shutdown with staged-but-unconsumed slots releases
+  the whole ring back to EMPTY, joins the worker (no daemon thread left),
+  and fails still-queued requests with EngineClosed;
+* **error propagation** — a staging failure surfaces on the originating
+  request's ``error`` and the pipeline keeps serving later requests;
+* **admission depth** — core/scheduler.staging_budget counts STAGING+READY
+  (+ in-flight hand-offs), not raw occupancy.
+"""
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.scheduler import staged_ahead_depth, staging_budget
+from repro.core.tabm import CONSUMED, EMPTY, RingBuffer
+from repro.launch.steps import init_params
+from repro.serving.engine import EngineClosed, Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    import jax
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _vreq(cfg, rid, n_new=8, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(
+        rid=rid, tokens=(np.arange(6 + rid) % 50 + 3).astype(np.int32),
+        max_new_tokens=n_new,
+        vision_feats=rng.standard_normal(
+            (1, cfg.vision_tokens, cfg.vision_feat_dim)
+        ).astype(np.float32) * 0.02)
+
+
+def _idx(trace, event, rid):
+    for i, (ev, r, _) in enumerate(trace):
+        if ev == event and r == rid:
+            return i
+    raise AssertionError(f"{(event, rid)} not in trace: "
+                         f"{[(e, r) for e, r, _ in trace]}")
+
+
+def test_overlap_vision_encode_with_decode(vlm):
+    """The tentpole's proof: while request 0 sits mid-decode (we stop
+    stepping, so it cannot finish), the producer thread stages request 1's
+    vision encode to commit — then the trace shows stage_start/commit of
+    rid 1 strictly before rid 0's last decode step and finish."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        assert eng.async_staging
+        r0, r1 = _vreq(cfg, 0), _vreq(cfg, 1)
+        eng.submit(r0)
+        eng.submit(r1)
+        # step until r0 is admitted and has decoded at least one token
+        deadline = time.monotonic() + 120
+        while r0.slot is None or len(r0.out_tokens) < 2:
+            assert time.monotonic() < deadline, "r0 never started decoding"
+            eng.step()
+        assert r0.finish_t is None             # r0 is mid-decode, pinned
+        # the producer thread stages r1 concurrently — no step() calls run
+        assert r1._staged_ev.wait(60), "producer thread never staged r1"
+        assert r1.error is None and r1.tabm_slot is not None
+        assert r0.finish_t is None             # still mid-decode: overlap
+        done = eng.run()
+        assert {r.rid for r in done} == {0, 1}
+        tr = eng.trace
+        # k+1's vision encode began — and committed — before k's last
+        # decode step (the finish event directly follows that step)
+        assert _idx(tr, "stage_start", 1) < _idx(tr, "finish", 0)
+        assert _idx(tr, "stage_commit", 1) < _idx(tr, "finish", 0)
+
+
+def test_async_tokens_identical_to_sync(vlm):
+    """Greedy decode through the two-thread pipeline produces exactly the
+    synchronous path's tokens (same ring, same plan, zero numerics drift)."""
+    cfg, params = vlm
+    reqs = lambda: [_vreq(cfg, i, n_new=6) for i in range(3)]
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng_a:
+        done_a = {r.rid: r.out_tokens for r in _run_all(eng_a, reqs())}
+    eng_s = ServingEngine(cfg, params, n_slots=2, max_len=128,
+                          async_staging=False)
+    done_s = {r.rid: r.out_tokens for r in _run_all(eng_s, reqs())}
+    assert done_a == done_s
+    assert all(done_a[i] for i in range(3))
+
+
+def _run_all(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    return eng.run()
+
+
+def test_shutdown_drains_staged_slots_no_thread_left(vlm):
+    """Drain protocol: staged-but-unconsumed slots (and a producer parked
+    on the FULL ring) must not survive shutdown — ring fully EMPTY, worker
+    joined, queued requests failed with EngineClosed."""
+    cfg, params = vlm
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    n_ring = eng.tabm.n_slots
+    for i in range(n_ring + 2):                # overfill: forces a stall
+        eng.submit(_vreq(cfg, i))
+    eng._feed_staging()                        # hand over without admitting
+    # wait until the ring is staged full (worker committed n_ring slots)
+    deadline = time.monotonic() + 120
+    while eng.tabm.ready_count() < n_ring:
+        assert time.monotonic() < deadline, "worker never filled the ring"
+        time.sleep(0.005)
+    assert staged_ahead_depth(eng.tabm) == n_ring
+    worker_thread = eng._worker._thread
+    assert worker_thread is not None and worker_thread.is_alive()
+    assert eng.shutdown()                      # True = worker thread joined
+    assert all(st == EMPTY for st in eng.tabm.states)      # ring released
+    # THIS engine's producer thread is dead — no daemon left behind (other
+    # tests' engines may still park workers, so scope to our own thread)
+    assert not worker_thread.is_alive()
+    assert worker_thread not in threading.enumerate()
+    assert not eng.queue                       # everything resolved
+    failed = [r for r in eng.done if r.error is not None]
+    assert len(failed) == n_ring + 2           # none decoded, all cancelled
+    assert all(isinstance(r.error, EngineClosed) for r in failed)
+    assert eng.shutdown()                      # idempotent
+    with pytest.raises(EngineClosed):
+        eng.submit(_vreq(cfg, 99))
+
+
+def test_shutdown_resolves_live_mid_decode_requests(vlm):
+    """shutdown() must account for every submitted request: one admitted
+    and pinned mid-decode ends up in done, failed with EngineClosed,
+    keeping its partial tokens, and its KV slot is returned."""
+    cfg, params = vlm
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    r0 = _vreq(cfg, 0, n_new=32)
+    eng.submit(r0)
+    deadline = time.monotonic() + 120
+    while r0.slot is None or len(r0.out_tokens) < 2:
+        assert time.monotonic() < deadline, "r0 never started decoding"
+        eng.step()
+    assert eng.shutdown()
+    assert r0 in eng.done and isinstance(r0.error, EngineClosed)
+    assert r0.finish_t is not None and len(r0.out_tokens) >= 2
+    assert len(eng.slots.free) == eng.slots.n_slots    # KV slot returned
+    assert eng.stats.failed == 1 and not eng.live
+
+
+def test_dropped_engine_reaps_worker_thread(vlm):
+    """An engine discarded without shutdown() must not leak its producer
+    thread: the worker holds the engine only weakly, so collection fires
+    the finalizer, which closes the ring and joins the thread."""
+    import gc
+    cfg, params = vlm
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    r = _vreq(cfg, 0)
+    eng.submit(r)
+    eng._feed_staging()
+    assert r._staged_ev.wait(60)               # worker is up and parked
+    t = eng._worker._thread
+    assert t is not None and t.is_alive()
+    del eng
+    gc.collect()                               # finalizer -> worker.shutdown
+    t.join(10.0)
+    assert not t.is_alive()
+
+
+def test_staging_error_surfaces_on_owning_request(vlm):
+    """A projector blow-up mid-staging fails exactly the owning request
+    (error attached, finished failed) and the ring/pipeline keep serving."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        bad = _vreq(cfg, 0)
+        # wrong feature dim: the projector matmul cannot contract
+        bad.vision_feats = np.ones(
+            (1, cfg.vision_tokens, cfg.vision_feat_dim + 3), np.float32)
+        good = _vreq(cfg, 1, n_new=4)
+        eng.submit(bad)
+        eng.submit(good)
+        done = eng.run()
+        by_rid = {r.rid: r for r in done}
+        assert by_rid[0].error is not None and not by_rid[0].out_tokens
+        assert by_rid[1].error is None and len(by_rid[1].out_tokens) >= 4
+        assert eng.stats.failed == 1 and eng.stats.finished == 1
+        assert all(st == EMPTY for st in eng.tabm.states)  # nothing wedged
+        assert ("stage_error", 0) in [(e, r) for e, r, _ in eng.trace]
+
+
+def test_admission_failure_releases_kv_and_ring_slot(vlm):
+    """A prefill blow-up after the ring slot was consumed must release
+    both the KV slot and the ring slot and fail the request — repeated
+    failures must not shrink the ring or wedge the producer."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        def raising_prefill(bucket):
+            def fn(*a, **k):
+                raise RuntimeError("prefill exploded")
+            return fn
+        eng._prefill_fn = raising_prefill
+        for i in range(3):                     # more failures than ring slots
+            eng.submit(_vreq(cfg, i, n_new=4))
+        done = eng.run()
+        assert len(done) == 3
+        assert all(isinstance(r.error, RuntimeError) for r in done)
+        assert eng.stats.failed == 3
+        assert all(st == EMPTY for st in eng.tabm.states)  # ring recycled
+        assert len(eng.slots.free) == eng.slots.n_slots    # KV recycled
+
+
+def test_staging_budget_counts_depth_not_occupancy():
+    """The admission hook: a CONSUMED slot occupies the ring but is behind
+    the consumer — it must not count against staged-ahead depth."""
+    rb = RingBuffer(n_slots=4, max_tokens=2, dim=8)
+    assert staged_ahead_depth(rb) == 0
+    assert staging_budget(rb, in_flight=0) == 4
+    s = rb.acquire_write()                     # STAGING counts
+    assert staged_ahead_depth(rb) == 1
+    rb.commit_write(s, jnp.ones((1, 8)))       # READY counts
+    assert staged_ahead_depth(rb) == 1
+    assert staging_budget(rb, in_flight=2) == 1
+    slot, _, _ = rb.acquire_read()             # CONSUMED: behind consumer
+    assert rb.states[slot] == CONSUMED and rb.occupancy > 0
+    assert staged_ahead_depth(rb) == 0
+    assert staging_budget(rb, in_flight=0, max_ahead=2) == 2

@@ -112,9 +112,13 @@ def test_engine_first_token_matches_monolithic(key):
 def test_engine_tabm_full_stall_drain(key):
     """FULL -> stall -> drain through the engine: more vlm requests than
     ring slots; the producer stalls on the full ring (stats count it), no
-    request ever bypasses the ring, and everything drains."""
+    request ever bypasses the ring, and everything drains.  Runs the
+    synchronous pipeline so the stall is observable after exactly one
+    step; the async producer-thread variant is covered in
+    tests/test_engine_async.py."""
     cfg, params, _ = _setup("llava-onevision-0.5b", key)
-    eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=128,
+                        async_staging=False)
     assert eng.tabm.n_slots == 2
     rng = np.random.default_rng(0)
     n_req = 5

@@ -1,31 +1,43 @@
 """TABM ring buffer: state-machine invariants (hypothesis) + data
-integrity + producer/consumer smoothing signals."""
+integrity + producer/consumer smoothing signals + thread-safety
+(blocking acquire, close/drain, per-slot events, seqlock generation)
++ the ExecutionPlan.produce abort-on-error regression."""
+import threading
+import time
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, strategies as hst
 
-from repro.core.tabm import (ALLOCATED_FOR_READ, ALLOCATED_FOR_WRITE, FREE,
-                             READY_TO_READ, RingBuffer, TABMError)
+from repro.core.tabm import (ALLOCATED_FOR_READ, ALLOCATED_FOR_WRITE,
+                             CONSUMED, EMPTY, FREE, READY, READY_TO_READ,
+                             RingBuffer, STAGING, TABMError)
 
 
 def make(n=4, tokens=8, dim=16):
     return RingBuffer(n_slots=n, max_tokens=tokens, dim=dim)
 
 
+def test_legacy_state_aliases():
+    """Paper-wording names are the same states (importers keep working)."""
+    assert FREE == EMPTY and ALLOCATED_FOR_WRITE == STAGING
+    assert READY_TO_READ == READY and ALLOCATED_FOR_READ == CONSUMED
+
+
 def test_lifecycle_roundtrip():
     rb = make()
     s = rb.acquire_write()
-    assert rb.states[s] == ALLOCATED_FOR_WRITE
+    assert rb.states[s] == STAGING
     data = jnp.arange(8 * 16, dtype=jnp.float32).reshape(8, 16)
     rb.commit_write(s, data)
-    assert rb.states[s] == READY_TO_READ
+    assert rb.states[s] == READY
     slot, view, n = rb.acquire_read()
     assert slot == s and n == 8
     np.testing.assert_allclose(np.asarray(view[:n], np.float32),
                                np.asarray(data), rtol=1e-2)
     rb.release(slot)
-    assert rb.states[s] == FREE
+    assert rb.states[s] == EMPTY
 
 
 def test_ring_full_stalls_producer():
@@ -109,6 +121,182 @@ def test_state_machine_invariants_random_schedules(ops):
             assert float(view[0, 0]) == pytest.approx(expect, abs=1e-2)
             rb.release(slot)
         for st in rb.states:
-            assert st in (FREE, ALLOCATED_FOR_WRITE, READY_TO_READ,
-                          ALLOCATED_FOR_READ)
+            assert st in (EMPTY, STAGING, READY, CONSUMED)
     assert 0.0 <= rb.occupancy <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# thread-safety: the async producer/consumer contract
+# ---------------------------------------------------------------------------
+
+def test_blocking_acquire_write_unblocks_on_release():
+    """A producer parked on a FULL ring resumes when the consumer frees a
+    slot — backpressure stalls the producer thread, not a polling loop."""
+    rb = make(n=1)
+    s = rb.acquire_write(); rb.commit_write(s, jnp.ones((1, 16)))
+    got = []
+
+    def producer():
+        got.append(rb.acquire_write(block=True, timeout=10.0))
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)                           # producer is now parked
+    assert not got
+    slot, _, _ = rb.acquire_read()
+    rb.release(slot)                           # frees the ring
+    t.join(10.0)
+    assert got and got[0] == s                 # same head slot, FIFO kept
+    assert rb.stats["stalls"] >= 1
+
+
+def test_close_wakes_blocked_producer_and_consumer():
+    rb = make(n=1)
+    s = rb.acquire_write(); rb.commit_write(s, jnp.ones((1, 16)))
+    results = {}
+
+    def producer():
+        results["w"] = rb.acquire_write(block=True, timeout=10.0)
+
+    t = threading.Thread(target=producer)
+    t.start()
+    time.sleep(0.05)
+    rb.close()                                 # shutdown: wake everyone
+    t.join(10.0)
+    assert not t.is_alive() and results["w"] is None
+    assert rb.acquire_read(block=True, timeout=0.1) is None   # closed
+
+
+def test_per_slot_ready_event():
+    rb = make(n=2)
+    s = rb.acquire_write()
+    assert not rb.wait_ready(s, timeout=0.02)  # not committed yet
+    rb.commit_write(s, jnp.ones((1, 16)))
+    assert rb.wait_ready(s, timeout=1.0)       # event fired at commit
+    slot, _, _ = rb.acquire_read()
+    assert rb.wait_ready(slot, timeout=0)      # CONSUMED still counts
+    rb.release(slot)
+
+
+def test_wait_ready_unblocks_on_abort_and_close():
+    """A waiter must never hang on a slot that will no longer commit:
+    abort_write (generation bump) and close() both end the wait, False."""
+    rb = make(n=2)
+    s = rb.acquire_write()
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(rb.wait_ready(s, timeout=10.0)))
+    t.start(); time.sleep(0.05)
+    rb.abort_write(s)                          # producer gave up
+    t.join(10.0)
+    assert not t.is_alive() and out == [False]
+    s2 = rb.acquire_write()
+    out2 = []
+    t2 = threading.Thread(
+        target=lambda: out2.append(rb.wait_ready(s2, timeout=10.0)))
+    t2.start(); time.sleep(0.05)
+    rb.close()                                 # shutdown
+    t2.join(10.0)
+    assert not t2.is_alive() and out2 == [False]
+
+
+def test_generation_seqlock_view_validity():
+    """A consumer's zero-copy view is valid exactly while its slot stays
+    CONSUMED at the captured generation — recycling invalidates it."""
+    rb = make(n=2)
+    s = rb.acquire_write(); rb.commit_write(s, jnp.full((2, 16), 3.0))
+    slot, view, n = rb.acquire_read()
+    gen = rb.slot_generation(slot)
+    assert rb.view_valid(slot, gen)
+    rb.release(slot)
+    assert not rb.view_valid(slot, gen)        # recycled underneath
+    # the slot's next lifecycle has a different generation
+    s2 = rb.acquire_write()
+    assert rb.slot_generation(s2) != gen
+
+
+def test_drain_releases_ready_and_consumed():
+    rb = make(n=4)
+    for i in range(3):
+        s = rb.acquire_write()
+        rb.commit_write(s, jnp.full((1, 16), float(i)))
+    rb.acquire_read()                          # one CONSUMED, two READY
+    assert rb.drain() == 3
+    assert all(st == EMPTY for st in rb.states)
+    # a STAGING slot belongs to the producer: drain refuses
+    rb2 = make(n=2)
+    rb2.acquire_write()
+    with pytest.raises(TABMError):
+        rb2.drain()
+
+
+def test_threaded_producer_consumer_fifo_integrity():
+    """One producer thread + one consumer thread hammer a tiny ring; every
+    payload arrives exactly once, in order, and the ring ends EMPTY."""
+    rb = make(n=2, tokens=2, dim=8)
+    N = 16
+    seen = []
+
+    def producer():
+        for i in range(N):
+            s = rb.acquire_write(block=True, timeout=30.0)
+            assert s is not None
+            rb.commit_write(s, jnp.full((1, 8), float(i)))
+
+    def consumer():
+        while len(seen) < N:
+            got = rb.acquire_read(block=True, timeout=30.0)
+            assert got is not None
+            slot, view, _ = got
+            seen.append(round(float(view[0, 0])))
+            rb.release(slot)
+
+    tp = threading.Thread(target=producer)
+    tc = threading.Thread(target=consumer)
+    tp.start(); tc.start()
+    tp.join(60.0); tc.join(60.0)
+    assert not tp.is_alive() and not tc.is_alive()
+    assert seen == list(range(N))
+    assert all(st == EMPTY for st in rb.states)
+
+
+# ---------------------------------------------------------------------------
+# regression: a failing projector must not wedge the ring
+# ---------------------------------------------------------------------------
+
+def test_produce_error_aborts_slot_regression(key):
+    """ExecutionPlan.produce used to be able to leave a slot in STAGING
+    forever when an upstream brick raised; the write must be aborted (slot
+    back to EMPTY) and the error surfaced to the caller, after which the
+    ring still works."""
+    from repro.configs import get_config
+    from repro.core.bricks import decompose
+    from repro.core.plan import compile_plan
+    from repro.launch.steps import init_params
+
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(key, cfg)
+    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
+                      dim=cfg.d_model)
+    plan = compile_plan(decompose(cfg), params, tabm=ring)
+
+    boom = plan.steps[plan._tabm_producer].fn
+
+    def raising_projector(p, ctx):
+        raise RuntimeError("projector exploded")
+
+    plan.steps[plan._tabm_producer].fn = raising_projector
+    feats = jnp.ones((1, cfg.vision_tokens, cfg.vision_feat_dim),
+                     jnp.float32)
+    with pytest.raises(RuntimeError, match="projector exploded"):
+        plan.produce({"vision_feats": feats})
+    assert all(st == EMPTY for st in ring.states)      # aborted, not wedged
+    assert ring.stats["aborts"] == 1
+
+    plan.steps[plan._tabm_producer].fn = boom          # restore
+    slot = plan.produce({"vision_feats": feats})       # ring still usable
+    assert slot is not None
+    got = plan.consume()
+    assert got is not None and got[0] == slot
+    plan.release(slot)
+    assert all(st == EMPTY for st in ring.states)
