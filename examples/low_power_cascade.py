@@ -1,8 +1,11 @@
 """On-Demand Cascade Inference (paper Fig. 2), standalone.
 
-Shows the load -> execute -> release lifecycle per brick with a live
-residency trace, and verifies the cascade output equals the monolithic
-forward while peak memory stays near max(brick) instead of sum(bricks).
+The cascade is a *backend lowering*: ``compile_plan(..., backend="host")``
+lowers every brick through the transient HostBackend — params host-side,
+each brick load -> execute -> release on the pinned host thread (what the
+paper's Critical Conservation mode does on the NPU/DSP).  The trace shows
+the lifecycle live, and the output equals the monolithic forward while
+peak memory stays near max(brick) instead of sum(bricks).
 
     PYTHONPATH=src python examples/low_power_cascade.py
 """
@@ -12,17 +15,21 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.bricks import brick_param_bytes, decompose
-from repro.core.cascade import CascadeRunner
+from repro.core.plan import compile_plan
 from repro.launch.steps import init_params
 from repro.models.model import lm_forward
 
 cfg = get_config("stablelm-12b").reduced(n_layers=4)
 params = init_params(jax.random.PRNGKey(0), cfg)
 graph = decompose(cfg)
-runner = CascadeRunner(graph, params)
+# the battery policy's CRITICAL lowering, selected explicitly: same graph,
+# same jit-cached brick executables, host substrate (CascadeRunner is the
+# thin convenience wrapper over exactly this call)
+plan = compile_plan(graph, params, backend="host")
+print("lowering:", plan.describe())
 
 tokens = jnp.arange(24)[None] % 60 + 3
-out, trace = runner.run_once({"tokens": tokens})
+out, trace = plan.run({"tokens": tokens})
 
 print("event trace (resident bytes after each phase):")
 for e in trace.events:

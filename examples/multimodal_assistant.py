@@ -3,8 +3,10 @@
 Simulates the paper's demo device across a full battery discharge:
 camera/voice events arrive, the PMU drains with each inference (modeled
 energy), and the three-state policy visibly changes behavior —
-UNCONSTRAINED parallel serving -> THROTTLED (alpha-scaled admission)
--> CRITICAL (on-demand cascade, one-shot load->execute->release).
+UNCONSTRAINED parallel serving -> THROTTLED (alpha-scaled admission;
+deep throttling re-lowers the encoder bricks to the host backend via
+plan.relower) -> CRITICAL (on-demand cascade: the whole graph on the
+transient HostBackend, one-shot load->execute->release).
 
     PYTHONPATH=src python examples/multimodal_assistant.py
 """
@@ -17,7 +19,7 @@ import numpy as np
 from repro.analysis.energy import EDGE_GPU, EDGE_NPU, step_energy
 from repro.configs import get_config
 from repro.core.bricks import decompose
-from repro.core.cascade import CascadeRunner
+from repro.core.plan import compile_plan
 from repro.core.power import BatteryAwareExecutor, PMU, PowerState
 from repro.launch.steps import init_params
 from repro.serving.engine import Request, ServingEngine
@@ -25,12 +27,15 @@ from repro.serving.engine import Request, ServingEngine
 cfg = get_config("llava-onevision-0.5b").reduced()
 params = init_params(jax.random.PRNGKey(0), cfg)
 graph = decompose(cfg)
-cascade = CascadeRunner(graph, params)
+# CRITICAL-mode lowering: same graph, host substrate (what CascadeRunner
+# wraps); shares jit-cached brick executables with the engine's plan
+cascade = compile_plan(graph, params, backend="host")
 
-# a small battery so the demo crosses all three states quickly
+# a small battery so the demo crosses all three states quickly; the
+# engine's serving plan lowers through the committed-device backend
 executor = BatteryAwareExecutor(PMU(battery_mah=1.4))
 engine = ServingEngine(cfg, params, n_slots=4, max_len=256,
-                       executor=executor)
+                       executor=executor, backend="device")
 rng = np.random.default_rng(0)
 
 
@@ -56,11 +61,12 @@ for event in range(40):
         seen_states.append(state)
         print(f"\n=== battery {executor.pmu.level:5.0%}  ->  {state.value} "
               f"(objective={objective}, max_batch={knobs.max_batch}, "
-              f"fps={knobs.frame_rate_hz:.0f}) ===")
+              f"fps={knobs.frame_rate_hz:.0f}, "
+              f"demote={knobs.backend_demotion or '-'}) ===")
 
     if knobs.cascade:
         # CRITICAL: event-triggered one-shot cascade, minimal residency
-        out, trace = cascade.run_once({
+        out, trace = cascade.run({
             "tokens": jnp.asarray(camera_event(rid).tokens)[None],
             "vision_feats": jnp.asarray(camera_event(rid).vision_feats)})
         print(f"  [cascade] event {event}: logits {tuple(out.shape)}, "
@@ -75,8 +81,10 @@ for event in range(40):
                 break
         if engine.done:
             last = engine.done[-1]
+            enc_be = engine.plan.backend_of("projector").name
             print(f"  [engine ] req {last.rid}: {len(last.out_tokens)} "
-                  f"tokens, e2e {last.e2e_latency:.2f}s")
+                  f"tokens, e2e {last.e2e_latency:.2f}s, "
+                  f"encoder backend={enc_be}")
     executor.pmu.drain(E_EVENT, dt=1.0)
 
 print(f"\nstates visited: {[s.value for s in seen_states]}")

@@ -31,4 +31,12 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.dryrun --arch llava-onevision-0.5b \
     --shape decode_32k --reduced --out /tmp/repro-check/dryrun
 
+echo "== backend lowering matrix: host | device | submesh =="
+# the same reduced vlm graph must compile and run under every backend in
+# the core/backends table (submesh on 8 placeholder devices), so no
+# backend path rots without TPU hardware
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.dryrun_backends --arch llava-onevision-0.5b \
+    --backends host,device,submesh
+
 echo "OK: check passed"

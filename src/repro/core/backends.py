@@ -1,0 +1,316 @@
+"""Backend lowering — one Placement, many substrates (paper §3.2).
+
+The paper's core claim is that each LMM brick runs on its *best-suited*
+compute unit (NPU / GPU / DSP).  A :class:`Backend` owns the four
+substrate-specific decisions :func:`repro.core.plan.compile_plan` used to
+hardcode behind ``if accel.mesh is not None`` branches:
+
+* ``bind_params(brick, params, accel)`` — where a brick's weights live
+  between executions (submesh-sharded, committed to one device, or
+  host-side numpy);
+* ``compile_fn(brick, cfg)`` — the brick's executable, drawn from one
+  module-level jit cache (keyed ``(brick, cfg, kernel-mode)``) so the
+  engine, cascade, and scheduler paths share compiled executables, and
+  consulting :mod:`repro.kernels.dispatch` for the Pallas-vs-reference
+  kernel decision;
+* ``make_edge(src_accel, dst_accel)`` — the inbound-transfer factory for
+  values produced on a different accelerator (SubmeshPipe over ICI,
+  committed device_put, or a host pull);
+* ``load / unload`` — one-brick residency: a *transient* backend
+  (``resident = False``) materializes params load -> execute -> release,
+  the paper's On-Demand Cascade policy.
+
+Concrete backends and the paper's hardware they stand in for:
+
+=============== ======================= ================================
+backend          paper unit              lowering
+=============== ======================= ================================
+SubmeshBackend   pod-scale "NPU"/"GPU"   NamedSharding onto the accel's
+                 submesh slices          submesh + SubmeshPipe edges
+DeviceBackend    single GPU/TPU          committed default-device
+                                         placement, device_put edges
+HostBackend      NPU/DSP emulated on     host-side numpy params,
+                 a pinned CPU thread     load->execute->release,
+                                         reference kernels (force_ref)
+=============== ======================= ================================
+
+``Accelerator.backend`` names a row of this table; ``schedule()`` carries
+it into ``Placement.backends``; ``compile_plan`` resolves each brick
+through :func:`resolve_backend` — the same graph lowers to any substrate,
+and :meth:`repro.core.plan.ExecutionPlan.relower` re-lowers a single
+brick (the ``PowerPolicy.knobs`` THROTTLED demotion hook).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bricks import Brick
+from repro.kernels import dispatch
+
+
+class BackendError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# shared executable cache — one jit per (brick, cfg, kernel-mode), so every
+# compile_plan call (engine, cascade, scheduler, re-lowering) reuses the
+# same compiled callables instead of minting a fresh jax.jit per plan
+# ---------------------------------------------------------------------------
+
+_JIT_CACHE: Dict[Tuple[Any, Any, str], Callable] = {}
+_JIT_CACHE_LOCK = threading.Lock()
+
+
+def brick_executable(brick: Brick, cfg, mode: str = "auto") -> Callable:
+    """The brick's jitted ``(params, ctx) -> out`` callable.
+
+    ``mode`` is the kernel-dispatch mode baked into the trace:
+    ``"auto"`` (Pallas on TPU, interpret elsewhere) or ``"ref"`` (the
+    reference/interpret path always — every call runs under
+    ``dispatch.force_ref()`` so retraces can never escape it).
+
+    Brick and ModelConfig are frozen dataclasses, so two ``decompose(cfg)``
+    calls over equal configs produce equal keys and hit the same entry —
+    the cache works *across* plans, which is what lets the engine,
+    cascade, and scheduler paths share compiled executables."""
+    key = (brick, cfg, mode)
+    with _JIT_CACHE_LOCK:
+        fn = _JIT_CACHE.get(key)
+        if fn is not None:
+            return fn
+        jitted = jax.jit(lambda p, ctx, _b=brick: _b.apply(p, cfg, ctx))
+        if mode == "ref":
+            def fn(p, ctx, _j=jitted):
+                with dispatch.force_ref():
+                    return _j(p, ctx)
+        else:
+            # an "auto" executable must never trace while a reference
+            # override is in effect — jit would bake interpret=True into
+            # the shared cache entry for every later caller.  Route such
+            # calls to the "ref" variant instead (per call, so toggling
+            # REPRO_FORCE_REF or a force_ref() scope always takes effect).
+            def fn(p, ctx, _j=jitted, _b=brick):
+                if dispatch.force_ref_active():
+                    return brick_executable(_b, cfg, "ref")(p, ctx)
+                return _j(p, ctx)
+        _JIT_CACHE[key] = fn
+        return fn
+
+
+def jit_cache_len() -> int:
+    """Number of cached brick executables (test hook for cache hits)."""
+    return len(_JIT_CACHE)
+
+
+# ---------------------------------------------------------------------------
+# the Backend protocol
+# ---------------------------------------------------------------------------
+
+class Backend:
+    """The four substrate-specific decisions of plan lowering.
+
+    Subclasses override the hooks; the base class is the protocol
+    documentation (and deliberately not instantiable into a plan —
+    ``resolve_backend`` only hands out registered concrete backends)."""
+
+    name: str = "base"
+    #: params stay bound between executions; False = load->execute->release
+    resident: bool = True
+    #: kernels/dispatch mode baked into this backend's executables
+    kernel_mode: str = "auto"
+
+    def bind_params(self, brick: Brick, params, accel=None):
+        """Placement-time binding of the brick's param slice."""
+        raise NotImplementedError
+
+    def compile_fn(self, brick: Brick, cfg) -> Callable:
+        """The brick's executable, from the shared jit cache."""
+        return brick_executable(brick, cfg, self.kernel_mode)
+
+    def make_edge(self, src_accel, dst_accel) -> Optional[Callable]:
+        """Inbound transfer for values produced on a different accelerator
+        (``src_accel`` may be None: an external input or host producer).
+        None = no transfer needed."""
+        return None
+
+    def load(self, brick: Brick, bound):
+        """Materialize params for one execution (transient backends)."""
+        return bound
+
+    def unload(self, dev_params) -> None:
+        """Release what :meth:`load` materialized (transient backends)."""
+
+
+class SubmeshBackend(Backend):
+    """Today's pod path, behavior-preserving: brick weights device_put onto
+    the accelerator's submesh (replicated NamedSharding) and every
+    cross-accelerator edge a sharding-preserving device_put over ICI
+    (:class:`repro.core.scheduler.SubmeshPipe`) — never through the host."""
+
+    name = "submesh"
+
+    def bind_params(self, brick, params, accel=None):
+        if accel is None or getattr(accel, "mesh", None) is None:
+            raise BackendError(
+                f"submesh backend needs an accelerator with a mesh to "
+                f"lower brick {brick.name!r}")
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        return jax.device_put(brick.params_of(params),
+                              NamedSharding(accel.mesh, P()))
+
+    def make_edge(self, src_accel, dst_accel):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        if getattr(dst_accel, "mesh", None) is None:
+            raise BackendError("submesh edge needs a destination mesh")
+        if src_accel is not None and getattr(src_accel, "mesh", None) \
+                is not None:
+            from repro.core.scheduler import SubmeshPipe
+            return SubmeshPipe(src_accel, dst_accel, P()).transfer
+        dst = NamedSharding(dst_accel.mesh, P())
+        return lambda v, _s=dst: jax.device_put(v, _s)
+
+
+class DeviceBackend(Backend):
+    """Single-GPU/TPU lowering: brick weights committed to one device
+    (default: ``jax.devices()[0]``), inbound edges a committed device_put
+    onto that device's stream, no submeshes anywhere."""
+
+    name = "device"
+
+    def __init__(self, device=None):
+        self._device = device
+
+    @property
+    def device(self):
+        return self._device if self._device is not None else jax.devices()[0]
+
+    def bind_params(self, brick, params, accel=None):
+        return jax.device_put(brick.params_of(params), self.device)
+
+    def make_edge(self, src_accel, dst_accel):
+        return lambda v, _d=self.device: jax.device_put(v, _d)
+
+
+class HostBackend(Backend):
+    """Thread-pinned CPU execution emulating the paper's NPU/DSP bricks.
+
+    * params are bound host-side (numpy) and materialized per execution —
+      ``load -> execute -> release`` — which is exactly the On-Demand
+      Cascade residency policy (``residency="one-brick"`` lowers every
+      brick through this backend);
+    * executables are traced under ``dispatch.force_ref()``: host bricks
+      always take the reference/interpret kernels, like the paper's units
+      that never run the MXU Pallas path;
+    * execution is pinned to one dedicated thread per backend instance —
+      the emulated compute unit — so host bricks serialize against each
+      other the way a real offload target would, whichever engine/worker
+      thread drives the plan."""
+
+    name = "host"
+    resident = False
+    kernel_mode = "ref"
+
+    def __init__(self, pin_thread: bool = True):
+        self._pin = pin_thread
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pool_lock = threading.Lock()
+        self._pool_tids: set = set()
+
+    def _executor(self) -> ThreadPoolExecutor:
+        with self._pool_lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="host-backend",
+                    initializer=lambda: self._pool_tids.add(
+                        threading.get_ident()))
+            return self._pool
+
+    def bind_params(self, brick, params, accel=None):
+        return jax.tree.map(np.asarray, brick.params_of(params))
+
+    def compile_fn(self, brick, cfg):
+        fn = brick_executable(brick, cfg, self.kernel_mode)
+        if not self._pin:
+            return fn
+
+        def pinned(p, ctx, _fn=fn):
+            if threading.get_ident() in self._pool_tids:
+                return _fn(p, ctx)          # already on the pinned thread
+            return self._executor().submit(_fn, p, ctx).result()
+
+        return pinned
+
+    def make_edge(self, src_accel, dst_accel):
+        # jax.devices("cpu") is the right probe: the CPU platform is
+        # registered even when the default backend is TPU/GPU, while
+        # local_devices() only lists the default backend's devices
+        try:
+            cpu = jax.devices("cpu")[0]
+        except RuntimeError:
+            cpu = None
+        if cpu is not None:
+            return lambda v, _d=cpu: jax.device_put(v, _d)
+        return lambda v: jnp.asarray(np.asarray(v))
+
+    def load(self, brick, bound):
+        return jax.tree.map(jnp.asarray, bound)
+
+    def unload(self, dev_params):
+        for leaf in jax.tree.leaves(dev_params):
+            if hasattr(leaf, "delete"):
+                try:
+                    leaf.delete()
+                except Exception:
+                    pass
+
+
+# ---------------------------------------------------------------------------
+# registry — the backend table compile_plan consults
+# ---------------------------------------------------------------------------
+
+BACKENDS: Dict[str, Backend] = {
+    "submesh": SubmeshBackend(),
+    "device": DeviceBackend(),
+    "host": HostBackend(),
+}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Add a custom substrate to the lowering table."""
+    BACKENDS[backend.name] = backend
+    return backend
+
+
+def resolve_backend(spec: Union[str, Backend, None],
+                    accel=None) -> Backend:
+    """Resolve a backend spec to a concrete Backend.
+
+    Priority: explicit ``spec`` (Backend instance or registry name) >
+    the accelerator's ``backend`` profile field > inferred from the
+    accelerator (mesh -> submesh, mesh-less -> host: the paper's edge
+    units are emulated host-side) > ``device`` (default-device
+    placement when nothing was specified)."""
+    if isinstance(spec, Backend):
+        return spec
+    if spec is not None:
+        try:
+            return BACKENDS[spec]
+        except KeyError:
+            raise BackendError(
+                f"unknown backend {spec!r}; registered: "
+                f"{sorted(BACKENDS)}") from None
+    if accel is not None:
+        name = getattr(accel, "backend", None)
+        if name:
+            return resolve_backend(name)
+        if getattr(accel, "mesh", None) is not None:
+            return BACKENDS["submesh"]
+        return BACKENDS["host"]
+    return BACKENDS["device"]

@@ -6,9 +6,10 @@ loaded, performs its task, is released, and passes only the *minimal* output
 (a text string or an embedding vector) to the next stage: "a lightweight,
 domino-like chain" whose peak memory is max(brick) instead of sum(bricks).
 
-The cascade is now a *residency strategy*, not an interpreter: it compiles
-the BrickGraph with :func:`repro.core.plan.compile_plan` at
-``residency="one-brick"`` — brick params live host-side (numpy) and every
+The cascade is now a *backend strategy*, not an interpreter: it compiles
+the BrickGraph with :func:`repro.core.plan.compile_plan` lowering every
+brick through the transient ``HostBackend`` (``residency="one-brick"`` is
+the same lowering) — brick params live host-side (numpy) and every
 ``run_once`` loads one brick, applies it through the same jit-cached
 callable the serving engine uses, then deletes the device buffers before
 the next brick loads.  There is no per-kind dispatch here; the dataflow is
@@ -29,14 +30,16 @@ CascadeTrace = PlanTrace
 
 class CascadeRunner:
     """Event-triggered sequential pipeline over a BrickGraph: a thin
-    ``resident="one-brick"`` strategy over the shared ExecutionPlan."""
+    HostBackend (transient, load->execute->release) lowering of the
+    shared ExecutionPlan."""
 
     def __init__(self, graph: BrickGraph, host_params: Dict[str, Any]):
         """host_params: the full param pytree — held HOST-side (numpy) by
         the plan; cascade mode keeps nothing resident between events."""
         self.graph = graph
         self.cfg = graph.cfg
-        self.plan = compile_plan(graph, host_params, residency="one-brick")
+        self.plan = compile_plan(graph, host_params, backend="host",
+                                 residency="one-brick")
 
     def run_once(self, inputs: Dict[str, Any],
                  trace: Optional[CascadeTrace] = None):

@@ -15,11 +15,16 @@ Paper-term → API mapping:
   values (int tokens vs float features) when they bind.
 * **Module-level offloading (§3.2)** — a ``Placement`` from
   :func:`repro.core.scheduler.schedule` binds each brick to an
-  :class:`~repro.core.scheduler.Accelerator`.  When accelerators carry real
-  submeshes (pod mode), brick weights are device_put onto their submesh at
-  compile time and every cross-accelerator edge gets a
-  :class:`~repro.core.scheduler.SubmeshPipe` — a sharding-preserving
-  device_put over ICI, never through the host.
+  :class:`~repro.core.scheduler.Accelerator`, and each accelerator names a
+  :class:`~repro.core.backends.Backend` — the substrate the brick lowers
+  to.  ``compile_plan`` consults the backend table (never ``accel.mesh``
+  branches): ``SubmeshBackend`` device_puts weights onto the submesh and
+  wires :class:`~repro.core.scheduler.SubmeshPipe` edges (ICI, never the
+  host); ``DeviceBackend`` commits weights to one device;
+  ``HostBackend`` keeps them host-side and loads per execution.  The same
+  Placement therefore executes identically on any substrate, and
+  :meth:`ExecutionPlan.relower` moves one brick to a cheaper backend at
+  runtime (the battery policy's THROTTLED hook).
 * **Embeddings zero-copy transfer / TABM (§3.2)** — the edge whose producer
   emits ``vision_embeds`` routes through a
   :class:`~repro.core.tabm.RingBuffer`: :meth:`ExecutionPlan.produce` runs
@@ -27,11 +32,12 @@ Paper-term → API mapping:
   the TPU zero-copy), :meth:`ExecutionPlan.consume` binds the oldest READY
   slot for the decoder side, and a full ring stalls the producer — the
   backpressure signal the engine's admission loop obeys.
-* **On-demand cascade (§3.2, Fig. 2)** — ``residency="one-brick"`` keeps
-  params host-side and runs each brick load → execute → release, recording
-  a :class:`PlanTrace` that proves peak memory is max(brick) not
-  sum(bricks).  ``residency="resident"`` (default) binds all brick params
-  once for serving.
+* **On-demand cascade (§3.2, Fig. 2)** — ``residency="one-brick"`` lowers
+  every brick through the transient ``HostBackend``: params host-side,
+  each brick load → execute → release, recording a :class:`PlanTrace`
+  that proves peak memory is max(brick) not sum(bricks).
+  ``residency="resident"`` (default) binds all brick params once for
+  serving.
 """
 from __future__ import annotations
 
@@ -41,8 +47,8 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.core.backends import Backend, BACKENDS, resolve_backend
 from repro.core.bricks import Brick, BrickGraph, Port
 
 
@@ -89,15 +95,17 @@ class PlanTrace:
 
 @dataclass
 class PlanStep:
-    """One brick bound to its accelerator, params, and jitted callable."""
+    """One brick bound to its backend, accelerator, params, and callable."""
 
     brick: Brick
     fn: Callable                       # jitted (params, ctx) -> out
-    params: Any                        # device tree (resident) | host tree
+    params: Any                        # backend-bound tree (device | host)
+    backend: Backend                   # the lowering substrate
     accel: Optional[object] = None     # scheduler.Accelerator or None
     inbound: Dict[str, Callable] = field(default_factory=dict)
     # inbound: port name -> transfer fn applied when the value was produced
-    # on a different accelerator (SubmeshPipe.transfer / device_put)
+    # on a different accelerator (backend.make_edge: SubmeshPipe.transfer,
+    # committed device_put, or host pull)
 
 
 class ExecutionPlan:
@@ -127,6 +135,7 @@ class ExecutionPlan:
         self._tabm_producer = tabm_producer
         self._tabm_transfer = tabm_transfer
         self.input_ports = input_ports
+        self._params = None            # full tree, kept for relower()
         # "what a monolithic load would have held": each top-level param
         # entry once — tied-embedding archs share "embed" between the
         # embedding and head bricks and must not count it twice
@@ -134,6 +143,17 @@ class ExecutionPlan:
         for s in steps:
             merged.update(s.params)
         self._sum_bytes = _nbytes(merged)
+        self._resident_bytes = self._resident_baseline()
+
+    def _resident_baseline(self) -> int:
+        """Bytes held by resident-backend steps between executions (tied
+        params counted once); transient (host) steps contribute zero.
+        Cached as ``_resident_bytes``; recomputed only by relower()."""
+        merged: Dict[str, Any] = {}
+        for s in self.steps:
+            if s.backend.resident:
+                merged.update(s.params)
+        return _nbytes(merged)
 
     # -- introspection ------------------------------------------------------
     def brick_params(self, name: str) -> Any:
@@ -142,14 +162,48 @@ class ExecutionPlan:
                 return s.params
         raise KeyError(name)
 
+    def backend_of(self, name: str) -> Backend:
+        for s in self.steps:
+            if s.brick.name == name:
+                return s.backend
+        raise KeyError(name)
+
     def describe(self) -> str:
         rows = []
         for s in self.steps:
             ins = ",".join(p.name + ("?" if p.optional else "")
                            for p in s.brick.in_ports)
             acc = s.accel.name if s.accel is not None else "-"
-            rows.append(f"{s.brick.name}({ins})->{s.brick.out_port.name}@{acc}")
+            rows.append(f"{s.brick.name}({ins})->{s.brick.out_port.name}"
+                        f"@{acc}/{s.backend.name}")
         return " | ".join(rows)
+
+    # -- re-lowering (the battery policy's THROTTLED hook) ------------------
+    def relower(self, brick_name: str, backend) -> PlanStep:
+        """Re-lower one brick to a different backend at runtime: re-bind
+        its params and swap in the (shared, jit-cached) executable for
+        that substrate.  The step is replaced atomically, so a concurrent
+        ``produce`` on the staging thread sees either the old or the new
+        step, never a half-built one.  Routing (accel identity, inbound
+        transfers) is preserved — re-lowering changes where the brick's
+        *weights and compute* live, not the graph wiring."""
+        be = resolve_backend(backend)
+        for i, s in enumerate(self.steps):
+            if s.brick.name != brick_name:
+                continue
+            if s.backend is be:
+                return s
+            if self._params is None:
+                raise PlanError("plan kept no full param tree; relower "
+                                "is only available on compile_plan output")
+            new = PlanStep(
+                brick=s.brick, fn=be.compile_fn(s.brick, self.cfg),
+                params=be.bind_params(s.brick, self._params, s.accel),
+                backend=be, accel=s.accel, inbound=s.inbound)
+            self.steps[i] = new        # atomic swap under the GIL
+            self._resident_bytes = self._resident_baseline()
+            return new
+        raise KeyError(brick_name)
 
     # -- execution ----------------------------------------------------------
     @staticmethod
@@ -178,17 +232,7 @@ class ExecutionPlan:
         return ctx
 
     def _load(self, step: PlanStep):
-        if self.residency == "one-brick":
-            return jax.tree.map(jnp.asarray, step.params)
-        return step.params
-
-    def _unload(self, dev_params):
-        for leaf in jax.tree.leaves(dev_params):
-            if hasattr(leaf, "delete"):
-                try:
-                    leaf.delete()
-                except Exception:
-                    pass
+        return step.backend.load(step.brick, step.params)
 
     def run(self, inputs: Dict[str, Any],
             trace: Optional[PlanTrace] = None) -> Tuple[Any, PlanTrace]:
@@ -199,21 +243,21 @@ class ExecutionPlan:
         every pass."""
         trace = trace if trace is not None else PlanTrace()
         trace.sum_bytes = max(trace.sum_bytes, self._sum_bytes)
-        one_brick = self.residency == "one-brick"
-        resident = 0 if one_brick else self._sum_bytes
+        resident = self._resident_bytes
         env: Dict[str, Any] = dict(inputs)
         env_src: Dict[str, Any] = {k: None for k in env}
         out = None
         ring_slot = None
         for i, step in enumerate(self.steps):
+            transient = not step.backend.resident
             dev_params = self._load(step)
-            if one_brick:
+            if transient:
                 resident += _nbytes(dev_params)
             trace.record(step.brick.name, "load", resident)
 
             ctx = self._gather(step, env, env_src)
             out = step.fn(dev_params, ctx)
-            if one_brick:
+            if transient:
                 out = jax.block_until_ready(out)
             trace.record(step.brick.name, "execute", resident)
 
@@ -222,9 +266,9 @@ class ExecutionPlan:
             env[step.brick.out_port.name] = out
             env_src[step.brick.out_port.name] = step.accel
 
-            if one_brick:
+            if transient:
                 # release: only `out` survives to the next stage
-                self._unload(dev_params)
+                step.backend.unload(dev_params)
                 resident -= _nbytes(dev_params)
             trace.record(step.brick.name, "release", resident)
             del dev_params
@@ -282,8 +326,13 @@ class ExecutionPlan:
             env_src: Dict[str, Any] = {k: None for k in env}
             out = None
             for step in self.steps[: self._tabm_producer + 1]:
+                transient = not step.backend.resident
+                dev_params = self._load(step)
                 ctx = self._gather(step, env, env_src)
-                out = step.fn(self._load(step), ctx)
+                out = step.fn(dev_params, ctx)
+                if transient:
+                    out = jax.block_until_ready(out)
+                    step.backend.unload(dev_params)
                 env[step.brick.out_port.name] = out
                 env_src[step.brick.out_port.name] = step.accel
             if out.shape[0] != 1:
@@ -319,40 +368,58 @@ class ExecutionPlan:
 # compiler
 # ---------------------------------------------------------------------------
 
-def _bind_params(brick: Brick, params, accel, residency: str):
-    sub = brick.params_of(params)
+def _backend_for(brick_name: str, accel, *, override, placement_backends,
+                 residency: str) -> Backend:
+    """The backend table lookup, in priority order: an explicit
+    compile_plan ``backend=`` override (global or per-brick dict) >
+    ``residency="one-brick"`` (every brick through the transient
+    HostBackend) > the Placement's carried backend name > the
+    accelerator's profile / the default (see backends.resolve_backend)."""
+    if override is not None:
+        spec = override.get(brick_name) if isinstance(override, dict) \
+            else override
+        if spec is not None:
+            be = resolve_backend(spec, accel)
+            if residency == "one-brick" and be.resident:
+                raise PlanError(
+                    f"residency='one-brick' needs a transient backend, "
+                    f"but brick {brick_name!r} was overridden to the "
+                    f"resident {be.name!r} backend")
+            return be
     if residency == "one-brick":
-        return jax.tree.map(np.asarray, sub)       # host-side until loaded
-    if accel is not None and getattr(accel, "mesh", None) is not None:
-        from jax.sharding import NamedSharding, PartitionSpec as P
-        return jax.device_put(sub, NamedSharding(accel.mesh, P()))
-    return sub
-
-
-def _make_fn(brick: Brick, cfg):
-    # one jit per brick; jit's own cache handles per-shape retraces, so the
-    # engine/cascade/scheduler paths all share compiled executables
-    return jax.jit(lambda p, ctx, _b=brick: _b.apply(p, cfg, ctx))
+        return BACKENDS["host"]
+    if placement_backends and brick_name in placement_backends:
+        return resolve_backend(placement_backends[brick_name], accel)
+    return resolve_backend(None, accel)
 
 
 def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
-                 tabm=None, residency: str = "resident") -> ExecutionPlan:
+                 tabm=None, residency: str = "resident",
+                 backend=None) -> ExecutionPlan:
     """Compile a BrickGraph (+ optional Placement and TABM ring) into an
     :class:`ExecutionPlan`.
 
     placement: a :class:`~repro.core.scheduler.Placement` or a raw
-        ``{brick_name: accel_name}`` dict; requires ``accels``.
-    accels: the accelerator list the placement names refer to.  Accelerators
-        with a real ``mesh`` get their brick weights device_put onto the
-        submesh and SubmeshPipe transfers on cross-accelerator edges.
+        ``{brick_name: accel_name}`` dict; requires ``accels``.  A
+        Placement's ``backends`` map (filled by ``schedule()`` from each
+        accelerator's ``backend`` profile field) picks each brick's
+        lowering substrate.
+    accels: the accelerator list the placement names refer to.
     tabm: a :class:`~repro.core.tabm.RingBuffer` for the vision_embeds
         edge (the paper's zero-copy hand-off).
     residency: "resident" (serving: params bound once) | "one-brick"
-        (cascade: load -> execute -> release, host-side between events).
+        (cascade: every brick lowered through the transient HostBackend —
+        load -> execute -> release, host-side between events).
+    backend: override the backend table — a registry name
+        (``"submesh" | "device" | "host"``), a
+        :class:`~repro.core.backends.Backend` instance, or a per-brick
+        ``{brick_name: spec}`` dict.  The same graph + placement lowers
+        to any substrate; see docs/ARCHITECTURE.md "Backend lowering".
     """
     if residency not in ("resident", "one-brick"):
         raise PlanError(f"unknown residency {residency!r}")
     assignment = getattr(placement, "assignment", placement)
+    placement_backends = getattr(placement, "backends", None)
     by_name = {a.name: a for a in (accels or [])}
     if assignment:
         missing = [b.name for b in graph.bricks if b.name not in assignment]
@@ -374,35 +441,36 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
 
     steps: List[PlanStep] = []
     src_accel: Dict[str, Any] = {}                 # port -> producing accel
-    pipes: Dict[Tuple[str, str], Any] = {}
+    edges: Dict[Tuple[str, str, str], Any] = {}    # (src, dst, backend) -> fn
     for b in graph.bricks:
         accel = by_name[assignment[b.name]] if assignment else None
+        be = _backend_for(b.name, accel, override=backend,
+                          placement_backends=placement_backends,
+                          residency=residency)
         inbound: Dict[str, Callable] = {}
-        if accel is not None and accel.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec as P
-            from repro.core.scheduler import SubmeshPipe
-            dst_sharding = NamedSharding(accel.mesh, P())
+        if accel is not None:
             for p in b.in_ports:
                 src = src_accel.get(p.name)
                 if src is accel:
                     continue
-                if src is not None and src.mesh is not None:
-                    key = (src.name, accel.name)
-                    if key not in pipes:
-                        pipes[key] = SubmeshPipe(src, accel, P())
-                    inbound[p.name] = pipes[key].transfer
-                else:       # external input (or host-side producer)
-                    inbound[p.name] = (
-                        lambda v, s=dst_sharding: jax.device_put(v, s))
+                # keyed on the backend *instance*: two distinct instances
+                # sharing a registry name (e.g. DeviceBackends pinned to
+                # different devices) must not reuse each other's transfer
+                key = (src.name if src is not None else "-",
+                       accel.name, id(be))
+                if key not in edges:
+                    edges[key] = be.make_edge(src, accel)
+                if edges[key] is not None:
+                    inbound[p.name] = edges[key]
         steps.append(PlanStep(
-            brick=b, fn=_make_fn(b, graph.cfg),
-            params=_bind_params(b, params, accel, residency),
-            accel=accel, inbound=inbound))
+            brick=b, fn=be.compile_fn(b, graph.cfg),
+            params=be.bind_params(b, params, accel),
+            backend=be, accel=accel, inbound=inbound))
         src_accel[b.out_port.name] = accel
 
     # the TABM edge: the brick producing vision_embeds hands off through the
-    # ring; the transfer (if the consumer sits on another submesh) happens
-    # producer-side so the pool can live consumer-side
+    # ring; the transfer (if the consumer sits on another submesh/device)
+    # happens producer-side so the pool can live consumer-side
     tabm_producer = tabm_transfer = None
     if tabm is not None:
         for i, s in enumerate(steps):
@@ -421,5 +489,6 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
                          tabm_producer=tabm_producer,
                          tabm_transfer=tabm_transfer,
                          input_ports=tuple(externals))
-    plan.pipes = pipes
+    plan.pipes = edges
+    plan._params = params
     return plan

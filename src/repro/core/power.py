@@ -61,6 +61,14 @@ class Knobs:
     mem_clock_scale: float       # paper's memory read/write rate scale
     submesh_width: float         # fraction of the pod's "model" axis to use
     cascade: bool                # critical mode: one-shot sequential
+    # re-lowering hook: backend registry name (core/backends) the holder of
+    # an ExecutionPlan should relower static-shape (encoder-side) bricks
+    # to, or None to keep/restore the compiled placement.  Deep THROTTLED
+    # demotes to the transient HostBackend — encoder weights leave the
+    # accelerator between events, trading latency for resident memory and
+    # accelerator energy exactly like the paper's proportional throttling
+    # of the camera/memory path.  The engine applies it via plan.relower().
+    backend_demotion: Optional[str] = None
 
 
 @dataclass
@@ -94,9 +102,11 @@ class PowerPolicy:
                          frame_rate_hz=max(1.0, self.full_fps * a),
                          mem_clock_scale=max(0.25, a),
                          submesh_width=max(0.25, a),
-                         cascade=False)
+                         cascade=False,
+                         backend_demotion="host" if a < 0.5 else None)
         return Knobs(1, admission_rate=0.0, frame_rate_hz=0.0,
-                     mem_clock_scale=0.25, submesh_width=0.25, cascade=True)
+                     mem_clock_scale=0.25, submesh_width=0.25, cascade=True,
+                     backend_demotion="host")
 
 
 @dataclass

@@ -64,18 +64,35 @@ class Accelerator:
     dynamic_ok: bool = True
     mesh: Optional[object] = None      # submesh (pod mode)
     width: float = 1.0                 # fraction of a full unit
+    backend: Optional[str] = None      # lowering substrate (core/backends
+                                       # registry name); None = inferred
 
     def throughput_scale(self, quant_label: str) -> float:
         table = _BIT_EFFICIENCY.get(self.profile.name, {})
         return table.get(quant_label, 1.0) * self.width
 
+    def backend_name(self) -> str:
+        """The backend this accelerator lowers bricks through: its
+        explicit profile field, else submesh when it carries a mesh, else
+        host (the paper's edge units are emulated on a pinned CPU
+        thread — see core/backends.py)."""
+        if self.backend:
+            return self.backend
+        return "submesh" if self.mesh is not None else "host"
+
 
 def edge_accelerators() -> List[Accelerator]:
-    """The paper's RK3566: NPU (static, low-bit), Mali GPU, Cortex CPU."""
+    """The paper's RK3566: NPU (static, low-bit), Mali GPU, Cortex CPU.
+
+    The NPU and CPU lower through the thread-pinned HostBackend (the
+    container has no such silicon; host threads emulate it, reference
+    kernels only); the GPU lowers through the DeviceBackend (committed
+    default-device streams)."""
     return [
-        Accelerator("npu", EDGE_NPU, static_only=True, dynamic_ok=False),
-        Accelerator("gpu", EDGE_GPU),
-        Accelerator("cpu", EDGE_CPU),
+        Accelerator("npu", EDGE_NPU, static_only=True, dynamic_ok=False,
+                    backend="host"),
+        Accelerator("gpu", EDGE_GPU, backend="device"),
+        Accelerator("cpu", EDGE_CPU, backend="host"),
     ]
 
 
@@ -101,9 +118,10 @@ def make_virtual_accelerators(mesh, fractions=(0.25, 0.75)
         hbm_bw=TPU_V5E.hbm_bw * f)
     return [
         Accelerator("enc-submesh", scale(cut / n), static_only=True,
-                    dynamic_ok=False, mesh=enc_mesh, width=cut / n),
+                    dynamic_ok=False, mesh=enc_mesh, width=cut / n,
+                    backend="submesh"),
         Accelerator("dec-submesh", scale((n - cut) / n), mesh=dec_mesh,
-                    width=(n - cut) / n),
+                    width=(n - cut) / n, backend="submesh"),
     ]
 
 
@@ -157,6 +175,10 @@ class Placement:
     latency_s: float
     energy_j: float
     per_brick: Dict[str, BrickCost] = field(default_factory=dict)
+    # brick -> backend registry name (core/backends), carried from each
+    # accelerator's profile so compile_plan lowers through the same
+    # substrate the cost model priced
+    backends: Dict[str, str] = field(default_factory=dict)
 
     def __str__(self):
         cells = " | ".join(f"{b}->{a}" for b, a in self.assignment.items())
@@ -214,6 +236,8 @@ def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
     order.reverse()
 
     assignment = {b.name: accels[a].name for b, a in zip(bricks, order)}
+    backends = {b.name: accels[a].backend_name()
+                for b, a in zip(bricks, order)}
     lat = e = 0.0
     per = {}
     prev = None
@@ -226,7 +250,7 @@ def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
             tt, te = transfer_cost(xfer, accels[prev], accels[a])
             lat, e = lat + tt, e + te
         prev = a
-    return Placement(assignment, lat, e, per)
+    return Placement(assignment, lat, e, per, backends=backends)
 
 
 def populate_brick_bytes(graph: BrickGraph, params) -> None:

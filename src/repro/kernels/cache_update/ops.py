@@ -7,19 +7,22 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.dispatch import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
-def cache_row_update(cache, row, index, *,
-                     interpret: Optional[bool] = None):
-    """cache (B,S,KV,hd) <- row (B,KV,hd) at per-slot positions (B,)."""
+def _cache_row_update(cache, row, index, *, interpret: bool):
     from repro.kernels.cache_update.kernel import cache_row_update_pallas
-    if interpret is None:
-        interpret = not _on_tpu()
     idx = jnp.asarray(index, jnp.int32)
     if idx.ndim == 0:
         idx = jnp.broadcast_to(idx, (cache.shape[0],))
     return cache_row_update_pallas(cache, row, idx, interpret=interpret)
+
+
+def cache_row_update(cache, row, index, *,
+                     interpret: Optional[bool] = None):
+    """cache (B,S,KV,hd) <- row (B,KV,hd) at per-slot positions (B,).
+
+    ``interpret`` resolves through kernels/dispatch before entering jit."""
+    return _cache_row_update(cache, row, index,
+                             interpret=resolve_interpret(interpret))

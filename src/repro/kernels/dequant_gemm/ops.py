@@ -1,9 +1,10 @@
 """Public wrapper: QTensor-aware fused dequant-GEMM.
 
 ``dequant_gemm(x, qt)`` dispatches to the Pallas kernel (interpret mode when
-not on TPU), padding M/N to tile multiples.  ``quant_einsum`` is the drop-in
-used by model code when a weight leaf has been quantized by the per-brick
-policy: dense einsums fall through to jnp, QTensor weights hit the kernel.
+not on TPU, resolved through kernels/dispatch), padding M/N to tile
+multiples.  ``quant_einsum`` is the drop-in used by model code when a
+weight leaf has been quantized by the per-brick policy: dense einsums fall
+through to jnp, QTensor weights hit the kernel.
 """
 from __future__ import annotations
 
@@ -17,10 +18,7 @@ import numpy as np
 from repro.core.quantize import QTensor, dequantize
 from repro.kernels.dequant_gemm import kernel as K
 from repro.kernels.dequant_gemm.ref import ref_dequant_gemm
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.dispatch import resolve_interpret
 
 
 def _pad_to(x, axis: int, m: int):
@@ -34,25 +32,16 @@ def _pad_to(x, axis: int, m: int):
 
 @functools.partial(jax.jit, static_argnames=("act", "use_kernel",
                                              "interpret", "bm", "bn", "bk"))
-def dequant_gemm(x: jnp.ndarray, qt: QTensor,
-                 bias: Optional[jnp.ndarray] = None,
-                 act: Optional[str] = None, *,
-                 use_kernel: Optional[bool] = None,
-                 interpret: Optional[bool] = None,
-                 bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
-    """x (..., K) @ dequant(qt (N, K)).T -> (..., N)."""
+def _dequant_gemm(x: jnp.ndarray, qt: QTensor,
+                  bias: Optional[jnp.ndarray], act: Optional[str], *,
+                  use_kernel: bool, interpret: bool,
+                  bm: int, bn: int, bk: int) -> jnp.ndarray:
     N, Klog = qt.shape
     lead = x.shape[:-1]
     xm = x.reshape(-1, x.shape[-1])
     M = xm.shape[0]
-    if use_kernel is None:
-        # the unpack path needs MXU-aligned tiles; tiny problems or odd K
-        # fall back to the (XLA-fused) reference
-        use_kernel = Klog % bk == 0
     if not use_kernel:
         return ref_dequant_gemm(xm, qt, bias, act).reshape(*lead, N)
-    if interpret is None:
-        interpret = not _on_tpu()
     bm_eff = min(bm, max(8, 1 << (M - 1).bit_length()))
     xm, pm = _pad_to(xm, 0, bm_eff)
     codes, _ = _pad_to(qt.codes, 0, bn)
@@ -65,6 +54,24 @@ def dequant_gemm(x: jnp.ndarray, qt: QTensor,
                                 bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
     out = out[:M, :N]
     return out.reshape(*lead, N)
+
+
+def dequant_gemm(x: jnp.ndarray, qt: QTensor,
+                 bias: Optional[jnp.ndarray] = None,
+                 act: Optional[str] = None, *,
+                 use_kernel: Optional[bool] = None,
+                 interpret: Optional[bool] = None,
+                 bm: int = 128, bn: int = 128, bk: int = 512) -> jnp.ndarray:
+    """x (..., K) @ dequant(qt (N, K)).T -> (..., N).
+
+    ``interpret`` resolves through kernels/dispatch before entering jit."""
+    if use_kernel is None:
+        # the unpack path needs MXU-aligned tiles; tiny problems or odd K
+        # fall back to the (XLA-fused) reference
+        use_kernel = qt.shape[1] % bk == 0
+    return _dequant_gemm(x, qt, bias, act, use_kernel=bool(use_kernel),
+                         interpret=resolve_interpret(interpret),
+                         bm=bm, bn=bn, bk=bk)
 
 
 def quant_einsum(spec: str, x: jnp.ndarray, w, **kw) -> jnp.ndarray:

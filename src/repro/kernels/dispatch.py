@@ -1,0 +1,62 @@
+"""One place for the Pallas-vs-reference kernel dispatch decision.
+
+Every kernel wrapper under ``repro/kernels/*/ops.py`` used to carry its own
+``jax.default_backend() == "tpu"`` check.  They now all resolve their
+``interpret=`` default through :func:`resolve_interpret`, which honors two
+overrides on top of the hardware check:
+
+* ``REPRO_FORCE_REF=1`` (env var) — force the reference/interpret path
+  everywhere, e.g. to bisect a kernel numerics issue on real TPU hardware.
+* :func:`force_ref` (context manager, thread-local) — scoped override used
+  by the backend lowering layer: ``HostBackend.compile_fn`` traces its
+  brick executables under ``force_ref()`` so host-lowered bricks always
+  take the reference kernels, even when the process owns a TPU (the host
+  backend emulates the paper's NPU/DSP units, which never run the MXU
+  Pallas kernels).
+
+The resolution must happen *outside* the kernels' inner ``jax.jit`` (in
+the plain-Python wrapper), otherwise jit's trace cache would freeze the
+first resolution and later overrides would be silently ignored.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+_local = threading.local()
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def force_ref_active() -> bool:
+    """True when either the env var or a ``force_ref()`` scope demands the
+    reference/interpret path regardless of hardware."""
+    if getattr(_local, "force_ref", 0) > 0:
+        return True
+    return os.environ.get("REPRO_FORCE_REF", "") not in ("", "0")
+
+
+@contextmanager
+def force_ref():
+    """Scoped (thread-local, re-entrant) reference-kernel override."""
+    _local.force_ref = getattr(_local, "force_ref", 0) + 1
+    try:
+        yield
+    finally:
+        _local.force_ref -= 1
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve a kernel wrapper's ``interpret=`` argument.
+
+    An explicit caller choice wins; otherwise compiled Pallas only on real
+    TPU hardware with no reference override in effect."""
+    if interpret is not None:
+        return bool(interpret)
+    return force_ref_active() or not on_tpu()

@@ -7,19 +7,14 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.dispatch import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
-                    bk: int = 512, interpret: Optional[bool] = None):
-    """q (B,S,H,hd); k,v (B,S,KV,hd) -> (B,S,H,hd)."""
+def _flash_attention(q, k, v, *, causal: bool, bq: int, bk: int,
+                     interpret: bool):
     from repro.kernels.flash_attention.kernel import flash_attention_pallas
-    if interpret is None:
-        interpret = not _on_tpu()
     B, Sq, H, hd = q.shape
     _, Sk, KV, _ = k.shape
     fold = lambda t, n: t.transpose(0, 2, 1, 3).reshape(B * n, t.shape[1], hd)
@@ -27,3 +22,14 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
         fold(q, H), fold(k, KV), fold(v, KV), kv_heads=KV, causal=causal,
         bq=bq, bk=bk, interpret=interpret)
     return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512,
+                    bk: int = 512, interpret: Optional[bool] = None):
+    """q (B,S,H,hd); k,v (B,S,KV,hd) -> (B,S,H,hd).
+
+    ``interpret`` resolves through kernels/dispatch (TPU check +
+    REPRO_FORCE_REF / force_ref overrides) before entering jit, so the
+    trace cache can never freeze a stale dispatch decision."""
+    return _flash_attention(q, k, v, causal=causal, bq=bq, bk=bk,
+                            interpret=resolve_interpret(interpret))

@@ -7,24 +7,26 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.dispatch import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def linear_attention(q, k, v, *, chunk: int = 256,
-                     interpret: Optional[bool] = None
-                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """q,k,v (B,S,H,hd) -> (out, state (B,H,hd,hd), z (B,H,hd)).
-
-    GQA callers expand kv heads before calling."""
+def _linear_attention(q, k, v, *, chunk: int, interpret: bool):
     from repro.kernels.linear_attention.kernel import linear_attention_pallas
-    if interpret is None:
-        interpret = not _on_tpu()
     B, S, H, hd = q.shape
     fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
     out, state, z = linear_attention_pallas(
         fold(q), fold(k), fold(v), chunk=chunk, interpret=interpret)
     out = out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
     return out, state.reshape(B, H, hd, hd), z.reshape(B, H, hd)
+
+
+def linear_attention(q, k, v, *, chunk: int = 256,
+                     interpret: Optional[bool] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """q,k,v (B,S,H,hd) -> (out, state (B,H,hd,hd), z (B,H,hd)).
+
+    GQA callers expand kv heads before calling.  ``interpret`` resolves
+    through kernels/dispatch before entering jit."""
+    return _linear_attention(q, k, v, chunk=chunk,
+                             interpret=resolve_interpret(interpret))

@@ -7,20 +7,12 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+from repro.kernels.dispatch import resolve_interpret
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256,
-        interpret: Optional[bool] = None
-        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Model layout: x (B,S,H,P), dt (B,S,H) post-softplus, A (H,) negative,
-    Bm/Cm (B,S,G,N).  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+def _ssd(x, dt, A, Bm, Cm, *, chunk: int, interpret: bool):
     from repro.kernels.ssd.kernel import ssd_pallas
-    if interpret is None:
-        interpret = not _on_tpu()
     y, h = ssd_pallas(
         x.transpose(0, 2, 1, 3),
         dt.transpose(0, 2, 1).astype(jnp.float32),
@@ -29,3 +21,14 @@ def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256,
         Cm.transpose(0, 2, 1, 3),
         chunk=chunk, interpret=interpret)
     return y.transpose(0, 2, 1, 3), h
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 256,
+        interpret: Optional[bool] = None
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Model layout: x (B,S,H,P), dt (B,S,H) post-softplus, A (H,) negative,
+    Bm/Cm (B,S,G,N).  Returns (y (B,S,H,P), h_final (B,H,P,N)).
+
+    ``interpret`` resolves through kernels/dispatch before entering jit."""
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk,
+                interpret=resolve_interpret(interpret))

@@ -6,9 +6,10 @@ The pod's "model" axis is sliced into two profile-heterogeneous submeshes
 (core/scheduler.make_virtual_accelerators): the encoder slice runs the
 static-shape vision bricks (≙ the paper's NPU), the decoder slice runs the
 W4A16 language model (≙ the GPU).  The placement is no longer only
-cost-modeled: it compiles to an ExecutionPlan whose brick weights are
-device_put onto their submesh and whose cross-submesh edges are SubmeshPipes,
-so the hand-off really moves over ICI:
+cost-modeled: it compiles to an ExecutionPlan through the SubmeshBackend
+(the accelerators' ``backend="submesh"`` profile — core/backends.py) whose
+brick weights are device_put onto their submesh and whose cross-submesh
+edges are SubmeshPipes, so the hand-off really moves over ICI:
 
     encoder submesh --(SubmeshPipe: sharding-preserving device_put,
                        pure ICI, no host round trip)--> ring slot

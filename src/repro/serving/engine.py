@@ -212,7 +212,8 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
                  max_len: int = 2048, executor: Optional[
                      BatteryAwareExecutor] = None,
-                 rng_seed: int = 0, async_staging: bool = True):
+                 rng_seed: int = 0, async_staging: bool = True,
+                 placement=None, accels=None, backend=None):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -232,8 +233,18 @@ class ServingEngine:
                                max_tokens=cfg.vision_tokens or 1,
                                dim=cfg.d_model) if cfg.vlm else None
         # the one brick runtime: vision staging routes through the plan's
-        # projector brick and TABM edge (no inline reimplementation)
-        self.plan = compile_plan(decompose(cfg), params, tabm=self.tabm)
+        # projector brick and TABM edge (no inline reimplementation).
+        # placement/accels/backend pick the lowering substrate per brick
+        # (core/backends) — the engine's step loop is identical on all of
+        # them, the paper's "same graph, swappable compute unit"
+        self.plan = compile_plan(decompose(cfg), params, tabm=self.tabm,
+                                 placement=placement, accels=accels,
+                                 backend=backend)
+        # remembered so the battery policy's demotion can be undone when
+        # charge recovers (plan.relower back to the compiled substrate)
+        self._lowered_backends = {s.brick.name: s.backend
+                                  for s in self.plan.steps}
+        self._demoted_to: Optional[str] = None
         # producer stage: own thread unless the caller opts back into the
         # synchronous single-threaded pipeline (the equivalence oracle)
         self.async_staging = bool(async_staging and self.tabm is not None)
@@ -429,8 +440,28 @@ class ServingEngine:
         self._trace_event("failed", req.rid)
         self.done.append(req)
 
+    def _apply_backend_knobs(self, knobs):
+        """The PowerPolicy re-lowering hook: demote the static-shape
+        (encoder-side) bricks to the knob's cheaper backend under deep
+        THROTTLED, and restore the compiled substrate when charge
+        recovers.  plan.relower swaps each step atomically, so the
+        staging thread's in-flight produce is never torn."""
+        target = knobs.backend_demotion
+        if target == self._demoted_to:
+            return
+        for s in list(self.plan.steps):
+            if not s.brick.static_shape:
+                continue
+            self.plan.relower(
+                s.brick.name,
+                target if target is not None
+                else self._lowered_backends[s.brick.name])
+        self._demoted_to = target
+        self._trace_event(f"relower:{target or 'restore'}", -1)
+
     def _admit(self):
         state, knobs, _ = self.executor.current()
+        self._apply_backend_knobs(knobs)
         power_ok = (knobs.admission_rate > 0
                     or state is PowerState.UNCONSTRAINED)
         if power_ok:
