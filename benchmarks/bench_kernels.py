@@ -18,12 +18,22 @@ from repro.core.quantize import QuantSpec, dequantize, quantize
 from repro.kernels.dequant_gemm import dequant_gemm, ref_dequant_gemm
 
 M, K, N = 256, 4096, 4096
+# CI smoke shapes: tiny but still a multiple of the q4 group size (64)
+# and of the kernel's BlockSpec tiles, so every code path is exercised
+SMOKE_M, SMOKE_K, SMOKE_N = 128, 512, 256
 
 
-def run():
+def run(m: int = M, k: int = K, n: int = N):
+    """CSV rows for benchmarks.run."""
+    return _bench(m, k, n)[0]
+
+
+def _bench(m: int, k: int, n: int):
+    """Returns (rows, rel_err) — the numeric residual is what the CI
+    smoke gates on, independent of row order or label wording."""
     key = jax.random.PRNGKey(0)
-    x = jax.random.normal(key, (M, K), jnp.float32).astype(jnp.bfloat16)
-    w = (jax.random.normal(key, (N, K), jnp.float32) * 0.05
+    x = jax.random.normal(key, (m, k), jnp.float32).astype(jnp.bfloat16)
+    w = (jax.random.normal(key, (n, k), jnp.float32) * 0.05
          ).astype(jnp.bfloat16)
     qt = quantize(w, QuantSpec(4))
 
@@ -43,12 +53,12 @@ def run():
     # analytic HBM traffic on the TPU target (what the BlockSpecs imply):
     # fused   : x + packed codes + scales + out  (weight tile unpacks in VMEM)
     # two-pass: + bf16 W written AND re-read through HBM
-    t_x, t_out = M * K * 2, M * N * 2
-    t_codes = N * K // 2 + N * (K // 64) * 4
+    t_x, t_out = m * k * 2, m * n * 2
+    t_codes = n * k // 2 + n * (k // 64) * 4
     t_fused = t_x + t_codes + t_out
-    t_two = t_fused + 2 * N * K * 2
+    t_two = t_fused + 2 * n * k * 2
 
-    return [
+    rows = [
         Row("kernels/dequant_gemm/fused", us_f,
             f"hbm_traffic={t_fused/1e6:.1f}MB (codes stream once, unpack "
             f"in VMEM; wall-time is CPU-XLA)"),
@@ -60,3 +70,33 @@ def run():
             f"rel_err_vs_ref={res/scale:.2e} "
             f"(BlockSpec 128x128x512, fp32 acc)"),
     ]
+    return rows, res / scale
+
+
+def main(argv=None) -> int:
+    """Standalone entry so CI can gate on the kernel benchmark without the
+    full ``benchmarks.run`` matrix:
+
+        python -m benchmarks.bench_kernels --smoke
+    """
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="fused dequant-GEMM kernel benchmark")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI shapes (seconds, not minutes) — still "
+                         "compiles both forms and checks the interpret-"
+                         "mode kernel residual")
+    args = ap.parse_args(argv)
+    rows, rel = _bench(*((SMOKE_M, SMOKE_K, SMOKE_N) if args.smoke
+                         else (M, K, N)))
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(row.csv(), flush=True)
+    if args.smoke and rel > 1e-2:              # gate, not just a report
+        print(f"FAIL: kernel residual {rel} too large")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

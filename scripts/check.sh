@@ -39,4 +39,11 @@ XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.dryrun_backends --arch llava-onevision-0.5b \
     --backends host,device,submesh
 
+echo "== mixed-class TABM engine smoke: hi-res + thumbnail =="
+# one high-resolution and one thumbnail request through ServingEngine on
+# placeholder devices: classification at submit, per-class staging
+# threads, class-sized ring commits, per-class drain (core/slot_classes)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.smoke_classes
+
 echo "OK: check passed"

@@ -78,7 +78,15 @@ class ModelConfig:
     # --- VLM ---
     vlm: bool = False
     vision_feat_dim: int = 0      # frontend-stub patch-feature width
-    vision_tokens: int = 0        # patches prepended to the text sequence
+    vision_tokens: int = 0        # patches per full-resolution image
+    # TABM slot classes (core/slot_classes): per-image token counts of each
+    # resolution bucket, ascending; () means one bucket = vision_tokens.
+    # vision_max_images is the largest image count one request may carry —
+    # together they key the class-partitioned TABM pool (image-count bucket
+    # x resolution bucket), so a thumbnail request never pads into a
+    # multi-image full-resolution slab.
+    vision_token_buckets: Tuple[int, ...] = ()
+    vision_max_images: int = 1
     # --- numerics / sharding ---
     dtype: str = "bfloat16"
     attn_impl: str = "softmax"    # softmax | linear (paper's streaming variant)
@@ -142,6 +150,9 @@ class ModelConfig:
         if self.vlm:
             small["vision_feat_dim"] = 48
             small["vision_tokens"] = 8
+            # keep two resolution buckets (thumbnail = quarter resolution)
+            # so the slot-class machinery is exercised at CPU scale
+            small["vision_token_buckets"] = (2, 8)
         small.update(overrides)
         return dataclasses.replace(self, **small)
 

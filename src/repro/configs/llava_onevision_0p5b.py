@@ -25,5 +25,9 @@ CONFIG = ModelConfig(
     vlm=True,
     vision_feat_dim=1152,
     vision_tokens=729,     # 27x27 patches (SigLip-384)
+    # slot classes: thumbnail (14x14 ≈ 196 patches) vs full SigLip-384
+    # resolution; OneVision's anyres grid carries up to 4 image tiles
+    vision_token_buckets=(196, 729),
+    vision_max_images=4,
     attn_sharding="context",
 )

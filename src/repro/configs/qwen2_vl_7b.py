@@ -27,5 +27,10 @@ CONFIG = ModelConfig(
     vlm=True,
     vision_feat_dim=1280,
     vision_tokens=1024,    # fixed-resolution preprocessing (paper §NPU)
+    # dynamic resolution buckets quantized to the NPU's static shapes:
+    # low-res (256 merged patches) vs the full 1024-patch grid, up to 4
+    # images per request (video frames bucket the same way)
+    vision_token_buckets=(256, 1024),
+    vision_max_images=4,
     attn_sharding="context",
 )

@@ -27,11 +27,14 @@ Paper-term → API mapping:
   runtime (the battery policy's THROTTLED hook).
 * **Embeddings zero-copy transfer / TABM (§3.2)** — the edge whose producer
   emits ``vision_embeds`` routes through a
-  :class:`~repro.core.tabm.RingBuffer`: :meth:`ExecutionPlan.produce` runs
+  :class:`~repro.core.tabm.RingBuffer` (or a class-partitioned
+  :class:`~repro.core.tabm.SlotClassPool`, one class-sized ring per
+  image-count × resolution bucket): :meth:`ExecutionPlan.produce` runs
   the upstream (encoder-side) stages and commits into a slot (donation =
   the TPU zero-copy), :meth:`ExecutionPlan.consume` binds the oldest READY
   slot for the decoder side, and a full ring stalls the producer — the
-  backpressure signal the engine's admission loop obeys.
+  backpressure signal the engine's admission loop obeys, per class, so a
+  FULL high-resolution class never blocks thumbnail staging.
 * **On-demand cascade (§3.2, Fig. 2)** — ``residency="one-brick"`` lowers
   every brick through the transient ``HostBackend``: params host-side,
   each brick load → execute → release, recording a :class:`PlanTrace`
@@ -50,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core.backends import Backend, BACKENDS, resolve_backend
 from repro.core.bricks import Brick, BrickGraph, Port
+from repro.core.tabm import SlotClassPool
 
 
 class PlanError(RuntimeError):
@@ -262,7 +266,8 @@ class ExecutionPlan:
             trace.record(step.brick.name, "execute", resident)
 
             if self.tabm is not None and i == self._tabm_producer:
-                out, ring_slot = self._through_ring(out)
+                out, ring, slot = self._through_ring(out)
+                ring_slot = (ring, slot)
             env[step.brick.out_port.name] = out
             env_src[step.brick.out_port.name] = step.accel
 
@@ -273,44 +278,73 @@ class ExecutionPlan:
             trace.record(step.brick.name, "release", resident)
             del dev_params
         if ring_slot is not None:
-            self.tabm.release(ring_slot)
+            ring_slot[0].release(ring_slot[1])
         return out, trace
 
     def _through_ring(self, out):
         """Synchronous TABM crossing inside run(): commit the producer's
         output to a slot, immediately bind it back as the consumer view.
-        A failed commit aborts the write — the slot must never be left in
-        STAGING (same contract as produce())."""
+        With a class-partitioned pool the slab is picked by the embeds'
+        token count (the request's class), so run() exercises the same
+        class-sized ring the engine would.  A failed commit aborts the
+        write — the slot must never be left in STAGING (same contract as
+        produce())."""
         if out.shape[0] != 1:
             raise PlanError("TABM slots hold one request's embeds (batch 1)")
-        slot = self.tabm.acquire_write()
+        if isinstance(self.tabm, SlotClassPool):
+            ring = self.tabm.ring(self.tabm.classify_total(out.shape[1]))
+        else:
+            ring = self.tabm
+        slot = ring.acquire_write()
         if slot is None:
             raise PlanError("TABM ring full inside a synchronous run(); "
                             "a prior consumer never released its slot")
         try:
             v = out if self._tabm_transfer is None \
                 else self._tabm_transfer(out)
-            self.tabm.commit_write(slot, v[0])
+            ring.commit_write(slot, v[0])
         except Exception:
-            self.tabm.abort_write(slot)
+            ring.abort_write(slot)
             raise
-        got = self.tabm.acquire_read()
+        got = ring.acquire_read()
         assert got is not None
         s, view, n = got
-        return view[None, :n], s
+        return view[None, :n], ring, s
 
     # -- TABM edge, split for the engine's producer/consumer decoupling -----
-    def produce(self, inputs: Dict[str, Any], *, block: bool = False,
+    def _tabm_ring(self, slot_class: Optional[str]):
+        """Resolve the ring a TABM operation targets: the single ring, or
+        the named class ring of a class-partitioned pool."""
+        if self.tabm is None:
+            raise PlanError("plan compiled without a TABM ring")
+        if isinstance(self.tabm, SlotClassPool):
+            if slot_class is None:
+                raise PlanError("class-partitioned TABM pool: pass "
+                                "slot_class= (see core/slot_classes)")
+            return self.tabm.ring(slot_class)
+        if slot_class is not None:
+            raise PlanError(f"slot_class={slot_class!r} given but the "
+                            f"plan's TABM is a single ring")
+        return self.tabm
+
+    def produce(self, inputs: Dict[str, Any], *,
+                slot_class: Optional[str] = None, block: bool = False,
                 timeout: Optional[float] = None) -> Optional[int]:
         """Producer half: acquire a ring slot, run the stages upstream of
         the TABM edge (vision encode -> projector), commit.  Returns the
         slot id, or None when the ring is FULL — the caller must stall and
         retry (backpressure), never bypass the ring.
 
+        With a class-partitioned pool, ``slot_class`` names the request's
+        class ring (the engine derives it from the vision spec at
+        submit); left None, the class is inferred from the vision_feats
+        token count.  A FULL class stalls only that class's producer —
+        other classes' produce calls proceed.
+
         ``block=True`` parks the calling thread on a FULL ring until a
         consumer releases a slot (or the ring is closed / `timeout`
-        expires, returning None) — this is where the engine's
-        StagingWorker stalls, off the decode loop.
+        expires, returning None) — this is where the engine's per-class
+        StagingWorker thread stalls, off the decode loop.
 
         Error contract: if any upstream brick (e.g. the projector) raises,
         the acquired slot is aborted back to EMPTY before the exception
@@ -318,7 +352,14 @@ class ExecutionPlan:
         caller owns surfacing the error on the originating request."""
         if self.tabm is None:
             raise PlanError("plan compiled without a TABM ring")
-        slot = self.tabm.acquire_write(block=block, timeout=timeout)
+        if slot_class is None and isinstance(self.tabm, SlotClassPool):
+            feats = inputs.get("vision_feats")
+            if feats is None:
+                raise PlanError("cannot infer a slot class without "
+                                "vision_feats; pass slot_class=")
+            slot_class = self.tabm.classify_total(int(feats.shape[1]))
+        ring = self._tabm_ring(slot_class)
+        slot = ring.acquire_write(block=block, timeout=timeout)
         if slot is None:
             return None
         try:
@@ -338,30 +379,29 @@ class ExecutionPlan:
             if out.shape[0] != 1:
                 raise PlanError("TABM slots hold one request's embeds")
             v = out if self._tabm_transfer is None else self._tabm_transfer(out)
-            self.tabm.commit_write(slot, v[0])
+            ring.commit_write(slot, v[0])
         except Exception:
-            self.tabm.abort_write(slot)
+            ring.abort_write(slot)
             raise
         return slot
 
-    def consume(self, *, block: bool = False,
-                timeout: Optional[float] = None):
-        """Consumer half: bind the oldest READY slot.  Returns
+    def consume(self, *, slot_class: Optional[str] = None,
+                block: bool = False, timeout: Optional[float] = None):
+        """Consumer half: bind the oldest READY slot (of ``slot_class``'s
+        ring when the pool is class-partitioned).  Returns
         (slot, view, n_tokens) or None when nothing is ready (with
         ``block=True``: only on timeout or a closed ring)."""
-        if self.tabm is None:
-            raise PlanError("plan compiled without a TABM ring")
-        return self.tabm.acquire_read(block=block, timeout=timeout)
+        return self._tabm_ring(slot_class).acquire_read(block=block,
+                                                        timeout=timeout)
 
-    def wait_ready(self, slot: int, timeout: Optional[float] = None) -> bool:
+    def wait_ready(self, slot: int, timeout: Optional[float] = None, *,
+                   slot_class: Optional[str] = None) -> bool:
         """Block until `slot` is committed — the decode loop's per-slot
-        ready wait, replacing inline staging."""
-        if self.tabm is None:
-            raise PlanError("plan compiled without a TABM ring")
-        return self.tabm.wait_ready(slot, timeout)
+        (and per-class) ready wait, replacing inline staging."""
+        return self._tabm_ring(slot_class).wait_ready(slot, timeout)
 
-    def release(self, slot: int):
-        self.tabm.release(slot)
+    def release(self, slot: int, *, slot_class: Optional[str] = None):
+        self._tabm_ring(slot_class).release(slot)
 
 
 # ---------------------------------------------------------------------------
@@ -405,7 +445,8 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
         accelerator's ``backend`` profile field) picks each brick's
         lowering substrate.
     accels: the accelerator list the placement names refer to.
-    tabm: a :class:`~repro.core.tabm.RingBuffer` for the vision_embeds
+    tabm: a :class:`~repro.core.tabm.RingBuffer` or class-partitioned
+        :class:`~repro.core.tabm.SlotClassPool` for the vision_embeds
         edge (the paper's zero-copy hand-off).
     residency: "resident" (serving: params bound once) | "one-brick"
         (cascade: every brick lowered through the transient HostBackend —

@@ -69,6 +69,15 @@ class Knobs:
     # accelerator energy exactly like the paper's proportional throttling
     # of the camera/memory path.  The engine applies it via plan.relower().
     backend_demotion: Optional[str] = None
+    # class-partitioned TABM admission hook: scale factor for per-class
+    # staged-ahead depth (core/tabm.SlotClassPool.admission_table).
+    # THROTTLED shrinks the *high-resolution* classes' depth first (the
+    # largest slab scales fully by this factor, the thumbnail class keeps
+    # full depth), so expensive multi-image vision staging is the first
+    # load shed while cheap requests keep flowing; CRITICAL gates the
+    # large classes entirely (scale 0).  Restored to 1.0 when charge
+    # recovers — mirrors backend_demotion.
+    class_depth_scale: float = 1.0
 
 
 @dataclass
@@ -103,10 +112,11 @@ class PowerPolicy:
                          mem_clock_scale=max(0.25, a),
                          submesh_width=max(0.25, a),
                          cascade=False,
-                         backend_demotion="host" if a < 0.5 else None)
+                         backend_demotion="host" if a < 0.5 else None,
+                         class_depth_scale=a)
         return Knobs(1, admission_rate=0.0, frame_rate_hz=0.0,
                      mem_clock_scale=0.25, submesh_width=0.25, cascade=True,
-                     backend_demotion="host")
+                     backend_demotion="host", class_depth_scale=0.0)
 
 
 @dataclass

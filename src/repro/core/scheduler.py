@@ -282,12 +282,34 @@ def staging_budget(ring, in_flight: int, max_ahead: Optional[int] = None
     staged-ahead depth; default = ring size (the producer would block on
     FULL beyond that anyway, and a bounded hand-off queue keeps shutdown
     cancellation cheap).  This is the admission check the async engine
-    uses instead of raw ring occupancy — and the hook a future
-    per-request slot-class policy extends: size ``max_ahead`` per request
-    class (image count / resolution bucket) and charge each class its own
-    budget instead of one FIFO depth."""
+    uses instead of raw ring occupancy; the class-partitioned pool
+    applies it per class via :func:`class_staging_budgets`."""
     cap = ring.n_slots if max_ahead is None else max_ahead
     return max(0, cap - staged_ahead_depth(ring) - in_flight)
+
+
+def class_staging_budgets(pool, in_flight: Dict[str, int],
+                          depth_scale: float = 1.0) -> Dict[str, int]:
+    """Per-class admission budgets over a class-partitioned TABM pool.
+
+    ``staging_budget`` grown into a table: the pool's
+    ``admission_table(depth_scale)`` yields ``{slot_class: (ring,
+    max_ahead)}`` — each class's own ring and its battery-scaled depth
+    (``core/power.Knobs.class_depth_scale`` shrinks the high-resolution
+    classes first) — and each class is charged its own budget, so a FULL
+    or throttled high-resolution class never starves thumbnail admission.
+    ``in_flight``: per-class hand-over counts from the engine's staging
+    worker.  A class whose ring has not materialized yet (lazy pool:
+    no request of that class has ever staged) has zero staged-ahead
+    depth by definition."""
+    budgets = {}
+    for name, (ring, cap) in pool.admission_table(depth_scale).items():
+        flight = in_flight.get(name, 0)
+        if ring is None:                       # unmaterialized: EMPTY ring
+            budgets[name] = max(0, cap - flight)
+        else:
+            budgets[name] = staging_budget(ring, flight, max_ahead=cap)
+    return budgets
 
 
 # ---------------------------------------------------------------------------

@@ -350,3 +350,193 @@ class RingBuffer:
     @property
     def nbytes(self) -> int:
         return self.pool.size * self.pool.dtype.itemsize
+
+
+# ---------------------------------------------------------------------------
+# class-partitioned pool (core/slot_classes defines the classes)
+# ---------------------------------------------------------------------------
+
+class SlotClassPool:
+    """Class-partitioned TABM: one :class:`RingBuffer` per request class.
+
+    The single-ring pool pads every request into one ``max_tokens`` slab
+    and admits against one FIFO depth, so a 1-image thumbnail competes
+    with (and is starved behind) a 4-image full-resolution request.  The
+    pool partitions both resources by :class:`~repro.core.slot_classes.
+    SlotClass` (image-count bucket × resolution bucket, from the arch
+    config):
+
+    * each class ring's ``max_tokens`` is the class slab — a thumbnail
+      slot is thumbnail-sized, and an oversized commit into the wrong
+      class raises :class:`TABMError` exactly like ring overflow;
+    * each class has its own admission depth (``max_ahead``), charged per
+      class at hand-off (``core/scheduler.class_staging_budgets``), so a
+      FULL high-resolution ring stalls only its own class's producer;
+    * :meth:`admission_table` scales depths for the battery policy
+      (``Knobs.class_depth_scale``): the highest-resolution class shrinks
+      first and most, the smallest class keeps full depth.
+
+    Class rings **materialize lazily** on first use (:meth:`ring`): the
+    cross product of image × resolution buckets describes what traffic
+    *may* arrive, and only the classes that actually do arrive allocate a
+    device pool — single-image traffic never pays for the 4-image
+    full-resolution slab.  The aggregate signal surface (``states`` /
+    ``stats`` / ``occupancy`` / ``staged_ahead`` / ``drain`` / ``close``)
+    matches RingBuffer so existing consumers of the single ring keep
+    reading one pool; aggregates cover the materialized rings (an
+    unmaterialized ring is trivially EMPTY and holds zero bytes)."""
+
+    def __init__(self, classes, dim: int, dtype: str = "bfloat16",
+                 sharding=None):
+        ordered = sorted(classes.values(), key=lambda c: c.sort_key)
+        self.classes = {c.name: c for c in ordered}
+        self.dim, self.dtype, self.sharding = dim, dtype, sharding
+        self._rings: "dict[str, RingBuffer]" = {}
+        self._closed = False
+
+    @classmethod
+    def from_config(cls, cfg, dim: Optional[int] = None,
+                    slots_per_class: int = 2, dtype: str = "bfloat16",
+                    sharding=None) -> "SlotClassPool":
+        from repro.core.slot_classes import build_slot_classes
+        return cls(build_slot_classes(cfg, slots_per_class),
+                   dim=dim or cfg.d_model, dtype=dtype, sharding=sharding)
+
+    # -- class lookup -------------------------------------------------------
+    def names(self) -> List[str]:
+        return list(self.classes)
+
+    @property
+    def rings(self) -> "dict[str, RingBuffer]":
+        """The rings materialized so far (classes traffic has touched)."""
+        return dict(self._rings)
+
+    def ring(self, name: str) -> RingBuffer:
+        """The class's ring, materialized on first use (lazy: a class no
+        request ever lands in allocates no device pool)."""
+        if name not in self.classes:
+            raise TABMError(f"unknown slot class {name!r}; classes: "
+                            f"{list(self.classes)}")
+        if name not in self._rings:
+            c = self.classes[name]
+            r = RingBuffer(n_slots=c.n_slots, max_tokens=c.max_tokens,
+                           dim=self.dim, dtype=self.dtype,
+                           sharding=self.sharding)
+            if self._closed:               # pool already shut down: the
+                r.close()                  # new ring is born closed
+            self._rings[name] = r
+        return self._rings[name]
+
+    def class_nbytes(self, name: str) -> int:
+        """Analytic pool bytes of one class ring (whether or not it has
+        materialized)."""
+        c = self.classes[name]
+        return c.n_slots * c.max_tokens * self.dim \
+            * jnp.dtype(self.dtype).itemsize
+
+    def classify(self, n_tokens: int, n_images: int = 1) -> str:
+        from repro.core.slot_classes import classify
+        return classify(self.classes, n_tokens, n_images).name
+
+    def classify_total(self, n_tokens: int) -> str:
+        from repro.core.slot_classes import classify_total
+        return classify_total(self.classes, n_tokens).name
+
+    def ring_for_tokens(self, n_tokens: int, n_images: int = 1
+                        ) -> RingBuffer:
+        return self.ring(self.classify(n_tokens, n_images))
+
+    # -- admission (the per-class {slot_class: (ring, max_ahead)} table) ----
+    def max_ahead(self, name: str) -> int:
+        c = self.classes[name]
+        # class n_slots == ring capacity by construction; reading the spec
+        # (not the ring) keeps unmaterialized classes unmaterialized
+        return c.max_ahead if c.max_ahead is not None else c.n_slots
+
+    def admission_table(self, depth_scale: float = 1.0
+                        ) -> "dict[str, Tuple[Optional[RingBuffer], int]]":
+        """``{slot_class: (ring, max_ahead)}`` under a battery depth scale.
+        The ring element is None while the class is unmaterialized (lazy:
+        nothing can be staged ahead in a ring that does not exist yet).
+
+        ``depth_scale`` (``core/power.Knobs.class_depth_scale``, 1.0 when
+        unconstrained) shrinks admission depth *high-resolution-first*:
+        classes are ranked by slab size, the largest class scales fully by
+        ``depth_scale`` (down to 0 — fully gated), intermediate classes
+        proportionally less, and the smallest class keeps its full depth,
+        so thumbnails keep flowing while the battery drains."""
+        s = min(1.0, max(0.0, depth_scale))
+        names = list(self.classes)             # ascending slab order
+        K = len(names)
+        table = {}
+        for rank, name in enumerate(names):
+            base = self.max_ahead(name)
+            frac = rank / (K - 1) if K > 1 else 0.0
+            eff = 1.0 - (1.0 - s) * frac
+            table[name] = (self._rings.get(name),
+                           max(0, min(base, int(base * eff))))
+        return table
+
+    # -- aggregate signal surface (RingBuffer-compatible) -------------------
+    @property
+    def n_slots(self) -> int:
+        """Total slot capacity across all classes (static — independent of
+        which class rings have materialized)."""
+        return sum(c.n_slots for c in self.classes.values())
+
+    @property
+    def states(self) -> List[int]:
+        """Slot states of the materialized rings (an unmaterialized class
+        contributes nothing — all its slots are trivially EMPTY)."""
+        return [s for r in self._rings.values() for s in r.states]
+
+    @property
+    def stats(self) -> "dict[str, int]":
+        agg = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0}
+        for r in self._rings.values():
+            for k in agg:
+                agg[k] += r.stats[k]
+        return agg
+
+    @property
+    def occupancy(self) -> float:
+        busy = sum(s != EMPTY for s in self.states)
+        return busy / max(1, self.n_slots)
+
+    def ready_count(self) -> int:
+        return sum(r.ready_count() for r in self._rings.values())
+
+    def staged_ahead(self) -> int:
+        return sum(r.staged_ahead() for r in self._rings.values())
+
+    @property
+    def nbytes(self) -> int:
+        """Allocated pool bytes — only materialized class rings count,
+        which is the memory win over one eagerly-sized maximal ring."""
+        return sum(r.nbytes for r in self._rings.values())
+
+    # -- shutdown / per-class drain protocol --------------------------------
+    def close(self):
+        """Close every materialized class ring — wakes all per-class
+        producer threads parked in ``acquire_write`` (engine shutdown
+        fan-out).  Classes materialized afterwards are born closed."""
+        self._closed = True
+        for r in self._rings.values():
+            r.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def drain(self) -> int:
+        """Per-class drain: every materialized class ring releases its
+        READY/CONSUMED slots back to EMPTY.  Same precondition as the
+        single ring, per class — a STAGING slot belongs to that class's
+        live producer, so all per-class producer threads must be joined
+        first."""
+        staging = [n for n, r in self._rings.items()
+                   if any(s == STAGING for s in r.states)]
+        if staging:
+            raise TABMError(f"drain with class(es) {staging} still STAGING "
+                            f"— join the per-class producer threads first")
+        return sum(r.drain() for r in self._rings.values())

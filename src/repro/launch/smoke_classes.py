@@ -1,0 +1,77 @@
+"""Mixed-class TABM engine smoke — part of the no-TPU gate (make check).
+
+Drives one high-resolution and one thumbnail request through a reduced
+``ServingEngine`` on placeholder devices, so the class-partitioned slot
+pool path (core/slot_classes + core/tabm.SlotClassPool) is exercised by
+CI: classification at submit, per-class staging threads, class-sized
+ring commits, per-class release/drain.  Exits non-zero on any violation.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.launch.smoke_classes
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+
+def main() -> int:
+    import jax
+    from repro.configs import get_config
+    from repro.core.slot_classes import resolution_buckets
+    from repro.launch.steps import init_params
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    buckets = resolution_buckets(cfg)
+    thumb_tokens, full_tokens = buckets[0], buckets[-1]
+    rng = np.random.default_rng(0)
+
+    def feats(n_tokens):
+        return rng.standard_normal(
+            (1, n_tokens, cfg.vision_feat_dim)).astype(np.float32) * 0.02
+
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        print("slot classes (rings materialize lazily on first use):")
+        for name, c in eng.tabm.classes.items():
+            print(f"  {name:>12}: {c.n_images} img x {c.tokens_per_image} "
+                  f"tok -> slab {c.max_tokens} tok, {c.n_slots} slots, "
+                  f"{eng.tabm.class_nbytes(name)} B")
+        assert not eng.tabm.rings              # nothing allocated yet
+        hi = Request(rid=0, tokens=np.arange(8) + 3, max_new_tokens=4,
+                     vision_feats=feats(full_tokens))
+        thumb = Request(rid=1, tokens=np.arange(6) + 3, max_new_tokens=4,
+                        vision_feats=feats(thumb_tokens))
+        eng.submit(hi)
+        eng.submit(thumb)
+        done = eng.run()
+
+        assert len(done) == 2, f"expected 2 finished requests, got {done}"
+        for r in done:
+            assert r.error is None, f"request {r.rid} failed: {r.error!r}"
+            assert len(r.out_tokens) >= 4, f"request {r.rid} undergenerated"
+        assert hi.slot_class != thumb.slot_class, (
+            f"hi-res and thumbnail landed in one class "
+            f"({hi.slot_class}) — partitioning is broken")
+        hi_ring = eng.tabm.ring(hi.slot_class)
+        th_ring = eng.tabm.ring(thumb.slot_class)
+        assert hi_ring.max_tokens >= full_tokens > th_ring.max_tokens, (
+            "thumbnail slab is not smaller than the full-resolution slab")
+        assert hi_ring.stats["writes"] == th_ring.stats["writes"] == 1, (
+            f"each class ring should carry exactly its own request: "
+            f"hi={hi_ring.stats} thumb={th_ring.stats}")
+        assert set(eng.tabm.rings) == {hi.slot_class, thumb.slot_class}, (
+            f"only the classes traffic touched should have allocated "
+            f"pools, got {list(eng.tabm.rings)}")
+        print(f"classes used: hi-res={hi.slot_class} "
+              f"thumbnail={thumb.slot_class}")
+        print(f"per-class stats: hi={hi_ring.stats} thumb={th_ring.stats}")
+        print(f"tokens: hi={hi.out_tokens} thumb={thumb.out_tokens}")
+    print("OK: mixed-class engine smoke passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,27 +1,41 @@
-"""Continuous-batching serving engine — a two-stage async pipeline:
+"""Continuous-batching serving engine — a two-stage async pipeline over a
+class-partitioned TABM pool:
 
-    producer thread (StagingWorker)          consumer (step loop)
-    ------------------------------           ---------------------
-    vision encode -> projector ->            plan.consume (per-slot
-    plan.produce -> TABM ring commit         ready wait) -> prefill ->
-    (blocks on FULL = backpressure)          batched decode
+    producer threads (StagingWorker,         consumer (step loop)
+    one per slot class)                      ---------------------
+    ------------------------------           plan.consume (per-slot,
+    vision encode -> projector ->            per-class ready wait) ->
+    plan.produce -> class ring commit        prefill -> batched decode
+    (blocks on class FULL = per-class
+    backpressure)
 
 The vision path is not reimplemented here: the engine compiles the
 BrickGraph into an :class:`repro.core.plan.ExecutionPlan` and drives the
 plan's TABM edge as a real producer/consumer pair —
 
-* **producer** (:class:`StagingWorker`): a dedicated thread pulls admitted
-  requests from an admission queue and runs ``plan.produce`` (vision
-  encode -> projector -> ring commit) *off the step loop*, so request
-  k+1's vision encode overlaps request k's decode — the paper's TABM
-  smoothing made actually concurrent.  A FULL ring blocks the producer
-  thread inside ``acquire_write`` (backpressure, never a silent bypass);
-  admission hands requests to the worker against a staged-ahead depth
-  budget (core/scheduler.staging_budget), not raw ring occupancy.
+* **slot classes**: every vision request is classified at submit (image
+  count × resolution bucket, from the arch config — core/slot_classes)
+  and staged through its own class-sized ring of the
+  :class:`~repro.core.tabm.SlotClassPool`.  A 1-image thumbnail no longer
+  pads into a 4-image full-resolution slab, and a FULL high-resolution
+  ring stalls only that class's producer thread — thumbnails keep
+  staging and admitting (class isolation).
+* **producer** (:class:`StagingWorker`): one thread per slot class pulls
+  admitted requests from its class's hand-off queue and runs
+  ``plan.produce`` (vision encode -> projector -> ring commit) *off the
+  step loop*, so request k+1's vision encode overlaps request k's decode
+  — the paper's TABM smoothing made actually concurrent.  A FULL class
+  ring blocks that class's thread inside ``acquire_write`` (backpressure,
+  never a silent bypass); admission charges each request's class against
+  its own staged-ahead depth budget
+  (core/scheduler.class_staging_budgets), scaled by the battery knob
+  ``class_depth_scale`` — THROTTLED shrinks the high-resolution classes'
+  depth first, so expensive staging is the first load shed.
 * **consumer** (``_bind_vision``): at admission the request's committed
   slot is bound as the prefill's vision input after a per-slot ready wait
-  (``wait_ready``; zero-copy via donation, see core/tabm.py) and released once the
-  prefill has consumed it — validated by the ring's seqlock generation.
+  on its class ring (``wait_ready``; zero-copy via donation, see
+  core/tabm.py) and released once the prefill has consumed it —
+  validated by the ring's seqlock generation.
 
 Lifecycle: ``shutdown()`` (or the context manager) stops the worker —
 closing the ring wakes a producer stalled on FULL — joins the thread,
@@ -67,8 +81,8 @@ from repro.configs.base import ModelConfig
 from repro.core.bricks import decompose
 from repro.core.plan import compile_plan
 from repro.core.power import BatteryAwareExecutor, PMU, PowerState
-from repro.core.scheduler import staging_budget
-from repro.core.tabm import RingBuffer, TABMError
+from repro.core.scheduler import class_staging_budgets
+from repro.core.tabm import SlotClassPool, TABMError
 from repro.models import model as M
 from repro.serving.kv_cache import SlotCache, bucket_length
 from repro.serving.sampling import sample
@@ -85,6 +99,7 @@ class Request:
     rid: int
     tokens: np.ndarray                     # prompt token ids
     vision_feats: Optional[np.ndarray] = None
+    n_images: int = 1                      # images the vision feats cover
     max_new_tokens: int = 32
     temperature: float = 0.0
     submit_t: float = field(default_factory=time.time)
@@ -92,7 +107,8 @@ class Request:
     finish_t: Optional[float] = None
     out_tokens: List[int] = field(default_factory=list)
     slot: Optional[int] = None                 # KV-cache slot once admitted
-    tabm_slot: Optional[int] = None            # ring slot once staged
+    tabm_slot: Optional[int] = None            # class-ring slot once staged
+    slot_class: Optional[str] = None           # TABM class, set at submit
     stage_submitted: bool = False              # handed to the StagingWorker
     error: Optional[BaseException] = None      # staging/engine failure
     _tabm_gen: Optional[int] = None            # seqlock gen at consume
@@ -129,48 +145,66 @@ _STOP = object()
 
 
 class StagingWorker:
-    """The pipeline's producer stage: one thread draining an admission
-    queue through ``plan.produce``.
+    """The pipeline's producer stage: one thread *per slot class*, each
+    draining its class's hand-off queue through ``plan.produce``.
 
-    The worker owns the ring-write side of the TABM contract: it blocks
-    *inside* ``acquire_write`` on a FULL ring (so backpressure stalls the
-    producer thread, never the decode loop), aborts the slot if a brick
-    raises, and attaches any failure to the originating request before
-    flagging it staged.  ``shutdown`` closes the ring first — waking a
-    stalled producer — then joins; requests still queued at that point are
-    cancelled with :class:`EngineClosed`."""
+    The worker owns the ring-write side of the TABM contract, per class:
+    a class thread blocks *inside* ``acquire_write`` on its own FULL ring
+    (so backpressure stalls exactly that class's producer — never the
+    decode loop, never another class's staging), aborts the slot if a
+    brick raises, and attaches any failure to the originating request
+    before flagging it staged.  ``shutdown`` closes the pool first —
+    waking every stalled class thread — then joins them all; requests
+    still queued at that point are cancelled with :class:`EngineClosed`.
 
-    def __init__(self, plan, trace):
+    ``classes=(None,)`` (the default) degenerates to the single-ring,
+    single-thread pipeline."""
+
+    def __init__(self, plan, trace, classes=(None,)):
         self.plan = plan
         self._trace = trace                     # (event, rid) -> None
-        self._q: "queue.Queue" = queue.Queue()
+        self._classes = tuple(classes)
+        self._qs: Dict[Optional[str], "queue.Queue"] = {
+            c: queue.Queue() for c in self._classes}
         self._stop = threading.Event()
         self._lock = threading.Lock()
-        self._in_flight = 0                     # handed over, not yet staged
-        self._thread: Optional[threading.Thread] = None
+        # handed over, not yet staged — charged per class at hand-off
+        self._in_flight: Dict[Optional[str], int] = {
+            c: 0 for c in self._classes}
+        self._threads: Dict[Optional[str], threading.Thread] = {}
 
-    @property
-    def in_flight(self) -> int:
+    def in_flight(self, slot_class: Optional[str] = None) -> int:
         with self._lock:
-            return self._in_flight
+            return self._in_flight[slot_class]
 
-    def start(self):
-        if self._thread is None:
-            self._thread = threading.Thread(
-                target=self._run, name="tabm-staging", daemon=True)
-            self._thread.start()
+    def in_flight_by_class(self) -> Dict[Optional[str], int]:
+        with self._lock:
+            return dict(self._in_flight)
+
+    def start(self, slot_class: Optional[str] = None):
+        if slot_class not in self._threads:
+            name = "tabm-staging" if slot_class is None \
+                else f"tabm-staging[{slot_class}]"
+            t = threading.Thread(target=self._run, args=(slot_class,),
+                                 name=name, daemon=True)
+            self._threads[slot_class] = t
+            t.start()
 
     def submit(self, req: Request):
         if self._stop.is_set():
             raise EngineClosed("staging worker already shut down")
-        self.start()
+        cls = req.slot_class
+        if cls not in self._qs:
+            raise EngineClosed(f"no staging queue for slot class {cls!r}")
+        self.start(cls)
         with self._lock:
-            self._in_flight += 1
-        self._q.put(req)
+            self._in_flight[cls] += 1
+        self._qs[cls].put(req)
 
-    def _run(self):
+    def _run(self, slot_class: Optional[str]):
+        q = self._qs[slot_class]
         while True:
-            item = self._q.get()
+            item = q.get()
             if item is _STOP:
                 break
             req: Request = item
@@ -180,7 +214,7 @@ class StagingWorker:
                 self._trace("stage_start", req.rid)
                 slot = self.plan.produce(
                     {"vision_feats": jnp.asarray(req.vision_feats)},
-                    block=True)
+                    slot_class=slot_class, block=True)
                 if slot is None:                # ring closed mid-stall
                     raise EngineClosed("ring closed while staging stalled")
                 req.tabm_slot = slot
@@ -190,20 +224,25 @@ class StagingWorker:
                 self._trace("stage_error", req.rid)
             finally:
                 with self._lock:
-                    self._in_flight -= 1
+                    self._in_flight[slot_class] -= 1
                 req._staged_ev.set()            # marks staged
 
     def shutdown(self, timeout: float = 10.0) -> bool:
-        """Stop accepting, cancel in-flight staging, join the thread.
-        Returns True when the thread is fully dead (no daemon leak)."""
+        """Stop accepting, cancel in-flight staging, join every class
+        thread.  Returns True when all threads are fully dead (no daemon
+        leak)."""
         self._stop.set()
         if self.plan.tabm is not None:
-            self.plan.tabm.close()              # wakes a FULL-ring stall
-        if self._thread is None:
-            return True
-        self._q.put(_STOP)
-        self._thread.join(timeout)
-        return not self._thread.is_alive()
+            self.plan.tabm.close()        # wakes every class's FULL stall
+        threads = list(self._threads.items())
+        for cls, _ in threads:
+            self._qs[cls].put(_STOP)
+        deadline = time.monotonic() + timeout
+        alive = False
+        for _, t in threads:
+            t.join(max(0.0, deadline - time.monotonic()))
+            alive = alive or t.is_alive()
+        return not alive
 
 
 class ServingEngine:
@@ -228,10 +267,13 @@ class ServingEngine:
         # producer/consumer interleaving evidence: (event, rid, t); bounded
         # so a long-running server doesn't grow it without limit
         self.trace: "deque[tuple]" = deque(maxlen=4096)
-        # TABM pool between encoder and decoder bricks (vlm archs)
-        self.tabm = RingBuffer(n_slots=max(2, n_slots // 2),
-                               max_tokens=cfg.vision_tokens or 1,
-                               dim=cfg.d_model) if cfg.vlm else None
+        # class-partitioned TABM pool between encoder and decoder bricks
+        # (vlm archs): one class-sized ring per image-count x resolution
+        # bucket (core/slot_classes), so a thumbnail request neither pads
+        # into nor queues behind a multi-image full-resolution slab
+        self.tabm = SlotClassPool.from_config(
+            cfg, dim=cfg.d_model,
+            slots_per_class=max(2, n_slots // 2)) if cfg.vlm else None
         # the one brick runtime: vision staging routes through the plan's
         # projector brick and TABM edge (no inline reimplementation).
         # placement/accels/backend pick the lowering substrate per brick
@@ -261,7 +303,8 @@ class ServingEngine:
                 if eng is not None:
                     eng._trace_event(event, rid)
 
-            self._worker = StagingWorker(self.plan, _trace)
+            self._worker = StagingWorker(self.plan, _trace,
+                                         classes=tuple(self.tabm.names()))
             self._finalizer = weakref.finalize(
                 self, StagingWorker.shutdown, self._worker, 1.0)
         self._closed = False
@@ -277,6 +320,14 @@ class ServingEngine:
             raise EngineClosed("engine already shut down")
         if self.tabm is None or req.vision_feats is None:
             req._staged_ev.set()           # text-only: nothing to commit
+        elif req.slot_class is None:
+            # classify from the vision spec (token count x image count) —
+            # the request is charged against exactly this class's ring and
+            # admission depth; an unservable spec fails fast, at submit
+            req.slot_class = self.tabm.classify(
+                int(np.asarray(req.vision_feats).shape[1]), req.n_images)
+        else:
+            self.tabm.ring(req.slot_class)     # unknown class fails fast
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -359,79 +410,108 @@ class ServingEngine:
             self._prefill_cache[bucket] = jax.jit(fn)
         return self._prefill_cache[bucket]
 
-    def _stage(self):
+    def _stage(self, depth_scale: float = 1.0):
         """Synchronous fallback producer (``async_staging=False``): run the
-        plan's frontend/projector stages inline for queued vlm requests.
-        A FULL ring stalls the producer — the stalled request stays at the
-        queue head and staging retries next step (backpressure, never a
-        bypass)."""
+        plan's frontend/projector stages inline for queued vlm requests,
+        class by class.  A FULL class ring stalls *that class* — its
+        requests keep their FIFO positions and retry next step — while
+        later requests of other classes continue staging (per-class
+        backpressure, never a bypass, never cross-class head-of-line
+        blocking).  The battery knob gates classes exactly like the async
+        hand-off: a class whose scaled depth is already met stages
+        nothing this step (high-resolution classes shed first)."""
         if self.tabm is None:
             return
+        table = self.tabm.admission_table(depth_scale)
+        stalled: set = set()                   # classes FULL this pass
         for req in self.queue:
-            if req.staged:
+            if req.staged or req.vision_feats is None:
+                continue
+            if req.slot_class in stalled:      # keep FIFO within the class
+                continue
+            ring, cap = table[req.slot_class]
+            staged_now = ring.staged_ahead() if ring is not None else 0
+            if cap < self.tabm.max_ahead(req.slot_class) \
+                    and staged_now >= cap:
+                # the *throttle* binds (scaled depth met) — skip the class
+                # without touching the ring; plain FULL still goes through
+                # produce below so backpressure stalls are observable
+                stalled.add(req.slot_class)
                 continue
             if not req.stage_submitted:    # one stage_start per request,
                 req.stage_submitted = True  # even across FULL-stall retries
                 self._trace_event("stage_start", req.rid)
             try:
                 slot = self.plan.produce(
-                    {"vision_feats": jnp.asarray(req.vision_feats)})
+                    {"vision_feats": jnp.asarray(req.vision_feats)},
+                    slot_class=req.slot_class)
             except Exception as e:             # surface on the owning request
                 req.error = e
                 req._staged_ev.set()            # marks staged
                 self._trace_event("stage_error", req.rid)
                 continue
-            if slot is None:                   # FULL -> stall, retry later
-                break
+            if slot is None:                   # class FULL -> stall the class
+                stalled.add(req.slot_class)
+                continue
             req.tabm_slot = slot
             req._staged_ev.set()           # marks staged
             self._trace_event("stage_commit", req.rid)
 
-    def _feed_staging(self):
-        """Admission's producer hand-off: give the worker more requests only
-        while the staged-ahead depth budget (scheduler hook) allows — the
-        ring itself would block the worker past that anyway, and a bounded
-        hand-off queue keeps shutdown cancellation cheap."""
-        # n_slots + 1: one request beyond ring capacity may be handed over,
-        # so a FULL ring stalls the producer *thread* inside acquire_write
-        # (the paper's backpressure point) instead of starving it at the
-        # hand-off; shutdown wakes that stall via ring close
-        budget = staging_budget(self.tabm, self._worker.in_flight,
-                                max_ahead=self.tabm.n_slots + 1)
+    def _feed_staging(self, depth_scale: float = 1.0):
+        """Admission's producer hand-off, charged per class: each request
+        is handed to its class's staging thread only while that class's
+        staged-ahead depth budget (core/scheduler.class_staging_budgets)
+        allows.  The cap is each class's own ``max_ahead`` — by default
+        the class ring's capacity, ``staging_budget``'s own default, so
+        the hand-off queue is bounded by the ring and shutdown
+        cancellation stays cheap — scaled by the battery knob
+        ``depth_scale`` (high-resolution classes shrink first).  A class
+        with no budget (FULL, throttled, or saturated hand-off) is simply
+        skipped; later requests of other classes still hand off — the
+        class isolation the single FIFO cap could not give."""
+        budgets = class_staging_budgets(
+            self.tabm, self._worker.in_flight_by_class(), depth_scale)
         for req in self.queue:
-            if budget <= 0:
-                break
             if req.staged or req.stage_submitted or req.vision_feats is None:
                 continue
+            if budgets.get(req.slot_class, 0) <= 0:
+                continue                       # class exhausted; others go on
+            budgets[req.slot_class] -= 1
             req.stage_submitted = True
             self._worker.submit(req)
-            budget -= 1
+
+    def _ring_of(self, req: Request):
+        """The class ring holding this request's staged embeds."""
+        return self.tabm.ring(req.slot_class)
 
     def _bind_vision(self, req: Request) -> Optional[jnp.ndarray]:
-        """Consumer half: per-slot ready wait on the request's slot, then
-        bind the oldest READY ring slot as the prefill's vision input.
-        FIFO commit order == FIFO admission order, so the bound slot is
-        this request's; the seqlock generation is captured so release can
-        assert the zero-copy view stayed valid across the prefill."""
+        """Consumer half: per-slot ready wait on the request's class ring,
+        then bind that ring's oldest READY slot as the prefill's vision
+        input.  FIFO commit order == FIFO admission order *within a
+        class*, so the bound slot is this request's; the seqlock
+        generation is captured so release can assert the zero-copy view
+        stayed valid across the prefill."""
         if req.tabm_slot is None:
             return None
         # normally immediate — admission only runs once `staged` is set,
         # which the worker sets strictly after commit — but this is the
         # formal consumer-side gate (and the blocking point if admission
         # ever runs ahead of the staged flag)
-        if not self.plan.wait_ready(req.tabm_slot, timeout=30.0):
+        if not self.plan.wait_ready(req.tabm_slot, timeout=30.0,
+                                    slot_class=req.slot_class):
             raise TABMError(
-                f"slot {req.tabm_slot} did not become READY (aborted, "
-                f"ring closed, or timed out)")
-        got = self.plan.consume()
+                f"slot {req.tabm_slot} ({req.slot_class}) did not become "
+                f"READY (aborted, ring closed, or timed out)")
+        got = self.plan.consume(slot_class=req.slot_class)
         if got is None or got[0] != req.tabm_slot:
-            # enforced with a real raise (not assert): this is the FIFO
-            # contract the whole zero-copy hand-off stands on
+            # enforced with a real raise (not assert): this is the
+            # per-class FIFO contract the zero-copy hand-off stands on
             raise TABMError(
                 f"consume returned {got and got[0]}, expected request "
-                f"{req.rid}'s slot {req.tabm_slot} (FIFO order broken)")
+                f"{req.rid}'s slot {req.tabm_slot} of class "
+                f"{req.slot_class} (per-class FIFO order broken)")
         slot, view, n = got
-        req._tabm_gen = self.tabm.slot_generation(slot)
+        req._tabm_gen = self._ring_of(req).slot_generation(slot)
         return view[None, :n]
 
     def _fail(self, req: Request):
@@ -466,27 +546,38 @@ class ServingEngine:
                     or state is PowerState.UNCONSTRAINED)
         if power_ok:
             if self._worker is not None:
-                self._feed_staging()           # producer thread runs ahead
+                # producer threads run ahead, charged per class and scaled
+                # by the battery knob (high-res classes shed depth first)
+                self._feed_staging(knobs.class_depth_scale)
             else:
-                self._stage()                  # sync fallback: inline
+                # sync fallback: inline, same per-class battery gating —
+                # the equivalence oracle throttles like the async path
+                self._stage(knobs.class_depth_scale)
         budget = min(len(self.slots.free), knobs.max_batch)
         if not power_ok:
             budget = 0
-        while self.queue and budget > 0:
-            req = self.queue[0]
-            if self.tabm is not None and not req.staged:
-                break                          # producer stalled on FULL ring
+        i = 0
+        while i < len(self.queue) and budget > 0:
+            req = self.queue[i]
+            if self.tabm is not None and req.vision_feats is not None \
+                    and not req.staged:
+                # this request's class producer is stalled (FULL ring or
+                # throttled depth) — skip it, keep its FIFO position, and
+                # let staged requests of *other* classes admit behind it:
+                # a stalled high-res class never blocks thumbnails
+                i += 1
+                continue
             # error is read only after the staged flag: the worker stores
             # error before staged=True, so a failed request can never slip
             # through as staged-with-no-slot and prefill without vision
             if req.error is not None:          # staging failed: finish failed
-                self.queue.pop(0)
+                self.queue.pop(i)
                 self._fail(req)
                 continue
             slot = self.slots.take_slot()
             if slot is None:
                 break
-            self.queue.pop(0)
+            self.queue.pop(i)
             budget -= 1
             try:
                 prompt = np.asarray(req.tokens, np.int32)
@@ -499,22 +590,24 @@ class ServingEngine:
                     self.params, jnp.asarray(padded), vision,
                     jnp.asarray([len(prompt)], jnp.int32))
                 if req.tabm_slot is not None:  # prefill consumed the view
-                    if not self.tabm.view_valid(req.tabm_slot,
-                                                req._tabm_gen):
+                    if not self._ring_of(req).view_valid(req.tabm_slot,
+                                                         req._tabm_gen):
                         raise TABMError(
                             f"slot {req.tabm_slot} recycled under request "
                             f"{req.rid}'s zero-copy view (seqlock "
                             f"violation)")
-                    self.plan.release(req.tabm_slot)
+                    self.plan.release(req.tabm_slot,
+                                      slot_class=req.slot_class)
             except Exception as e:
                 # neither the KV slot nor a consumed ring slot may leak,
                 # and the request must still be accounted for (e.g. the
                 # ring closed under a concurrent shutdown mid-admission):
                 # fail this request, keep serving
                 if (req.tabm_slot is not None and req._tabm_gen is not None
-                        and self.tabm.view_valid(req.tabm_slot,
-                                                 req._tabm_gen)):
-                    self.plan.release(req.tabm_slot)   # consumed, unreleased
+                        and self._ring_of(req).view_valid(req.tabm_slot,
+                                                          req._tabm_gen)):
+                    self.plan.release(req.tabm_slot,   # consumed, unreleased
+                                      slot_class=req.slot_class)
                 self.slots.release(slot)
                 req.error = e
                 self._fail(req)
@@ -528,13 +621,25 @@ class ServingEngine:
             tok = self._pick(logits, req)
             req.out_tokens.append(int(tok[0]))
             req.first_token_t = time.time()
-        if (self._worker is not None and not self.live and self.queue
-                and self.queue[0].error is None
-                and self.queue[0].stage_submitted   # worker WILL stage it —
-                and not self.queue[0].staged):      # power-gated heads won't
-            # idle consumer waiting on the producer: park briefly on the
-            # head request's staged event instead of hot-spinning the loop
-            self.queue[0]._staged_ev.wait(0.05)
+        if not self.live and self.queue:
+            waiter = None
+            if self._worker is not None:
+                # idle consumer waiting on the producer: park briefly on
+                # the first pending staged event instead of hot-spinning
+                # the loop (only stage_submitted requests qualify — the
+                # worker WILL stage those; gated heads won't set it)
+                waiter = next((r for r in self.queue
+                               if r.error is None and r.stage_submitted
+                               and not r.staged), None)
+            if waiter is not None:
+                waiter._staged_ev.wait(0.05)
+            elif not any(r.staged and r.error is None for r in self.queue):
+                # nothing live, nothing admissible, nothing being staged —
+                # every queued request is power- or class-depth-gated.
+                # Breathe instead of hot-spinning the step loop at full
+                # CPU (which would burn the very battery the throttle is
+                # conserving) until charge recovers.
+                time.sleep(0.005)
 
     def _pick(self, logits, req: Request):
         if req.temperature == 0.0:

@@ -107,28 +107,33 @@ def _run_all(eng, reqs):
 
 def test_shutdown_drains_staged_slots_no_thread_left(vlm):
     """Drain protocol: staged-but-unconsumed slots (and a producer parked
-    on the FULL ring) must not survive shutdown — ring fully EMPTY, worker
-    joined, queued requests failed with EngineClosed."""
+    on its class's FULL ring) must not survive shutdown — every class ring
+    fully EMPTY, all class workers joined, queued requests failed with
+    EngineClosed."""
     cfg, params = vlm
     eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
-    n_ring = eng.tabm.n_slots
-    for i in range(n_ring + 2):                # overfill: forces a stall
+    # every _vreq is the same class (1 full-res image): its class ring is
+    # the resource being overfilled, not the pool total
+    ring = eng.tabm.ring_for_tokens(cfg.vision_tokens)
+    n_ring = ring.n_slots
+    for i in range(n_ring + 2):                # overfill: forces starvation
         eng.submit(_vreq(cfg, i))
     eng._feed_staging()                        # hand over without admitting
-    # wait until the ring is staged full (worker committed n_ring slots)
+    # wait until the class ring is staged full (worker committed n_ring)
     deadline = time.monotonic() + 120
-    while eng.tabm.ready_count() < n_ring:
+    while ring.ready_count() < n_ring:
         assert time.monotonic() < deadline, "worker never filled the ring"
         time.sleep(0.005)
-    assert staged_ahead_depth(eng.tabm) == n_ring
-    worker_thread = eng._worker._thread
-    assert worker_thread is not None and worker_thread.is_alive()
-    assert eng.shutdown()                      # True = worker thread joined
-    assert all(st == EMPTY for st in eng.tabm.states)      # ring released
-    # THIS engine's producer thread is dead — no daemon left behind (other
-    # tests' engines may still park workers, so scope to our own thread)
-    assert not worker_thread.is_alive()
-    assert worker_thread not in threading.enumerate()
+    assert staged_ahead_depth(ring) == n_ring
+    worker_threads = list(eng._worker._threads.values())
+    assert worker_threads and all(t.is_alive() for t in worker_threads)
+    assert eng.shutdown()                      # True = all workers joined
+    assert all(st == EMPTY for st in eng.tabm.states)  # pool released
+    # THIS engine's producer threads are dead — no daemon left behind
+    # (other tests' engines may still park workers, so scope to our own)
+    for t in worker_threads:
+        assert not t.is_alive()
+        assert t not in threading.enumerate()
     assert not eng.queue                       # everything resolved
     failed = [r for r in eng.done if r.error is not None]
     assert len(failed) == n_ring + 2           # none decoded, all cancelled
@@ -159,8 +164,8 @@ def test_shutdown_resolves_live_mid_decode_requests(vlm):
 
 def test_dropped_engine_reaps_worker_thread(vlm):
     """An engine discarded without shutdown() must not leak its producer
-    thread: the worker holds the engine only weakly, so collection fires
-    the finalizer, which closes the ring and joins the thread."""
+    threads: the worker holds the engine only weakly, so collection fires
+    the finalizer, which closes the pool and joins every class thread."""
     import gc
     cfg, params = vlm
     eng = ServingEngine(cfg, params, n_slots=2, max_len=128)
@@ -168,7 +173,7 @@ def test_dropped_engine_reaps_worker_thread(vlm):
     eng.submit(r)
     eng._feed_staging()
     assert r._staged_ev.wait(60)               # worker is up and parked
-    t = eng._worker._thread
+    t = eng._worker._threads[r.slot_class]     # this request's class thread
     assert t is not None and t.is_alive()
     del eng
     gc.collect()                               # finalizer -> worker.shutdown

@@ -119,7 +119,8 @@ def test_engine_tabm_full_stall_drain(key):
     cfg, params, _ = _setup("llava-onevision-0.5b", key)
     eng = ServingEngine(cfg, params, n_slots=2, max_len=128,
                         async_staging=False)
-    assert eng.tabm.n_slots == 2
+    # every request below is one full-res image -> one class ring of 2
+    assert eng.tabm.ring_for_tokens(cfg.vision_tokens).n_slots == 2
     rng = np.random.default_rng(0)
     n_req = 5
     for i in range(n_req):

@@ -1,0 +1,283 @@
+"""Class-partitioned TABM slot pools (core/slot_classes +
+core/tabm.SlotClassPool) and battery-scaled per-class admission.
+
+Covers the issue's acceptance criteria:
+* **class table** — image-count × resolution buckets derived from the
+  arch config; classify() picks the smallest fitting slab; unservable
+  specs fail fast;
+* **class-sized slabs** — a thumbnail-class ring rejects a commit larger
+  than its own max_tokens (no more padding 1-image requests into 4-image
+  slabs, and no oversized payload sneaking into a small slab);
+* **per-class FULL isolation** — with the high-resolution class ring
+  FULL (and a further hi-res request starved at hand-off by its own
+  class budget), a thumbnail request is still staged AND admitted — the
+  engine trace proves it;
+* **battery-scaled admission** — Knobs.class_depth_scale shrinks the
+  high-resolution classes' depth first (largest slab gates to zero under
+  deep THROTTLED) while the thumbnail class keeps full depth, and
+  restores when charge recovers — end-to-end through the engine;
+* **equivalence** — async and sync pipelines produce identical greedy
+  tokens with ≥2 classes in flight.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.power import BatteryAwareExecutor, PMU, PowerPolicy
+from repro.core.scheduler import class_staging_budgets
+from repro.core.slot_classes import (SlotClassError, build_slot_classes,
+                                     classify, classify_total,
+                                     image_buckets, resolution_buckets)
+from repro.core.tabm import EMPTY, SlotClassPool, TABMError
+from repro.serving.engine import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    import jax
+    from repro.launch.steps import init_params
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(cfg, rid, n_tokens, n_images=1, n_new=4, seed=0):
+    rng = np.random.default_rng(seed + rid)
+    return Request(
+        rid=rid, tokens=(np.arange(6 + rid) % 50 + 3).astype(np.int32),
+        n_images=n_images, max_new_tokens=n_new,
+        vision_feats=rng.standard_normal(
+            (1, n_tokens, cfg.vision_feat_dim)).astype(np.float32) * 0.02)
+
+
+# ---------------------------------------------------------------------------
+# class derivation (configs -> slot classes)
+# ---------------------------------------------------------------------------
+
+def test_class_table_from_config():
+    cfg = get_config("llava-onevision-0.5b")
+    assert resolution_buckets(cfg) == (196, 729)
+    assert image_buckets(cfg) == (1, 4)
+    classes = build_slot_classes(cfg.reduced(), slots_per_class=2)
+    # reduced: buckets (2, 8) x images (1, 4), smallest slab first
+    assert list(classes) == ["1img-2tok", "1img-8tok", "4img-2tok",
+                             "4img-8tok"]
+    assert classes["1img-2tok"].max_tokens == 2
+    assert classes["4img-8tok"].max_tokens == 32
+    # classify picks the smallest fitting slab
+    assert classify(classes, 8, 1).name == "1img-8tok"
+    assert classify(classes, 2, 1).name == "1img-2tok"
+    assert classify(classes, 8, 4).name == "4img-2tok"   # 4 thumbnails
+    assert classify(classes, 32, 4).name == "4img-8tok"
+    assert classify_total(classes, 5).name == "1img-8tok"
+    with pytest.raises(SlotClassError):
+        classify(classes, 64, 1)               # beyond every bucket
+    with pytest.raises(SlotClassError):
+        classify(classes, 8, 8)                # more images than the config
+    with pytest.raises(SlotClassError):
+        build_slot_classes(get_config("stablelm-1.6b"))   # not a vlm
+
+
+def test_single_bucket_arch_falls_back_to_one_class_per_image_bucket():
+    cfg = get_config("llava-onevision-0.5b").reduced(
+        vision_token_buckets=(), vision_max_images=1)
+    classes = build_slot_classes(cfg)
+    assert list(classes) == ["1img-8tok"]      # vision_tokens fallback
+
+
+def test_class_sized_max_tokens_rejects_oversized_commit(vlm):
+    """The slab win and its guard: each class ring holds exactly its own
+    slab, and a payload bigger than the class slab is rejected at commit
+    (per class), like single-ring overflow."""
+    cfg, _ = vlm
+    pool = SlotClassPool.from_config(cfg, slots_per_class=2)
+    thumb, full = pool.ring("1img-2tok"), pool.ring("1img-8tok")
+    assert thumb.max_tokens == 2 and full.max_tokens == 8
+    assert thumb.nbytes < full.nbytes          # no padding into big slabs
+    s = thumb.acquire_write()
+    with pytest.raises(TABMError):             # full-res payload, thumb slab
+        thumb.commit_write(s, jnp.ones((8, cfg.d_model)))
+    thumb.abort_write(s)
+    s = full.acquire_write()                   # same payload, right class
+    full.commit_write(s, jnp.ones((8, cfg.d_model)))
+    slot, _, n = full.acquire_read()
+    assert slot == s and n == 8
+    full.release(slot)
+    assert all(st == EMPTY for st in pool.states)
+
+
+def test_submit_oversized_vision_spec_fails_fast(vlm):
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        with pytest.raises(SlotClassError):
+            eng.submit(_req(cfg, 0, n_tokens=64, n_images=1))
+
+
+# ---------------------------------------------------------------------------
+# battery-scaled per-class admission depth
+# ---------------------------------------------------------------------------
+
+def test_admission_table_shrinks_high_res_first_and_restores(vlm):
+    cfg, _ = vlm
+    pool = SlotClassPool.from_config(cfg, slots_per_class=2)
+    full_depth = {n: cap for n, (_, cap) in pool.admission_table(1.0).items()}
+    assert full_depth == {"1img-2tok": 2, "1img-8tok": 2,
+                          "4img-2tok": 2, "4img-8tok": 2}
+    half = {n: cap for n, (_, cap) in pool.admission_table(0.5).items()}
+    assert half["1img-2tok"] == 2              # thumbnail keeps full depth
+    assert half["4img-8tok"] == 1              # largest slab shrinks most
+    gated = {n: cap for n, (_, cap) in pool.admission_table(0.0).items()}
+    assert gated["1img-2tok"] == 2             # still admitting thumbnails
+    assert gated["4img-8tok"] == 0             # hi-res fully gated
+    assert gated["4img-2tok"] == 0
+    # monotone: deeper throttle never grows any class's depth
+    for name in full_depth:
+        assert gated[name] <= half[name] <= full_depth[name]
+    # restore == the 1.0 table (no hysteresis)
+    again = {n: cap for n, (_, cap) in pool.admission_table(1.0).items()}
+    assert again == full_depth
+    # the scheduler's per-class budget table charges against these caps
+    budgets = class_staging_budgets(pool, in_flight={"1img-2tok": 1},
+                                    depth_scale=0.0)
+    assert budgets["1img-2tok"] == 1 and budgets["4img-8tok"] == 0
+
+
+def test_power_knobs_expose_class_depth_scale():
+    pol = PowerPolicy()
+    assert pol.knobs(0.9).class_depth_scale == 1.0       # UNCONSTRAINED
+    a = pol.alpha(0.4)
+    assert pol.knobs(0.4).class_depth_scale == pytest.approx(a)
+    assert pol.knobs(0.05).class_depth_scale == 0.0      # CRITICAL
+
+
+@pytest.mark.parametrize("async_staging", [True, False],
+                         ids=["async", "sync"])
+def test_throttled_engine_sheds_high_res_staging_first_then_restores(
+        vlm, async_staging):
+    """End-to-end battery-aware admission, in BOTH pipelines: under
+    THROTTLED (alpha=0.25) the 4-image full-resolution class's depth is 0
+    — its request is never staged — while the thumbnail flows; restoring
+    charge restores the class depth and the hi-res request completes."""
+    cfg, params = vlm
+    ex = BatteryAwareExecutor(PMU())
+    ex.pmu.level = 0.30                        # alpha = 0.25, THROTTLED
+    with ServingEngine(cfg, params, n_slots=2, max_len=128, executor=ex,
+                       async_staging=async_staging) as eng:
+        hi = _req(cfg, 0, n_tokens=32, n_images=4)     # largest class
+        thumb = _req(cfg, 1, n_tokens=2)
+        eng.submit(hi)
+        eng.submit(thumb)
+        assert hi.slot_class == "4img-8tok"
+        assert thumb.slot_class == "1img-2tok"
+        eng.run(max_steps=eng.stats.steps + 40)
+        assert thumb in eng.done and thumb.error is None   # kept flowing
+        assert hi in eng.queue                 # shed: never staged
+        assert not hi.staged and hi.tabm_slot is None
+        # the gated class never even allocated its ring (lazy pool)
+        assert "4img-8tok" not in eng.tabm.rings
+        ex.pmu.level = 1.0                     # charge recovers
+        done = eng.run()
+        assert hi in done and hi.error is None
+        assert len(hi.out_tokens) >= 4
+
+
+def test_rings_materialize_lazily(vlm):
+    """Only classes traffic actually touches allocate a device pool —
+    the memory win over one maximal eagerly-sized ring."""
+    cfg, _ = vlm
+    pool = SlotClassPool.from_config(cfg, slots_per_class=2)
+    assert pool.rings == {} and pool.nbytes == 0
+    assert pool.n_slots == 8                   # capacity is still static
+    pool.classify(8, 1)                        # classification is free
+    assert pool.rings == {}
+    # budgets are computable before any ring exists (all-EMPTY semantics)
+    budgets = class_staging_budgets(pool, in_flight={})
+    assert budgets == {n: 2 for n in pool.names()}
+    r = pool.ring("1img-2tok")                 # first use materializes
+    assert list(pool.rings) == ["1img-2tok"]
+    assert pool.nbytes == r.nbytes == pool.class_nbytes("1img-2tok")
+    # the unmaterialized hi-res slab is the expensive one we didn't pay
+    assert pool.class_nbytes("4img-8tok") == 16 * pool.class_nbytes(
+        "1img-2tok")
+    pool.close()                               # close() covers later birth
+    late = pool.ring("1img-8tok")
+    assert late.closed and pool.closed
+
+
+# ---------------------------------------------------------------------------
+# per-class FULL isolation (the acceptance trace)
+# ---------------------------------------------------------------------------
+
+def test_thumbnail_admitted_and_staged_while_high_res_ring_full(vlm):
+    """The tentpole's proof: the high-resolution class ring is FULL (and a
+    further hi-res request is starved at hand-off by its own class
+    budget), yet a thumbnail request is staged by its own class thread
+    AND admitted (prefilled) — both while the hi-res ring stays FULL."""
+    cfg, params = vlm
+    # max_batch=1 pins admission to one request per step, so the hi-res
+    # slots provably stay staged (FULL) across the thumbnail's admission
+    ex = BatteryAwareExecutor(PMU(), PowerPolicy(full_batch=1))
+    with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                       executor=ex) as eng:
+        hi_ring = eng.tabm.ring("1img-8tok")
+        n_hi = hi_ring.n_slots
+        thumb = _req(cfg, 0, n_tokens=2)
+        eng.submit(thumb)                      # FIFO head: admitted first
+        his = [_req(cfg, 1 + i, n_tokens=8) for i in range(n_hi + 1)]
+        for r in his:
+            eng.submit(r)
+        eng._feed_staging()                    # hand over, nothing admitted
+        deadline = time.monotonic() + 120
+        while hi_ring.ready_count() < n_hi or not thumb.staged:
+            assert time.monotonic() < deadline, "staging never completed"
+            time.sleep(0.005)
+        # hi-res class: ring FULL, and the (n_hi+1)-th request starved at
+        # hand-off by ITS OWN class budget...
+        assert hi_ring.staged_ahead() == n_hi
+        extra = his[-1]
+        assert not extra.stage_submitted and not extra.staged
+        # ...while the thumbnail was handed over and staged concurrently
+        assert thumb.staged and thumb.error is None
+        assert thumb.tabm_slot is not None
+        events = [(e, r) for e, r, _ in eng.trace]
+        assert ("stage_commit", thumb.rid) in events
+        # one step (admission budget 1): the thumbnail prefills...
+        eng.step()
+        assert thumb.slot is not None          # admitted: holds a KV slot
+        assert ("prefill", thumb.rid) in [(e, r) for e, r, _ in eng.trace]
+        # ...and the hi-res class ring is STILL full behind it
+        assert hi_ring.staged_ahead() == n_hi
+        assert all(r.slot is None for r in his)
+        # everything still completes once stepping resumes
+        done = eng.run()
+        assert {r.rid for r in done} == {r.rid for r in [thumb] + his}
+        assert all(r.error is None for r in done)
+        assert all(st == EMPTY for st in eng.tabm.states)
+
+
+def test_async_tokens_identical_to_sync_mixed_classes(vlm):
+    """Greedy decode through the per-class producer threads produces
+    exactly the synchronous path's tokens with ≥2 classes in flight."""
+    cfg, params = vlm
+    specs = [(2, 1), (8, 1), (8, 4), (32, 4), (2, 1), (8, 1)]
+    mk = lambda: [_req(cfg, i, n_tokens=t, n_images=n, n_new=5)
+                  for i, (t, n) in enumerate(specs)]
+
+    def run(async_staging):
+        eng = ServingEngine(cfg, params, n_slots=4, max_len=128,
+                            async_staging=async_staging)
+        with eng:
+            reqs = mk()
+            for r in reqs:
+                eng.submit(r)
+            done = eng.run()
+            classes = {r.slot_class for r in reqs}
+            assert len(classes) >= 2           # really mixed-class traffic
+            return {r.rid: r.out_tokens for r in done}
+
+    done_async, done_sync = run(True), run(False)
+    assert done_async == done_sync
+    assert all(done_async[i] for i in range(len(specs)))
