@@ -1,0 +1,115 @@
+"""Staging-throughput evidence for the batched TABM slab pipeline.
+
+The paper's TABM exists to keep encoder -> projector -> hand-off off the
+critical path; PR 5 batches it.  This microbenchmark measures the staged
+vision-token throughput of ``ExecutionPlan.produce_many`` at K=1 (the old
+one-request-per-commit pipeline) vs K=4 (one batched projector call + one
+strided slab commit for four same-class requests) on CPU JAX.  The win is
+amortization: one jit dispatch, one donated pool scatter, and one pass of
+host-side ring bookkeeping cover K requests instead of K of each.
+
+    python -m benchmarks.bench_staging [--smoke] [--out CSV]
+
+``--smoke`` gates (exit 1) on K=4 beating K=1 staged-tokens/s — the CI
+check that batching stays a speedup, not just a code path.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import Row
+
+KS = (1, 4)
+
+
+def _setup(slots_per_class: int = 8):
+    from repro.configs import get_config
+    from repro.core.bricks import decompose
+    from repro.core.plan import compile_plan
+    from repro.core.tabm import SlotClassPool
+    from repro.launch.steps import init_params
+
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    pool = SlotClassPool.from_config(cfg, slots_per_class=slots_per_class)
+    plan = compile_plan(decompose(cfg), params, tabm=pool)
+    cls = pool.classify(cfg.vision_tokens, 1)
+    rng = np.random.default_rng(0)
+    feats = rng.standard_normal(
+        (1, cfg.vision_tokens, cfg.vision_feat_dim)).astype(np.float32) * .02
+    return cfg, plan, pool, cls, feats
+
+
+def _stage_loop(plan, pool, cls, feats, k: int, iters: int) -> float:
+    """Stage ``iters`` microbatches of K requests, draining after each so
+    the ring never stalls; returns staged vision tokens per second."""
+    ring = pool.ring(cls)
+    batch = [{"vision_feats": feats} for _ in range(k)]
+
+    def once():
+        slots = plan.produce_many(batch, slot_class=cls)
+        assert slots is not None and len(slots) == k
+        for slot in slots:
+            got = plan.consume(slot_class=cls)
+            assert got is not None
+            plan.release(got[0], slot_class=cls)
+
+    once()                                     # warmup: compile both paths
+    jax.block_until_ready(ring.pool)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        once()
+    jax.block_until_ready(ring.pool)
+    dt = time.perf_counter() - t0
+    return (k * iters * feats.shape[1]) / dt
+
+
+def run_bench(iters: int):
+    cfg, plan, pool, cls, feats = _setup()
+    rates = {k: _stage_loop(plan, pool, cls, feats, k, iters) for k in KS}
+    rows = [
+        Row(f"staging/produce_many/K={k}", 0.0,
+            f"staged_tokens_per_s={rates[k]:.0f} class={cls} "
+            f"iters={iters}")
+        for k in KS
+    ]
+    ratio = rates[KS[-1]] / max(rates[KS[0]], 1e-9)
+    rows.append(Row("staging/produce_many/speedup", 0.0,
+                    f"K{KS[-1]}_over_K{KS[0]}={ratio:.2f}x (one batched "
+                    f"projector call + one strided slab commit per "
+                    f"microbatch)"))
+    return rows, rates, ratio
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="K=1 vs K=4 TABM staging throughput")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: fewer iterations, gate on K=4 > K=1")
+    ap.add_argument("--iters", type=int, default=None,
+                    help="staging microbatches per K (default 64; 24 "
+                         "under --smoke)")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV rows to this path (CI "
+                         "artifact)")
+    args = ap.parse_args(argv)
+    iters = args.iters or (24 if args.smoke else 64)
+    rows, rates, ratio = run_bench(iters)
+    lines = ["name,us_per_call,derived"] + [row.csv() for row in rows]
+    print("\n".join(lines), flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write("\n".join(lines) + "\n")
+    if args.smoke and ratio <= 1.0:            # gate, not just a report
+        print(f"FAIL: batched staging is not faster (K=4/K=1 = "
+              f"{ratio:.2f}x)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -46,4 +46,11 @@ echo "== mixed-class TABM engine smoke: hi-res + thumbnail =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.smoke_classes
 
+echo "== batched staging smoke: strided slab commit + grouped prefill =="
+# eight queued same-class requests through the microbatching pipeline:
+# multi-request produce_many slab commits, batch>1 grouped prefill with
+# KVCache.insert_many, greedy tokens identical to the one-by-one oracle
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.smoke_classes --stage-batch 4
+
 echo "OK: check passed"

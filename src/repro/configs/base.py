@@ -87,6 +87,11 @@ class ModelConfig:
     # multi-image full-resolution slab.
     vision_token_buckets: Tuple[int, ...] = ()
     vision_max_images: int = 1
+    # largest same-class staging microbatch this arch's engine may commit
+    # as one strided TABM slab (one batched vision-encode+projector call);
+    # the effective batch is min(this, Knobs.max_stage_batch, class ring
+    # capacity) — battery throttling shrinks it before shedding depth
+    max_stage_batch: int = 4
     # --- numerics / sharding ---
     dtype: str = "bfloat16"
     attn_impl: str = "softmax"    # softmax | linear (paper's streaming variant)

@@ -29,5 +29,8 @@ CONFIG = ModelConfig(
     # resolution; OneVision's anyres grid carries up to 4 image tiles
     vision_token_buckets=(196, 729),
     vision_max_images=4,
+    # the 0.5B decoder leaves headroom on the staging side: commit up to
+    # four same-class requests per strided TABM slab
+    max_stage_batch=4,
     attn_sharding="context",
 )

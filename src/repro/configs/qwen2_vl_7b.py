@@ -32,5 +32,8 @@ CONFIG = ModelConfig(
     # images per request (video frames bucket the same way)
     vision_token_buckets=(256, 1024),
     vision_max_images=4,
+    # 1024-patch slabs at d_model 3584 are memory-heavy: cap the strided
+    # staging slab at two requests per commit
+    max_stage_batch=2,
     attn_sharding="context",
 )

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import threading
 from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
@@ -288,12 +289,83 @@ def register_backend(backend: Backend) -> Backend:
     return backend
 
 
+# ---------------------------------------------------------------------------
+# substrate table — ONE source of truth tying each energy profile (the
+# scheduler's cost-model unit) to the backend it lowers through and the
+# relative matmul efficiency per quant label.  Before this table the
+# scheduler's _BIT_EFFICIENCY and the backend kernel modes agreed only by
+# convention; now ``core/scheduler.brick_cost`` (via
+# ``Accelerator.throughput_scale`` -> :func:`bit_efficiency`) and backend
+# resolution (:func:`substrate_backend`, consulted by ``resolve_backend``
+# and ``Accelerator.backend_name``) read the same rows — a unit priced as
+# reference-kernel-slow at fp cannot silently lower through the Pallas
+# path, and vice versa.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Substrate:
+    """One compute-unit row: lowering backend + per-quant-label relative
+    matmul throughput (fraction of the unit's peak at its preferred
+    width).  ``kernel_mode`` is derived from the backend row, never
+    stated twice."""
+
+    backend: str                            # BACKENDS registry name
+    bit_efficiency: Tuple[Tuple[str, float], ...]
+
+    @property
+    def kernel_mode(self) -> str:
+        return BACKENDS[self.backend].kernel_mode
+
+    def efficiency(self, quant_label: str, default: float = 1.0) -> float:
+        return dict(self.bit_efficiency).get(quant_label, default)
+
+
+SUBSTRATES: Dict[str, Substrate] = {
+    # NPU fp16 at 0.6: the RKNN static-graph driver keeps fp16 encoders
+    # "substantially faster on the NPU" (paper §NPU) even though its
+    # native width is int8 — the paper's Sec. 4 observation that NPUs
+    # consistently win encoder inference must emerge from the cost model.
+    # The npu/cpu rows lower through the host backend (reference kernels
+    # on a pinned thread — hence the fp penalty); the gpu row through the
+    # committed device backend; the pod profile through submeshes.
+    "rk-npu": Substrate("host", (("q8f16", 1.0), ("q4f16", 1.0),
+                                 ("q2f16", 1.0), ("fp16", 0.6),
+                                 ("bf16", 0.6))),
+    "rk-gpu": Substrate("device", (("q8f16", 0.9), ("q4f16", 0.9),
+                                   ("q2f16", 0.9), ("fp16", 1.0),
+                                   ("bf16", 1.0))),
+    "rk-cpu": Substrate("host", (("q8f16", 0.8), ("q4f16", 0.6),
+                                 ("q2f16", 0.5), ("fp16", 0.3),
+                                 ("bf16", 0.3))),
+    "tpu-v5e": Substrate("submesh", (("q8f16", 1.0), ("q4f16", 1.0),
+                                     ("q2f16", 1.0), ("fp16", 1.0),
+                                     ("bf16", 1.0))),
+}
+
+
+def bit_efficiency(profile_name: str, quant_label: str,
+                   default: float = 1.0) -> float:
+    """The cost model's throughput scale for one unit at one quant width,
+    from the shared substrate table (1.0 for unknown units/labels)."""
+    sub = SUBSTRATES.get(profile_name)
+    return default if sub is None else sub.efficiency(quant_label, default)
+
+
+def substrate_backend(profile_name: str) -> Optional[str]:
+    """The backend registry name a unit's profile lowers through, or None
+    for profiles the table does not know."""
+    sub = SUBSTRATES.get(profile_name)
+    return None if sub is None else sub.backend
+
+
 def resolve_backend(spec: Union[str, Backend, None],
                     accel=None) -> Backend:
     """Resolve a backend spec to a concrete Backend.
 
     Priority: explicit ``spec`` (Backend instance or registry name) >
-    the accelerator's ``backend`` profile field > inferred from the
+    the accelerator's ``backend`` profile field > the shared
+    :data:`SUBSTRATES` row of the accelerator's energy profile (the same
+    row the scheduler's cost model prices with) > inferred from the
     accelerator (mesh -> submesh, mesh-less -> host: the paper's edge
     units are emulated host-side) > ``device`` (default-device
     placement when nothing was specified)."""
@@ -310,7 +382,14 @@ def resolve_backend(spec: Union[str, Backend, None],
         name = getattr(accel, "backend", None)
         if name:
             return resolve_backend(name)
-        if getattr(accel, "mesh", None) is not None:
+        profile = getattr(accel, "profile", None)
+        sub = substrate_backend(getattr(profile, "name", ""))
+        mesh = getattr(accel, "mesh", None)
+        # the table row binds unless it is physically impossible (a
+        # submesh lowering needs a mesh to exist on this accelerator)
+        if sub is not None and not (sub == "submesh" and mesh is None):
+            return BACKENDS[sub]
+        if mesh is not None:
             return BACKENDS["submesh"]
         return BACKENDS["host"]
     return BACKENDS["device"]

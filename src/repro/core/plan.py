@@ -50,6 +50,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.backends import Backend, BACKENDS, resolve_backend
 from repro.core.bricks import Brick, BrickGraph, Port
@@ -327,6 +328,11 @@ class ExecutionPlan:
                             f"plan's TABM is a single ring")
         return self.tabm
 
+    def tabm_capacity(self, slot_class: Optional[str] = None) -> int:
+        """Slot capacity of the targeted ring — the hard ceiling on one
+        microbatch (``produce_many`` of more slots can never fit)."""
+        return self._tabm_ring(slot_class).n_slots
+
     def produce(self, inputs: Dict[str, Any], *,
                 slot_class: Optional[str] = None, block: bool = False,
                 timeout: Optional[float] = None) -> Optional[int]:
@@ -335,35 +341,87 @@ class ExecutionPlan:
         slot id, or None when the ring is FULL — the caller must stall and
         retry (backpressure), never bypass the ring.
 
-        With a class-partitioned pool, ``slot_class`` names the request's
-        class ring (the engine derives it from the vision spec at
-        submit); left None, the class is inferred from the vision_feats
-        token count.  A FULL class stalls only that class's producer —
-        other classes' produce calls proceed.
+        This is the K=1 case of :meth:`produce_many` — same slab padding,
+        same abort-on-error contract, one slot."""
+        slots = self.produce_many([inputs], slot_class=slot_class,
+                                  block=block, timeout=timeout)
+        return None if slots is None else slots[0]
 
-        ``block=True`` parks the calling thread on a FULL ring until a
-        consumer releases a slot (or the ring is closed / `timeout`
-        expires, returning None) — this is where the engine's per-class
-        StagingWorker thread stalls, off the decode loop.
+    def produce_many(self, batch_of_inputs: List[Dict[str, Any]], *,
+                     slot_class: Optional[str] = None, block: bool = False,
+                     timeout: Optional[float] = None
+                     ) -> Optional[List[int]]:
+        """Batched producer half: acquire K FIFO-contiguous ring slots,
+        run the upstream stages (vision encode -> projector) as ONE
+        batched jit call over the whole microbatch, and commit a single
+        strided slab covering all K slots.  Returns the slot ids in
+        request order, or None when the ring cannot hold the microbatch
+        (the caller stalls — all-or-nothing backpressure, never a partial
+        commit).
 
-        Error contract: if any upstream brick (e.g. the projector) raises,
-        the acquired slot is aborted back to EMPTY before the exception
-        propagates, so a staging failure can never wedge the ring; the
-        caller owns surfacing the error on the originating request."""
+        Each element of ``batch_of_inputs`` is one request's
+        ``{"vision_feats": (1, t_i, f)}``; requests are padded to the
+        target ring's slab width (``max_tokens`` — all K must share a
+        slot class), so one compiled executable serves every microbatch
+        of the class, and each slot's true length rides in the ring's
+        per-slot token counts (the consumer binds ``view[:n]``, so pad
+        rows are never read — the per-request mask).  The upstream bricks
+        are token-wise (frontend stub, projector), so padded rows cannot
+        perturb real rows and K=1 produces bit-identical embeds to the
+        unbatched path.
+
+        With a class-partitioned pool, ``slot_class`` names the class
+        ring (the engine passes the class it grouped the microbatch by);
+        left None, it is inferred from the largest vision_feats token
+        count in the batch.  ``block=True`` parks the calling thread
+        until K slots free from the ring head — where the engine's
+        per-class StagingWorker stalls, off the decode loop.
+
+        Error contract: if any upstream brick raises, ALL K acquired
+        slots are aborted back to EMPTY (``abort_many`` — abort-all-on-
+        failure, the write pointer rewinds past the whole run) before the
+        exception propagates; the caller owns surfacing the error on the
+        originating requests."""
         if self.tabm is None:
             raise PlanError("plan compiled without a TABM ring")
+        if not batch_of_inputs:
+            raise PlanError("produce_many needs at least one request")
+        feats = []
+        for inputs in batch_of_inputs:
+            extra = set(inputs) - {"vision_feats"}
+            if extra:
+                raise PlanError(f"produce_many batches the vision_feats "
+                                f"port only; got extra inputs {sorted(extra)}")
+            f = inputs.get("vision_feats")
+            if f is None:
+                raise PlanError("produce_many needs vision_feats for "
+                                "every request in the microbatch")
+            if f.shape[0] != 1:
+                raise PlanError("TABM slots hold one request's embeds "
+                                "(batch 1 per request)")
+            feats.append(f)
         if slot_class is None and isinstance(self.tabm, SlotClassPool):
-            feats = inputs.get("vision_feats")
-            if feats is None:
-                raise PlanError("cannot infer a slot class without "
-                                "vision_feats; pass slot_class=")
-            slot_class = self.tabm.classify_total(int(feats.shape[1]))
+            slot_class = self.tabm.classify_total(
+                max(int(f.shape[1]) for f in feats))
         ring = self._tabm_ring(slot_class)
-        slot = ring.acquire_write(block=block, timeout=timeout)
-        if slot is None:
+        lengths = [int(f.shape[1]) for f in feats]
+        for n in lengths:
+            if n > ring.max_tokens:
+                raise PlanError(f"{n} vision tokens > slot capacity "
+                                f"{ring.max_tokens} of the target ring")
+        slots = ring.acquire_write_many(len(feats), block=block,
+                                        timeout=timeout)
+        if slots is None:
             return None
         try:
-            env: Dict[str, Any] = dict(inputs)
+            # pad every request into the class slab and stack: one
+            # (K, slab, f) batch through encoder+projector, one jit call
+            slab = ring.max_tokens
+            stacked = np.zeros((len(feats), slab, feats[0].shape[-1]),
+                               np.asarray(feats[0]).dtype)
+            for b, f in enumerate(feats):
+                stacked[b, : lengths[b]] = np.asarray(f[0])
+            env: Dict[str, Any] = {"vision_feats": jnp.asarray(stacked)}
             env_src: Dict[str, Any] = {k: None for k in env}
             out = None
             for step in self.steps[: self._tabm_producer + 1]:
@@ -376,14 +434,24 @@ class ExecutionPlan:
                     step.backend.unload(dev_params)
                 env[step.brick.out_port.name] = out
                 env_src[step.brick.out_port.name] = step.accel
-            if out.shape[0] != 1:
-                raise PlanError("TABM slots hold one request's embeds")
+            if out.shape[0] != len(feats):
+                raise PlanError(f"projector returned batch {out.shape[0]} "
+                                f"for a {len(feats)}-request microbatch")
+            if out.shape[1] != slab:
+                # the committed per-slot lengths are the INPUT token
+                # counts — valid only while the upstream bricks are
+                # token-count-preserving; a resampling projector must
+                # fail loudly here, not stage misaligned views
+                raise PlanError(
+                    f"upstream bricks changed the token count "
+                    f"({slab} -> {out.shape[1]}); produce_many requires "
+                    f"token-count-preserving staging bricks")
             v = out if self._tabm_transfer is None else self._tabm_transfer(out)
-            ring.commit_write(slot, v[0])
+            ring.commit_many(slots, v, lengths)
         except Exception:
-            ring.abort_write(slot)
+            ring.abort_many(slots)
             raise
-        return slot
+        return slots
 
     def consume(self, *, slot_class: Optional[str] = None,
                 block: bool = False, timeout: Optional[float] = None):

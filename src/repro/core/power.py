@@ -78,6 +78,16 @@ class Knobs:
     # large classes entirely (scale 0).  Restored to 1.0 when charge
     # recovers — mirrors backend_demotion.
     class_depth_scale: float = 1.0
+    # batched-staging hook: how many same-class requests the engine may
+    # hand a class's producer thread as ONE microbatch (one batched
+    # projector call + one strided slab commit).  Scaled down FIRST under
+    # THROTTLED — losing batch amortization costs energy-per-stage but
+    # keeps every class's staging depth, so the pipeline degrades to
+    # one-at-a-time staging before it starts shedding whole classes
+    # (class_depth_scale): batch is floored at 1 by alpha = 0.5 while the
+    # depth scale is still at 0.5.  CRITICAL stages strictly one request
+    # at a time.
+    max_stage_batch: int = 1
 
 
 @dataclass
@@ -86,6 +96,7 @@ class PowerPolicy:
     t_low: float = 0.20
     full_batch: int = 128
     full_fps: float = 30.0
+    full_stage_batch: int = 4          # staging microbatch at full charge
 
     def state(self, battery: float) -> PowerState:
         if battery > self.t_high:
@@ -103,9 +114,14 @@ class PowerPolicy:
         st = self.state(battery)
         if st is PowerState.UNCONSTRAINED:
             return Knobs(self.full_batch, 1.0, self.full_fps, 1.0, 1.0,
-                         cascade=False)
+                         cascade=False,
+                         max_stage_batch=self.full_stage_batch)
         if st is PowerState.THROTTLED:
             a = self.alpha(battery)
+            # batch shrinks BEFORE depth sheds: the stage microbatch
+            # scales by (2a - 1), hitting 1 at alpha 0.5 while
+            # class_depth_scale (= a) is still 0.5 — amortization is the
+            # cheapest thing to give up, whole classes the last
             return Knobs(max(1, int(self.full_batch * a)),
                          admission_rate=a,
                          frame_rate_hz=max(1.0, self.full_fps * a),
@@ -113,10 +129,13 @@ class PowerPolicy:
                          submesh_width=max(0.25, a),
                          cascade=False,
                          backend_demotion="host" if a < 0.5 else None,
-                         class_depth_scale=a)
+                         class_depth_scale=a,
+                         max_stage_batch=max(1, int(
+                             self.full_stage_batch * max(0.0, 2 * a - 1))))
         return Knobs(1, admission_rate=0.0, frame_rate_hz=0.0,
                      mem_clock_scale=0.25, submesh_width=0.25, cascade=True,
-                     backend_demotion="host", class_depth_scale=0.0)
+                     backend_demotion="host", class_depth_scale=0.0,
+                     max_stage_batch=1)
 
 
 @dataclass

@@ -35,28 +35,20 @@ import numpy as np
 from repro.analysis.energy import (EDGE_CPU, EDGE_GPU, EDGE_NPU,
                                    EnergyProfile, TPU_V5E, step_energy,
                                    step_time)
+from repro.core.backends import bit_efficiency, substrate_backend
 from repro.core.bricks import Brick, BrickGraph
-
-_BIT_EFFICIENCY = {
-    # relative matmul throughput vs the unit's peak at its preferred width.
-    # NPU fp16 at 0.6: the RKNN static-graph driver keeps fp16 encoders
-    # "substantially faster on the NPU" (paper §NPU) even though its native
-    # width is int8 — the paper's Sec. 4 observation that NPUs consistently
-    # win encoder inference must emerge from the cost model.
-    "rk-npu": {"q8f16": 1.0, "q4f16": 1.0, "q2f16": 1.0, "fp16": 0.6,
-               "bf16": 0.6},
-    "rk-gpu": {"q8f16": 0.9, "q4f16": 0.9, "q2f16": 0.9, "fp16": 1.0,
-               "bf16": 1.0},
-    "rk-cpu": {"q8f16": 0.8, "q4f16": 0.6, "q2f16": 0.5, "fp16": 0.3,
-               "bf16": 0.3},
-    "tpu-v5e": {"q8f16": 1.0, "q4f16": 1.0, "q2f16": 1.0, "fp16": 1.0,
-                "bf16": 1.0},
-}
 
 
 @dataclass(frozen=True)
 class Accelerator:
-    """A compute unit the scheduler can place a brick on."""
+    """A compute unit the scheduler can place a brick on.
+
+    Both the cost model (:meth:`throughput_scale`) and backend resolution
+    (:meth:`backend_name`) read the shared substrate table in
+    ``core/backends.py`` — one row per energy profile ties the unit's
+    per-bit-width throughput to the backend (and thus kernel mode) it
+    lowers through, so the scheduler can never price a unit the lowering
+    contradicts."""
 
     name: str
     profile: EnergyProfile
@@ -65,34 +57,38 @@ class Accelerator:
     mesh: Optional[object] = None      # submesh (pod mode)
     width: float = 1.0                 # fraction of a full unit
     backend: Optional[str] = None      # lowering substrate (core/backends
-                                       # registry name); None = inferred
+                                       # registry name); None = from the
+                                       # substrate table / inferred
 
     def throughput_scale(self, quant_label: str) -> float:
-        table = _BIT_EFFICIENCY.get(self.profile.name, {})
-        return table.get(quant_label, 1.0) * self.width
+        return bit_efficiency(self.profile.name, quant_label) * self.width
 
     def backend_name(self) -> str:
         """The backend this accelerator lowers bricks through: its
-        explicit profile field, else submesh when it carries a mesh, else
+        explicit profile field, else the shared substrate table row of
+        its energy profile, else submesh when it carries a mesh, else
         host (the paper's edge units are emulated on a pinned CPU
         thread — see core/backends.py)."""
         if self.backend:
             return self.backend
+        sub = substrate_backend(self.profile.name)
+        if sub is not None and not (sub == "submesh" and self.mesh is None):
+            return sub
         return "submesh" if self.mesh is not None else "host"
 
 
 def edge_accelerators() -> List[Accelerator]:
     """The paper's RK3566: NPU (static, low-bit), Mali GPU, Cortex CPU.
 
-    The NPU and CPU lower through the thread-pinned HostBackend (the
+    Backends come from the shared substrate table (core/backends.py): the
+    NPU and CPU lower through the thread-pinned HostBackend (the
     container has no such silicon; host threads emulate it, reference
     kernels only); the GPU lowers through the DeviceBackend (committed
     default-device streams)."""
     return [
-        Accelerator("npu", EDGE_NPU, static_only=True, dynamic_ok=False,
-                    backend="host"),
-        Accelerator("gpu", EDGE_GPU, backend="device"),
-        Accelerator("cpu", EDGE_CPU, backend="host"),
+        Accelerator("npu", EDGE_NPU, static_only=True, dynamic_ok=False),
+        Accelerator("gpu", EDGE_GPU),
+        Accelerator("cpu", EDGE_CPU),
     ]
 
 
@@ -118,10 +114,9 @@ def make_virtual_accelerators(mesh, fractions=(0.25, 0.75)
         hbm_bw=TPU_V5E.hbm_bw * f)
     return [
         Accelerator("enc-submesh", scale(cut / n), static_only=True,
-                    dynamic_ok=False, mesh=enc_mesh, width=cut / n,
-                    backend="submesh"),
+                    dynamic_ok=False, mesh=enc_mesh, width=cut / n),
         Accelerator("dec-submesh", scale((n - cut) / n), mesh=dec_mesh,
-                    width=(n - cut) / n, backend="submesh"),
+                    width=(n - cut) / n),
     ]
 
 
@@ -137,11 +132,20 @@ class BrickCost:
 
 
 def brick_cost(brick: Brick, acc: Accelerator, n_tokens: int,
-               mem_clock_scale: float = 1.0) -> BrickCost:
-    """Roofline latency + modeled energy of one brick on one unit."""
+               mem_clock_scale: float = 1.0, batch: int = 1) -> BrickCost:
+    """Roofline latency + modeled energy of ONE call over a microbatch of
+    ``batch`` requests (``n_tokens`` each) on one unit.
+
+    Batch-awareness is the staging pipeline's amortization: compute
+    scales with the microbatch (``batch * n_tokens`` tokens) but the
+    brick's weight traffic is charged ONCE per call — ``batch``
+    independent calls would pay the weight stream ``batch`` times, so
+    for memory-bound bricks (exactly the projector/prefill side the TABM
+    slab batches) ``brick_cost(..., batch=K).latency_s`` is well below
+    ``K * brick_cost(...).latency_s``."""
     if not brick.static_shape and acc.static_only:
         return BrickCost(float("inf"), float("inf"), feasible=False)
-    flops = brick.flops_per_token * n_tokens
+    flops = brick.flops_per_token * n_tokens * max(1, batch)
     wbytes = max(brick.param_bytes, 1)
     scale = acc.throughput_scale(brick.quant_label)
     p = acc.profile
@@ -192,16 +196,21 @@ def edge_bytes(graph: BrickGraph, n_tokens: int) -> int:
 
 
 def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
-             objective: str = "latency", mem_clock_scale: float = 1.0
-             ) -> Placement:
+             objective: str = "latency", mem_clock_scale: float = 1.0,
+             batch: int = 1) -> Placement:
     """Exact DP over the brick chain.
 
-    dp[i][a] = best objective of bricks[0..i] with brick i on accel a."""
+    dp[i][a] = best objective of bricks[0..i] with brick i on accel a.
+    ``batch`` prices every brick (and edge) for a microbatch of that many
+    requests — the staging pipeline's unit of work — so a placement can
+    be optimized for the batched regime, where weight traffic amortizes
+    (``brick_cost``) and the latency/energy balance between units shifts
+    toward the compute-bound ones."""
     bricks = graph.bricks
     nA = len(accels)
-    costs = [[brick_cost(b, a, n_tokens, mem_clock_scale) for a in accels]
-             for b in bricks]
-    xfer = edge_bytes(graph, n_tokens)
+    costs = [[brick_cost(b, a, n_tokens, mem_clock_scale, batch=batch)
+              for a in accels] for b in bricks]
+    xfer = edge_bytes(graph, n_tokens) * max(1, batch)
 
     def metric(c: BrickCost, t_extra: float, e_extra: float) -> float:
         if objective == "energy":
@@ -289,7 +298,9 @@ def staging_budget(ring, in_flight: int, max_ahead: Optional[int] = None
 
 
 def class_staging_budgets(pool, in_flight: Dict[str, int],
-                          depth_scale: float = 1.0) -> Dict[str, int]:
+                          depth_scale: float = 1.0,
+                          stage_batch: Optional[int] = None
+                          ) -> Dict[str, int]:
     """Per-class admission budgets over a class-partitioned TABM pool.
 
     ``staging_budget`` grown into a table: the pool's
@@ -301,14 +312,26 @@ def class_staging_budgets(pool, in_flight: Dict[str, int],
     ``in_flight``: per-class hand-over counts from the engine's staging
     worker.  A class whose ring has not materialized yet (lazy pool:
     no request of that class has ever staged) has zero staged-ahead
-    depth by definition."""
+    depth by definition.
+
+    ``stage_batch`` makes the charge *microbatch-aware*: the engine hands
+    each class's round of requests to its producer thread as ONE
+    microbatch (one strided slab commit, one batched projector call), so
+    a round's budget is capped at one microbatch — the class is charged a
+    microbatch per round, not ``K`` independent admissions, and the
+    hand-off can never outrun what one ``produce_many`` commits.
+    ``Knobs.max_stage_batch`` scales it down under battery throttling
+    (batch shrinks before depth sheds)."""
     budgets = {}
     for name, (ring, cap) in pool.admission_table(depth_scale).items():
         flight = in_flight.get(name, 0)
         if ring is None:                       # unmaterialized: EMPTY ring
-            budgets[name] = max(0, cap - flight)
+            budget = max(0, cap - flight)
         else:
-            budgets[name] = staging_budget(ring, flight, max_ahead=cap)
+            budget = staging_budget(ring, flight, max_ahead=cap)
+        if stage_batch is not None and stage_batch > 0:
+            budget = min(budget, stage_batch)
+        budgets[name] = budget
     return budgets
 
 

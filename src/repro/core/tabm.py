@@ -29,6 +29,11 @@ Concurrency model (the async producer/consumer engine, serving/engine.py):
 * ``acquire_write(block=True)`` stalls the *producer thread* on a FULL
   ring — the paper's backpressure signal — instead of making the engine's
   admission loop poll; ``close()`` wakes every blocked thread for shutdown;
+* ``acquire_write_many`` / ``commit_many`` / ``abort_many`` are the
+  strided-slab forms: K FIFO-contiguous slots acquired all-or-nothing,
+  written by ONE donated scatter (per-slot lengths and ready events
+  preserved), aborted as a whole run on failure — the batched staging
+  pipeline's ring contract (docs/TABM.md § Strided slab commits);
 * :meth:`wait_ready` is the per-slot ready wait: the consumer blocks on
   exactly the slot it is waiting for (engine prefill binds slot k without
   scanning the ring), and is woken — with a False result — if that slot's
@@ -105,6 +110,22 @@ def _write_slot(pool: jnp.ndarray, slot: jnp.ndarray,
                                         (slot, 0, 0))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slab(pool: jnp.ndarray, slots: jnp.ndarray,
+                embeds: jnp.ndarray, lengths: jnp.ndarray) -> jnp.ndarray:
+    """pool (n_slots, max_tokens, d) <- embeds (K, T, d) at rows `slots` —
+    ONE strided scatter covering the whole microbatch (K slots written in
+    a single donated device op, the batched form of :func:`_write_slot`).
+    Each row's tail beyond its true length is zeroed, preserving the
+    padded-tail-is-zero invariant of the K=1 write."""
+    k, t, d = embeds.shape
+    slab = jnp.zeros((k, pool.shape[1], d), pool.dtype)
+    slab = jax.lax.dynamic_update_slice(slab, embeds.astype(pool.dtype),
+                                        (0, 0, 0))
+    mask = jnp.arange(pool.shape[1])[None, :, None] < lengths[:, None, None]
+    return pool.at[slots].set(jnp.where(mask, slab, 0))
+
+
 @jax.jit
 def _read_slot(pool: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
     """Bind a slot as consumer input.  Under jit this dynamic-slice fuses
@@ -142,7 +163,8 @@ class RingBuffer:
         self._read_ptr = 0
         self._cond = threading.Condition()
         self._closed = False
-        self.stats = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0}
+        self.stats = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0,
+                      "slab_commits": 0}
 
     # -- state machine (always called with self._cond held) -----------------
     def _transition(self, slot: int, to: int):
@@ -217,6 +239,119 @@ class RingBuffer:
             self.tokens[slot] = 0
             self._write_ptr = slot
             self.stats["aborts"] += 1
+            self._cond.notify_all()
+
+    # -- strided multi-slot producer ops (the batched staging pipeline) -----
+    def _head_run_free(self, k: int) -> bool:
+        """True when the k slots from the write pointer are all EMPTY.
+        FIFO invariant: EMPTY slots form one contiguous run starting at
+        the write pointer, so this is *the* k-slot availability check."""
+        return all(self.states[(self._write_ptr + i) % self.n_slots] == EMPTY
+                   for i in range(k))
+
+    def acquire_write_many(self, k: int, block: bool = False,
+                           timeout: Optional[float] = None
+                           ) -> Optional[List[int]]:
+        """Producer asks for k FIFO-contiguous slots at once — the write
+        side of one strided slab commit.  All-or-nothing: either the whole
+        run from the write pointer is EMPTY (each slot moves to STAGING,
+        in order) or None is returned (ring cannot hold the microbatch
+        yet — the caller stalls, exactly like the K=1 backpressure).
+
+        ``block=True`` parks the calling thread until k slots free from
+        the head (or timeout / :meth:`close`).  ``k`` may not exceed the
+        ring capacity — a microbatch that can never fit is a caller bug,
+        not backpressure."""
+        if k < 1 or k > self.n_slots:
+            raise TABMError(f"cannot acquire {k} slots from a "
+                            f"{self.n_slots}-slot ring")
+        with self._cond:
+            if not self._head_run_free(k):
+                self.stats["stalls"] += 1
+            if block:
+                ok = self._cond.wait_for(
+                    lambda: self._closed or self._head_run_free(k), timeout)
+                if not ok or self._closed:
+                    return None
+            if not self._head_run_free(k):
+                return None
+            slots = []
+            for _ in range(k):
+                slot = self._write_ptr
+                self._transition(slot, STAGING)
+                self._write_ptr = (slot + 1) % self.n_slots
+                slots.append(slot)
+            return slots
+
+    def _check_slab_run(self, slots: List[int], op: str):
+        """Slab ops cover one contiguous FIFO run of STAGING slots."""
+        if not slots:
+            raise TABMError(f"{op} with no slots")
+        for a, b in zip(slots, slots[1:]):
+            if (a + 1) % self.n_slots != b:
+                raise TABMError(f"{op} slots {slots} are not one "
+                                f"contiguous FIFO run")
+        for slot in slots:
+            if self.states[slot] != STAGING:
+                raise TABMError(f"{op} on slot {slot} in "
+                                f"{_STATE_NAMES[self.states[slot]]}")
+
+    def commit_many(self, slots: List[int], embeds: jnp.ndarray,
+                    lengths: Optional[List[int]] = None):
+        """One strided slab write covering the whole microbatch: embeds
+        (K, T, d) lands in the K acquired slots as a single donated
+        scatter (:func:`_write_slab`), then every slot flips to READY —
+        each bump of its generation wakes that slot's :meth:`wait_ready`
+        waiters individually, so per-slot ready semantics are identical
+        to K sequential commits.  ``lengths`` carries each request's true
+        token count (default: T for all)."""
+        with self._cond:
+            k = len(slots)
+            if embeds.ndim != 3 or embeds.shape[0] != k:
+                raise TABMError(f"slab embeds {embeds.shape} do not cover "
+                                f"{k} slots")
+            lengths = [int(embeds.shape[1])] * k if lengths is None \
+                else [int(n) for n in lengths]
+            if len(lengths) != k:
+                raise TABMError(f"{len(lengths)} lengths for {k} slots")
+            self._check_slab_run(slots, "commit_many")
+            if embeds.shape[1] > self.max_tokens:
+                raise TABMError(f"{embeds.shape[1]} tokens > slot capacity "
+                                f"{self.max_tokens}")
+            for n in lengths:
+                if n > embeds.shape[1]:
+                    raise TABMError(f"length {n} > slab width "
+                                    f"{embeds.shape[1]}")
+            # donation invalidates the old pool buffer — same lock
+            # discipline as commit_write
+            self.pool = _write_slab(self.pool,
+                                    jnp.asarray(slots, jnp.int32), embeds,
+                                    jnp.asarray(lengths, jnp.int32))
+            for slot, n in zip(slots, lengths):
+                self.tokens[slot] = n
+                self._transition(slot, READY)
+            self.stats["writes"] += k
+            if k > 1:
+                self.stats["slab_commits"] += 1
+            self._cond.notify_all()
+
+    def abort_many(self, slots: List[int]):
+        """Abort-all-on-failure for a slab acquisition: the whole run goes
+        back to EMPTY and the write pointer rewinds to its first slot.
+        Same FIFO invariant as :meth:`abort_write` — the run must be the
+        most recent acquisition, or a later commit could land ahead of
+        the read pointer and wedge the ring."""
+        with self._cond:
+            self._check_slab_run(slots, "abort_many")
+            if (slots[-1] + 1) % self.n_slots != self._write_ptr:
+                raise TABMError(
+                    f"abort_many out of order: slots {slots} are not the "
+                    f"most recent acquisition")
+            for slot in reversed(slots):
+                self._transition(slot, EMPTY)
+                self.tokens[slot] = 0
+            self._write_ptr = slots[0]
+            self.stats["aborts"] += len(slots)
             self._cond.notify_all()
 
     def acquire_read(self, block: bool = False,
@@ -446,6 +581,21 @@ class SlotClassPool:
                         ) -> RingBuffer:
         return self.ring(self.classify(n_tokens, n_images))
 
+    # -- strided multi-slot ops, per class ----------------------------------
+    def acquire_write_many(self, name: str, k: int, block: bool = False,
+                           timeout: Optional[float] = None
+                           ) -> Optional[List[int]]:
+        """k FIFO-contiguous slots of `name`'s class ring — the write side
+        of one same-class strided slab commit (see RingBuffer)."""
+        return self.ring(name).acquire_write_many(k, block, timeout)
+
+    def commit_many(self, name: str, slots: List[int], embeds: jnp.ndarray,
+                    lengths: Optional[List[int]] = None):
+        return self.ring(name).commit_many(slots, embeds, lengths)
+
+    def abort_many(self, name: str, slots: List[int]):
+        return self.ring(name).abort_many(slots)
+
     # -- admission (the per-class {slot_class: (ring, max_ahead)} table) ----
     def max_ahead(self, name: str) -> int:
         c = self.classes[name]
@@ -492,7 +642,8 @@ class SlotClassPool:
 
     @property
     def stats(self) -> "dict[str, int]":
-        agg = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0}
+        agg = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0,
+               "slab_commits": 0}
         for r in self._rings.values():
             for k in agg:
                 agg[k] += r.stats[k]

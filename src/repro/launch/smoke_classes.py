@@ -1,30 +1,34 @@
 """Mixed-class TABM engine smoke — part of the no-TPU gate (make check).
 
-Drives one high-resolution and one thumbnail request through a reduced
-``ServingEngine`` on placeholder devices, so the class-partitioned slot
-pool path (core/slot_classes + core/tabm.SlotClassPool) is exercised by
-CI: classification at submit, per-class staging threads, class-sized
-ring commits, per-class release/drain.  Exits non-zero on any violation.
+Default mode drives one high-resolution and one thumbnail request through
+a reduced ``ServingEngine`` on placeholder devices, so the
+class-partitioned slot pool path (core/slot_classes +
+core/tabm.SlotClassPool) is exercised by CI: classification at submit,
+per-class staging threads, class-sized ring commits, per-class
+release/drain.  Exits non-zero on any violation.
+
+``--stage-batch K`` (K > 1) runs the *batched staging* smoke instead:
+eight queued same-class requests through the microbatching pipeline, and
+asserts the acceptance evidence — at least one multi-request strided slab
+commit (``slab_commit`` trace event + ring ``slab_commits`` stat) and at
+least one batch>1 grouped prefill (``prefill_batch``), with greedy tokens
+identical to the synchronous one-by-one oracle.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        python -m repro.launch.smoke_classes
+        python -m repro.launch.smoke_classes [--stage-batch 4]
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 import numpy as np
 
 
-def main() -> int:
-    import jax
-    from repro.configs import get_config
+def _mixed_class_smoke(cfg, params) -> int:
     from repro.core.slot_classes import resolution_buckets
-    from repro.launch.steps import init_params
     from repro.serving.engine import Request, ServingEngine
 
-    cfg = get_config("llava-onevision-0.5b").reduced()
-    params = init_params(jax.random.PRNGKey(0), cfg)
     buckets = resolution_buckets(cfg)
     thumb_tokens, full_tokens = buckets[0], buckets[-1]
     rng = np.random.default_rng(0)
@@ -71,6 +75,76 @@ def main() -> int:
         print(f"tokens: hi={hi.out_tokens} thumb={thumb.out_tokens}")
     print("OK: mixed-class engine smoke passed")
     return 0
+
+
+def _batched_staging_smoke(cfg, params, stage_batch: int) -> int:
+    from repro.serving.engine import Request, ServingEngine
+
+    n_reqs = 8
+
+    def reqs():
+        rng = np.random.default_rng(1)         # same feats in both runs
+        return [Request(rid=i, tokens=np.arange(8) + 3, max_new_tokens=4,
+                        vision_feats=rng.standard_normal(
+                            (1, cfg.vision_tokens, cfg.vision_feat_dim)
+                        ).astype(np.float32) * 0.02)
+                for i in range(n_reqs)]
+
+    batch = reqs()
+    with ServingEngine(cfg, params, n_slots=4, max_len=128,
+                       stage_batch=stage_batch) as eng:
+        for r in batch:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == n_reqs and all(r.error is None for r in done)
+        classes = {r.slot_class for r in batch}
+        assert len(classes) == 1, f"expected one class, got {classes}"
+        events = [(e, k) for e, k, _ in eng.trace]
+        slabs = [k for e, k in events if e == "slab_commit"]
+        prefills = [k for e, k in events if e == "prefill_batch"]
+        ring = eng.tabm.ring(batch[0].slot_class)
+        assert slabs and max(slabs) > 1, (
+            f"no multi-request slab commit in the trace: {events}")
+        assert ring.stats["slab_commits"] >= 1, ring.stats
+        assert prefills and max(prefills) > 1, (
+            f"no batch>1 prefill call in the trace: {events}")
+        print(f"slab commits (K): {slabs}  grouped prefills (B): {prefills}")
+        print(f"ring stats: {ring.stats}")
+        batched_tokens = {r.rid: r.out_tokens for r in done}
+
+    # the one-by-one oracle: sync staging (K=1) + batch-1 prefill groups
+    oracle = reqs()
+    with ServingEngine(cfg, params, n_slots=4, max_len=128,
+                       async_staging=False, stage_batch=1) as eng:
+        eng.executor.policy.full_batch = 1     # one admission per step
+        for r in oracle:
+            eng.submit(r)
+        done = eng.run()
+        assert all(r.error is None for r in done)
+        oracle_tokens = {r.rid: r.out_tokens for r in done}
+    assert batched_tokens == oracle_tokens, (
+        f"batched staging changed greedy tokens:\n"
+        f"  batched: {batched_tokens}\n  oracle:  {oracle_tokens}")
+    print("OK: batched staging smoke passed (tokens == one-by-one oracle)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="class-partitioned TABM smoke")
+    ap.add_argument("--stage-batch", type=int, default=1,
+                    help="staging microbatch; >1 runs the batched-staging "
+                         "smoke (strided slab commit + grouped prefill)")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_config
+    from repro.launch.steps import init_params
+
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.stage_batch > 1:
+        return _batched_staging_smoke(cfg, params, args.stage_batch)
+    return _mixed_class_smoke(cfg, params)
 
 
 if __name__ == "__main__":

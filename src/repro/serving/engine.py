@@ -1,13 +1,23 @@
-"""Continuous-batching serving engine — a two-stage async pipeline over a
-class-partitioned TABM pool:
+"""Continuous-batching serving engine — a three-stage async pipeline over
+a class-partitioned TABM pool, batched at every stage:
 
     producer threads (StagingWorker,         consumer (step loop)
     one per slot class)                      ---------------------
     ------------------------------           plan.consume (per-slot,
-    vision encode -> projector ->            per-class ready wait) ->
-    plan.produce -> class ring commit        prefill -> batched decode
-    (blocks on class FULL = per-class
-    backpressure)
+    microbatch: vision encode +              per-class ready wait) ->
+    projector as ONE jit call ->             grouped batch-B prefill ->
+    plan.produce_many -> ONE strided         KVCache.insert_many (one
+    class-slab ring commit (blocks on        strided scatter) ->
+    class FULL = per-class backpressure)     batched decode
+
+Batching knobs: a class's staging microbatch is
+``min(ModelConfig.max_stage_batch, Knobs.max_stage_batch, ring
+capacity)`` — THROTTLED shrinks the batch before any class sheds depth —
+and ``_admit`` groups *consecutive* bucket-matched staged requests (same
+prompt bucket + same class/slab width) into one compiled batch-B prefill
+call.  Cross-class aging (``aging_steps``) reserves a KV slot for a
+request skipped too many admission rounds, so a thumbnail flood cannot
+starve a stalled hi-res head forever.
 
 The vision path is not reimplemented here: the engine compiles the
 BrickGraph into an :class:`repro.core.plan.ExecutionPlan` and drives the
@@ -110,6 +120,9 @@ class Request:
     tabm_slot: Optional[int] = None            # class-ring slot once staged
     slot_class: Optional[str] = None           # TABM class, set at submit
     stage_submitted: bool = False              # handed to the StagingWorker
+    aging: int = 0                             # admission rounds spent queued
+                                               # (cross-class KV reservation
+                                               # once >= engine.aging_steps)
     error: Optional[BaseException] = None      # staging/engine failure
     _tabm_gen: Optional[int] = None            # seqlock gen at consume
     _staged_ev: threading.Event = field(default_factory=threading.Event,
@@ -146,24 +159,32 @@ _STOP = object()
 
 class StagingWorker:
     """The pipeline's producer stage: one thread *per slot class*, each
-    draining its class's hand-off queue through ``plan.produce``.
+    draining its class's hand-off queue into **microbatches** through
+    ``plan.produce_many`` — one batched vision-encode+projector call and
+    one strided slab commit per drain, up to ``stage_batch(cls)`` requests
+    (the battery-scaled ``Knobs.max_stage_batch`` × the arch's
+    ``max_stage_batch``, clamped to the class ring's capacity).
 
     The worker owns the ring-write side of the TABM contract, per class:
-    a class thread blocks *inside* ``acquire_write`` on its own FULL ring
-    (so backpressure stalls exactly that class's producer — never the
-    decode loop, never another class's staging), aborts the slot if a
-    brick raises, and attaches any failure to the originating request
-    before flagging it staged.  ``shutdown`` closes the pool first —
-    waking every stalled class thread — then joins them all; requests
-    still queued at that point are cancelled with :class:`EngineClosed`.
+    a class thread blocks *inside* ``acquire_write_many`` on its own FULL
+    ring (so backpressure stalls exactly that class's producer — never
+    the decode loop, never another class's staging), aborts the whole
+    slab if a brick raises — then **isolates** the failure by restaging
+    the microbatch one request at a time, so one request's bad input
+    fails only its owner, never its batchmates — and attaches any
+    failure to the originating request before flagging it staged.
+    ``shutdown`` closes the pool first — waking every stalled class
+    thread — then joins them all; requests still queued at that point
+    are cancelled with :class:`EngineClosed`.
 
     ``classes=(None,)`` (the default) degenerates to the single-ring,
-    single-thread pipeline."""
+    single-thread pipeline; ``stage_batch=None`` to K=1 staging."""
 
-    def __init__(self, plan, trace, classes=(None,)):
+    def __init__(self, plan, trace, classes=(None,), stage_batch=None):
         self.plan = plan
         self._trace = trace                     # (event, rid) -> None
         self._classes = tuple(classes)
+        self._stage_batch = stage_batch         # (slot_class) -> int | None
         self._qs: Dict[Optional[str], "queue.Queue"] = {
             c: queue.Queue() for c in self._classes}
         self._stop = threading.Event()
@@ -190,42 +211,108 @@ class StagingWorker:
             self._threads[slot_class] = t
             t.start()
 
-    def submit(self, req: Request):
+    def submit(self, reqs):
+        """Hand one request — or one list of same-class requests, the
+        admission round's microbatch — to the owning class thread."""
+        batch = reqs if isinstance(reqs, list) else [reqs]
+        if not batch:
+            return
         if self._stop.is_set():
             raise EngineClosed("staging worker already shut down")
-        cls = req.slot_class
+        cls = batch[0].slot_class
+        if any(r.slot_class != cls for r in batch):
+            raise EngineClosed("a staging microbatch must be one class")
         if cls not in self._qs:
             raise EngineClosed(f"no staging queue for slot class {cls!r}")
         self.start(cls)
         with self._lock:
-            self._in_flight[cls] += 1
-        self._qs[cls].put(req)
+            self._in_flight[cls] += len(batch)
+        self._qs[cls].put(batch)
+
+    def _cap(self, slot_class: Optional[str]) -> int:
+        if self._stage_batch is None:
+            return 1
+        return max(1, int(self._stage_batch(slot_class)))
 
     def _run(self, slot_class: Optional[str]):
         q = self._qs[slot_class]
+        pending: "deque[Request]" = deque()
+        stop_seen = False
         while True:
-            item = q.get()
-            if item is _STOP:
+            if not pending:
+                item = q.get()
+                if item is _STOP:
+                    break
+                pending.extend(item if isinstance(item, list) else [item])
+            while True:                        # opportunistic drain, no block
+                try:
+                    nxt = q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is _STOP:
+                    stop_seen = True
+                    break
+                pending.extend(nxt if isinstance(nxt, list) else [nxt])
+            cap = self._cap(slot_class)        # battery-scaled, per drain
+            batch = [pending.popleft()
+                     for _ in range(min(cap, len(pending)))]
+            self._stage_batch_now(slot_class, batch)
+            if stop_seen and not pending:
                 break
-            req: Request = item
+
+    def _stage_batch_now(self, slot_class: Optional[str],
+                         batch: List[Request]):
+        """One microbatch through produce_many: K FIFO slots, one batched
+        projector call, one strided slab commit; per-request commit
+        events so consumers see the same per-slot signals as K=1."""
+        try:
+            if self._stop.is_set():
+                raise EngineClosed("engine shut down before staging")
+            for req in batch:
+                self._trace("stage_start", req.rid)
+            slots = self.plan.produce_many(
+                [{"vision_feats": jnp.asarray(r.vision_feats)}
+                 for r in batch],
+                slot_class=slot_class, block=True)
+            if slots is None:                  # ring closed mid-stall
+                raise EngineClosed("ring closed while staging stalled")
+            for req, slot in zip(batch, slots):
+                req.tabm_slot = slot
+                self._trace("stage_commit", req.rid)
+            if len(batch) > 1:                 # the acceptance evidence
+                self._trace("slab_commit", len(batch))
+        except BaseException as e:
+            if len(batch) > 1 and not isinstance(e, EngineClosed):
+                # the slab was aborted whole (abort-all-on-failure);
+                # isolate the bad request by restaging one at a time so
+                # the error lands only on its owner
+                self._restage_isolated(slot_class, batch)
+            else:
+                for req in batch:              # propagate to the request(s)
+                    req.error = e
+                    self._trace("stage_error", req.rid)
+        finally:
+            with self._lock:
+                self._in_flight[slot_class] -= len(batch)
+            for req in batch:
+                req._staged_ev.set()            # marks staged
+
+    def _restage_isolated(self, slot_class: Optional[str],
+                          batch: List[Request]):
+        for req in batch:
             try:
                 if self._stop.is_set():
                     raise EngineClosed("engine shut down before staging")
-                self._trace("stage_start", req.rid)
                 slot = self.plan.produce(
                     {"vision_feats": jnp.asarray(req.vision_feats)},
                     slot_class=slot_class, block=True)
-                if slot is None:                # ring closed mid-stall
+                if slot is None:
                     raise EngineClosed("ring closed while staging stalled")
                 req.tabm_slot = slot
                 self._trace("stage_commit", req.rid)
-            except BaseException as e:          # propagate to the request
+            except BaseException as e:
                 req.error = e
                 self._trace("stage_error", req.rid)
-            finally:
-                with self._lock:
-                    self._in_flight[slot_class] -= 1
-                req._staged_ev.set()            # marks staged
 
     def shutdown(self, timeout: float = 10.0) -> bool:
         """Stop accepting, cancel in-flight staging, join every class
@@ -252,13 +339,22 @@ class ServingEngine:
                  max_len: int = 2048, executor: Optional[
                      BatteryAwareExecutor] = None,
                  rng_seed: int = 0, async_staging: bool = True,
-                 placement=None, accels=None, backend=None):
+                 placement=None, accels=None, backend=None,
+                 stage_batch: Optional[int] = None,
+                 aging_steps: int = 32):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
         self.slots = SlotCache(cfg, n_slots, max_len)
         self.max_len = max_len
         self.executor = executor or BatteryAwareExecutor(PMU())
+        # staging microbatch override; None = min(arch max_stage_batch,
+        # battery Knobs.max_stage_batch), always clamped to ring capacity
+        self._stage_batch_override = stage_batch
+        # cross-class aging: a vision request skipped at admission this
+        # many rounds reserves a KV slot against newer other-class
+        # requests (anti-starvation under thumbnail floods)
+        self.aging_steps = aging_steps
         self.queue: List[Request] = []
         self.live: Dict[int, Request] = {}      # slot -> request
         self.done: List[Request] = []
@@ -303,8 +399,14 @@ class ServingEngine:
                 if eng is not None:
                     eng._trace_event(event, rid)
 
-            self._worker = StagingWorker(self.plan, _trace,
-                                         classes=tuple(self.tabm.names()))
+            def _stage_cap(slot_class):
+                eng = wself()
+                return 1 if eng is None else eng._class_stage_batch(
+                    slot_class)
+
+            self._worker = StagingWorker(
+                self.plan, _trace, classes=tuple(self.tabm.names()),
+                stage_batch=_stage_cap)
             self._finalizer = weakref.finalize(
                 self, StagingWorker.shutdown, self._worker, 1.0)
         self._closed = False
@@ -457,28 +559,62 @@ class ServingEngine:
             req._staged_ev.set()           # marks staged
             self._trace_event("stage_commit", req.rid)
 
-    def _feed_staging(self, depth_scale: float = 1.0):
-        """Admission's producer hand-off, charged per class: each request
-        is handed to its class's staging thread only while that class's
-        staged-ahead depth budget (core/scheduler.class_staging_budgets)
-        allows.  The cap is each class's own ``max_ahead`` — by default
-        the class ring's capacity, ``staging_budget``'s own default, so
-        the hand-off queue is bounded by the ring and shutdown
-        cancellation stays cheap — scaled by the battery knob
-        ``depth_scale`` (high-resolution classes shrink first).  A class
-        with no budget (FULL, throttled, or saturated hand-off) is simply
-        skipped; later requests of other classes still hand off — the
-        class isolation the single FIFO cap could not give."""
+    def _class_stage_batch(self, slot_class: Optional[str]) -> int:
+        """The effective staging microbatch for one class *right now*:
+        the engine override, else min(arch ``max_stage_batch``, battery
+        ``Knobs.max_stage_batch``) — THROTTLED shrinks the batch before
+        any depth sheds — clamped to the class ring's capacity (a slab
+        larger than the ring could never commit)."""
+        if self._stage_batch_override is not None:
+            cap = self._stage_batch_override
+        else:
+            _, knobs, _ = self.executor.current()
+            cap = min(self.cfg.max_stage_batch, knobs.max_stage_batch)
+        if self.tabm is not None and slot_class is not None:
+            cap = min(cap, self.tabm.classes[slot_class].n_slots)
+        return max(1, cap)
+
+    def _feed_staging(self, knobs=None):
+        """Admission's producer hand-off, charged per class *and per
+        microbatch*: each round, every class collects its eligible queued
+        requests — up to its staged-ahead depth budget
+        (core/scheduler.class_staging_budgets), itself capped at one
+        staging microbatch — and hands them to its class thread as ONE
+        list, which the worker commits as one strided slab
+        (``produce_many``).  The depth cap is each class's own
+        ``max_ahead`` — by default the class ring's capacity, so the
+        hand-off queue is bounded by the ring and shutdown cancellation
+        stays cheap — scaled by the battery knob ``class_depth_scale``
+        (high-resolution classes shrink first; the microbatch shrinks
+        before that).  A class with no budget (FULL, throttled, or
+        saturated hand-off) is simply skipped; later requests of other
+        classes still hand off — the class isolation the single FIFO cap
+        could not give."""
+        if knobs is None:
+            _, knobs, _ = self.executor.current()
+        # the battery knobs are constant within one admission round: read
+        # them once (the caller's copy), clamp per class against the
+        # static ring capacities — never re-poll the executor per request
+        if self._stage_batch_override is not None:
+            global_cap = max(1, self._stage_batch_override)
+        else:
+            global_cap = max(1, min(self.cfg.max_stage_batch,
+                                    knobs.max_stage_batch))
         budgets = class_staging_budgets(
-            self.tabm, self._worker.in_flight_by_class(), depth_scale)
+            self.tabm, self._worker.in_flight_by_class(),
+            knobs.class_depth_scale, stage_batch=global_cap)
+        groups: Dict[str, List[Request]] = {}
         for req in self.queue:
             if req.staged or req.stage_submitted or req.vision_feats is None:
                 continue
-            if budgets.get(req.slot_class, 0) <= 0:
+            # budgets are already microbatch- and ring-capacity-capped
+            if len(groups.get(req.slot_class, ())) >= \
+                    budgets.get(req.slot_class, 0):
                 continue                       # class exhausted; others go on
-            budgets[req.slot_class] -= 1
             req.stage_submitted = True
-            self._worker.submit(req)
+            groups.setdefault(req.slot_class, []).append(req)
+        for batch in groups.values():          # one hand-off = one microbatch
+            self._worker.submit(batch)
 
     def _ring_of(self, req: Request):
         """The class ring holding this request's staged embeds."""
@@ -539,6 +675,124 @@ class ServingEngine:
         self._demoted_to = target
         self._trace_event(f"relower:{target or 'restore'}", -1)
 
+    def _group_key(self, req: Request):
+        """Bucket-match key for grouped prefill: requests sharing a
+        prompt bucket and an identical vision spec (class + staged token
+        count — one slab shape, one compiled prefill signature) may
+        prefill as one batch.  Text-only requests group by bucket."""
+        bucket = bucket_length(len(req.tokens), buckets=self._buckets())
+        vis = None
+        if self.tabm is not None and req.vision_feats is not None:
+            vis = (req.slot_class,
+                   int(np.asarray(req.vision_feats).shape[1]))
+        return (bucket, vis)
+
+    def _admissible(self, req: Request) -> bool:
+        return not (self.tabm is not None and req.vision_feats is not None
+                    and not req.staged)
+
+    def _collect_group(self, i: int, max_n: int) -> List[Request]:
+        """Pop the maximal run of *consecutive* bucket-matched admissible
+        requests starting at queue position i (consecutive, so per-class
+        ring-FIFO consume order and overall admission FIFO both hold)."""
+        key = self._group_key(self.queue[i])
+        j = i + 1
+        while j < len(self.queue) and j - i < max_n:
+            nxt = self.queue[j]
+            if (nxt.error is not None or not self._admissible(nxt)
+                    or self._group_key(nxt) != key):
+                break
+            j += 1
+        group = self.queue[i:j]
+        del self.queue[i:j]
+        return group
+
+    def _admit_group(self, group: List[Request]):
+        """One batch-B prefill call for a bucket-matched group: bind each
+        request's staged slab view (class-FIFO consume order == group
+        order), run the compiled bucket prefill once over the stacked
+        batch, then write all B prefilled caches into B KV slots in a
+        single strided ``insert_many``.  On any failure the whole group
+        fails: every KV slot and every consumed ring slot is released —
+        nothing leaks, the engine keeps serving.  Unlike the staging
+        side there is no one-by-one retry: the ring slots were already
+        consumed, so releasing them destroys the staged vision (a retry
+        would need a full restage), and a prefill-time failure is
+        batch-level in practice — the per-request inputs (bucketed int
+        tokens, validated slab views) cannot individually fail a
+        compiled call."""
+        taken: List[int] = []
+        try:
+            for _ in group:
+                slot = self.slots.take_slot()
+                if slot is None:               # sized by the caller; defensive
+                    raise RuntimeError("KV slots exhausted mid-group")
+                taken.append(slot)
+            B = len(group)
+            bucket = self._group_key(group[0])[0]
+            padded = np.zeros((B, bucket), np.int32)
+            lens = np.zeros((B,), np.int32)
+            for b, req in enumerate(group):
+                prompt = np.asarray(req.tokens, np.int32)
+                padded[b, :len(prompt)] = prompt   # right-pad into the bucket
+                lens[b] = len(prompt)
+            views = [v for v in (self._bind_vision(r) for r in group)
+                     if v is not None]
+            vision = jnp.concatenate(views, axis=0) if views else None
+            logits, cache = self._prefill_fn(bucket)(
+                self.params, jnp.asarray(padded), vision,
+                jnp.asarray(lens))
+            for req in group:                  # prefill consumed the views
+                if req.tabm_slot is not None:
+                    if not self._ring_of(req).view_valid(req.tabm_slot,
+                                                         req._tabm_gen):
+                        raise TABMError(
+                            f"slot {req.tabm_slot} recycled under request "
+                            f"{req.rid}'s zero-copy view (seqlock "
+                            f"violation)")
+                    self.plan.release(req.tabm_slot,
+                                      slot_class=req.slot_class)
+        except Exception as e:
+            # neither a KV slot nor a ring slot may leak, and every
+            # request must still be accounted for (e.g. the ring closed
+            # under a concurrent shutdown mid-admission): fail the group,
+            # keep serving
+            for req in group:
+                if req.tabm_slot is None:
+                    pass
+                elif (req._tabm_gen is not None
+                        and self._ring_of(req).view_valid(req.tabm_slot,
+                                                          req._tabm_gen)):
+                    self.plan.release(req.tabm_slot,   # consumed, unreleased
+                                      slot_class=req.slot_class)
+                elif req._tabm_gen is None:
+                    # staged but never consumed (a bind earlier in the
+                    # group raised): its committed slot is the class
+                    # ring's oldest READY — pull it out and release, or
+                    # an ownerless slot would wedge every later same-
+                    # class consume (per-class FIFO).  A closed ring
+                    # (consume -> None) is drained at shutdown instead.
+                    got = self.plan.consume(slot_class=req.slot_class)
+                    if got is not None and got[0] == req.tabm_slot:
+                        self.plan.release(got[0], slot_class=req.slot_class)
+                req.error = e
+                self._fail(req)
+            for slot in taken:
+                self.slots.release(slot)
+            return
+        self.slots.insert_many(taken, cache, [int(n) for n in lens])
+        for b, (slot, req) in enumerate(zip(taken, group)):
+            req.slot = slot
+            self.live[slot] = req
+            self.stats.prefills += 1
+            self._trace_event("prefill", req.rid)
+            # first token from this request's row of the prefill logits
+            tok = self._pick(logits[b:b + 1], req)
+            req.out_tokens.append(int(tok[0]))
+            req.first_token_t = time.time()
+        if len(group) > 1:                     # the acceptance evidence
+            self._trace_event("prefill_batch", len(group))
+
     def _admit(self):
         state, knobs, _ = self.executor.current()
         self._apply_backend_knobs(knobs)
@@ -547,8 +801,9 @@ class ServingEngine:
         if power_ok:
             if self._worker is not None:
                 # producer threads run ahead, charged per class and scaled
-                # by the battery knob (high-res classes shed depth first)
-                self._feed_staging(knobs.class_depth_scale)
+                # by the battery knob (batch shrinks first, then high-res
+                # classes shed depth)
+                self._feed_staging(knobs)
             else:
                 # sync fallback: inline, same per-class battery gating —
                 # the equivalence oracle throttles like the async path
@@ -556,15 +811,46 @@ class ServingEngine:
         budget = min(len(self.slots.free), knobs.max_batch)
         if not power_ok:
             budget = 0
+        # cross-class aging: classes of requests that have waited out
+        # aging_steps admission rounds while skipped (class stalled or
+        # slow); each holds one KV-slot reservation that newer requests
+        # of OTHER classes may not take — a thumbnail flood can no longer
+        # absorb every freed slot while a hi-res head waits.  A class the
+        # battery policy deliberately shed (depth gated to zero) earns no
+        # reservation: fairness must not undo the power policy's choice
+        # to keep cheap classes flowing.
+        shed: set = set()
+        if self.tabm is not None:
+            shed = {name for name, (_, cap) in self.tabm.admission_table(
+                knobs.class_depth_scale).items() if cap <= 0}
+        # ONE reservation per aged class, not per aged request: a class
+        # admits FIFO, so one held slot guarantees its aged head makes
+        # progress, while a deeply-backlogged class can never reserve the
+        # whole KV pool away from everyone else
+        aged_classes: set = set()
+        # classes with a request skipped earlier in THIS pass: later
+        # classmates must be skipped too, even if their staged flag reads
+        # True by now — admission samples `staged` at different times per
+        # request, and admitting a younger classmate whose older sibling
+        # was mid-staging a moment ago would consume the sibling's ring
+        # slot (per-class FIFO violation)
+        stalled: set = set()
         i = 0
         while i < len(self.queue) and budget > 0:
             req = self.queue[i]
-            if self.tabm is not None and req.vision_feats is not None \
-                    and not req.staged:
-                # this request's class producer is stalled (FULL ring or
-                # throttled depth) — skip it, keep its FIFO position, and
-                # let staged requests of *other* classes admit behind it:
-                # a stalled high-res class never blocks thumbnails
+            if not self._admissible(req) or (
+                    req.vision_feats is not None
+                    and req.slot_class in stalled):
+                # this request's class producer is stalled (FULL ring,
+                # throttled depth, or an earlier classmate this pass) —
+                # skip it, keep its FIFO position, and let staged
+                # requests of *other* classes admit behind it: a stalled
+                # high-res class never blocks thumbnails
+                stalled.add(req.slot_class)
+                req.aging += 1                 # a real skip, not residency
+                if req.aging >= self.aging_steps \
+                        and req.slot_class not in shed:
+                    aged_classes.add(req.slot_class)
                 i += 1
                 continue
             # error is read only after the staged flag: the worker stores
@@ -574,53 +860,20 @@ class ServingEngine:
                 self.queue.pop(i)
                 self._fail(req)
                 continue
-            slot = self.slots.take_slot()
-            if slot is None:
-                break
-            self.queue.pop(i)
-            budget -= 1
-            try:
-                prompt = np.asarray(req.tokens, np.int32)
-                bucket = bucket_length(len(prompt),
-                                       buckets=self._buckets())
-                padded = np.zeros((1, bucket), np.int32)
-                padded[0, :len(prompt)] = prompt  # right-pad into the bucket
-                vision = self._bind_vision(req)
-                logits, cache = self._prefill_fn(bucket)(
-                    self.params, jnp.asarray(padded), vision,
-                    jnp.asarray([len(prompt)], jnp.int32))
-                if req.tabm_slot is not None:  # prefill consumed the view
-                    if not self._ring_of(req).view_valid(req.tabm_slot,
-                                                         req._tabm_gen):
-                        raise TABMError(
-                            f"slot {req.tabm_slot} recycled under request "
-                            f"{req.rid}'s zero-copy view (seqlock "
-                            f"violation)")
-                    self.plan.release(req.tabm_slot,
-                                      slot_class=req.slot_class)
-            except Exception as e:
-                # neither the KV slot nor a consumed ring slot may leak,
-                # and the request must still be accounted for (e.g. the
-                # ring closed under a concurrent shutdown mid-admission):
-                # fail this request, keep serving
-                if (req.tabm_slot is not None and req._tabm_gen is not None
-                        and self._ring_of(req).view_valid(req.tabm_slot,
-                                                          req._tabm_gen)):
-                    self.plan.release(req.tabm_slot,   # consumed, unreleased
-                                      slot_class=req.slot_class)
-                self.slots.release(slot)
-                req.error = e
-                self._fail(req)
+            # KV slots reserved by aged classes other than this request's
+            # stay free for them (their class may stage any round now)
+            reserved = sum(1 for c in aged_classes if c != req.slot_class)
+            avail = len(self.slots.free) - reserved
+            if avail <= 0:
+                if req.vision_feats is not None:
+                    stalled.add(req.slot_class)    # keep class FIFO
+                req.aging += 1
+                i += 1                         # reserved: skip, keep position
                 continue
-            self.slots.insert(slot, cache, len(prompt))
-            req.slot = slot
-            self.live[slot] = req
-            self.stats.prefills += 1
-            self._trace_event("prefill", req.rid)
-            # first token from the prefill logits
-            tok = self._pick(logits, req)
-            req.out_tokens.append(int(tok[0]))
-            req.first_token_t = time.time()
+            group = self._collect_group(i, min(budget, avail))
+            budget -= len(group)
+            self._admit_group(group)
+            # queue shrank at position i: the next candidate is at i again
         if not self.live and self.queue:
             waiter = None
             if self._worker is not None:

@@ -22,12 +22,12 @@ from repro.models import model as M
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
-def _insert_slot(pool_leaf, slot_leaf, slot: jnp.ndarray):
-    """Write a batch-1 cache leaf (1, ...) into slot b of (B, ...) pools.
-    Leaves carry a leading layer-stack dim: (L, B, ...) vs (L, 1, ...)."""
-    return jax.lax.dynamic_update_slice(
-        pool_leaf, slot_leaf.astype(pool_leaf.dtype),
-        (0, slot) + (0,) * (pool_leaf.ndim - 2))
+def _insert_slots(pool_leaf, batch_leaf, slots: jnp.ndarray):
+    """Write a batch-K cache leaf (L, K, ...) into rows `slots` of the
+    (L, B, ...) pools — ONE strided scatter per leaf, donated in place,
+    so a grouped batch-B prefill lands in B slots in a single op instead
+    of B slot-by-slot merges.  Leaves carry a leading layer-stack dim."""
+    return pool_leaf.at[:, slots].set(batch_leaf.astype(pool_leaf.dtype))
 
 
 @dataclass
@@ -51,13 +51,22 @@ class SlotCache:
         return self.free.pop(0) if self.free else None
 
     def insert(self, slot: int, prefill_cache, prompt_len: int):
-        """Merge a batch-1 prefilled cache into the pool at `slot`."""
-        pool_layers = self.cache["layers"]
-        new_layers = jax.tree.map(
-            lambda pool, one: _insert_slot(pool, one, jnp.asarray(slot)),
-            pool_layers, prefill_cache["layers"])
-        self.cache["layers"] = new_layers
-        self.cache["index"] = self.cache["index"].at[slot].set(prompt_len)
+        """Merge a batch-1 prefilled cache into the pool at `slot` — the
+        K=1 case of :meth:`insert_many`."""
+        self.insert_many([slot], prefill_cache, [prompt_len])
+
+    def insert_many(self, slots: List[int], prefill_cache,
+                    prompt_lens: List[int]):
+        """Merge a batch-K prefilled cache (leaves (L, K, ...)) into K
+        pool slots in one strided scatter per leaf — the admission side
+        of the grouped prefill: one device op per leaf regardless of how
+        many requests the prefill batched."""
+        idx = jnp.asarray(slots, jnp.int32)
+        self.cache["layers"] = jax.tree.map(
+            lambda pool, many: _insert_slots(pool, many, idx),
+            self.cache["layers"], prefill_cache["layers"])
+        self.cache["index"] = self.cache["index"].at[idx].set(
+            jnp.asarray(prompt_lens, jnp.int32))
 
     def release(self, slot: int):
         self.cache["index"] = self.cache["index"].at[slot].set(0)

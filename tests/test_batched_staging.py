@@ -1,0 +1,386 @@
+"""Batched staging & prefill pipeline (PR 5).
+
+Covers the issue's acceptance criteria:
+* **batched == sequential** — greedy tokens from the microbatching
+  pipeline (``produce_many`` strided slab commits + grouped batch-B
+  prefill + ``KVCache.insert_many``) are identical to one-by-one staging
+  and batch-1 prefill, across ≥2 slot classes;
+* **acceptance trace** — with 8 queued same-class requests the engine
+  trace shows ≥1 multi-request slab commit and ≥1 batch>1 prefill call;
+* **error isolation** — one bad request in a staging microbatch fails
+  only its owner (slab abort-all, then one-by-one restage);
+* **batch-aware scheduler** — ``brick_cost(batch=K)`` amortizes weight
+  traffic; ``class_staging_budgets(stage_batch=...)`` charges one
+  microbatch per round; ``Knobs.max_stage_batch`` shrinks under
+  THROTTLED *before* depth sheds;
+* **one substrate table** — the scheduler's bit-efficiency rows and the
+  backend lowering selection read ``core/backends.SUBSTRATES``;
+* **cross-class aging** — a request skipped long enough at admission
+  reserves a KV slot against newer requests of other classes;
+* **insert_many** — one strided KV scatter equals K slot-by-slot merges.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.backends import (BACKENDS, SUBSTRATES, bit_efficiency,
+                                 substrate_backend)
+from repro.core.power import PowerPolicy
+from repro.core.scheduler import (brick_cost, class_staging_budgets,
+                                  edge_accelerators, schedule)
+from repro.core.tabm import EMPTY, SlotClassPool
+from repro.launch.steps import init_params
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import SlotCache
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _req(cfg, rid, n_tokens, n_images=1, n_new=4, seed=0, prompt_len=None):
+    rng = np.random.default_rng(seed + rid)
+    plen = prompt_len if prompt_len is not None else 6 + (rid % 3)
+    return Request(
+        rid=rid, tokens=(np.arange(plen) % 50 + 3).astype(np.int32),
+        n_images=n_images, max_new_tokens=n_new,
+        vision_feats=rng.standard_normal(
+            (1, n_tokens, cfg.vision_feat_dim)).astype(np.float32) * 0.02)
+
+
+# ---------------------------------------------------------------------------
+# plan-level: produce_many == K sequential produce calls
+# ---------------------------------------------------------------------------
+
+def test_produce_many_embeds_match_sequential(vlm):
+    """The strided slab carries exactly what K sequential produce calls
+    would have committed — same per-slot views, same lengths, slab-padded
+    tails zeroed."""
+    from repro.core.bricks import decompose
+    from repro.core.plan import compile_plan
+
+    cfg, params = vlm
+    pool_a = SlotClassPool.from_config(cfg, slots_per_class=4)
+    pool_b = SlotClassPool.from_config(cfg, slots_per_class=4)
+    plan_a = compile_plan(decompose(cfg), params, tabm=pool_a)
+    plan_b = compile_plan(decompose(cfg), params, tabm=pool_b)
+    rng = np.random.default_rng(7)
+    feats = [rng.standard_normal((1, n, cfg.vision_feat_dim)
+                                 ).astype(np.float32) * 0.02
+             for n in (8, 5, 8)]               # mixed lengths, one class
+    cls = pool_a.classify_total(8)
+
+    slots = plan_a.produce_many(
+        [{"vision_feats": jnp.asarray(f)} for f in feats], slot_class=cls)
+    assert slots is not None and len(slots) == 3
+    seq = [plan_b.produce({"vision_feats": jnp.asarray(f)}, slot_class=cls)
+           for f in feats]
+    for expect_n, f in zip((8, 5, 8), feats):
+        got_a = plan_a.consume(slot_class=cls)
+        got_b = plan_b.consume(slot_class=cls)
+        assert got_a[2] == got_b[2] == expect_n
+        np.testing.assert_array_equal(np.asarray(got_a[1], np.float32),
+                                      np.asarray(got_b[1], np.float32))
+        plan_a.release(got_a[0], slot_class=cls)
+        plan_b.release(got_b[0], slot_class=cls)
+    assert pool_a.ring(cls).stats["slab_commits"] == 1
+    assert pool_b.ring(cls).stats["slab_commits"] == 0
+    assert seq == slots
+
+
+def test_produce_is_the_k1_case(vlm):
+    """produce == produce_many of one request: same slot, same stats."""
+    from repro.core.bricks import decompose
+    from repro.core.plan import compile_plan
+    from repro.core.tabm import RingBuffer
+
+    cfg, params = vlm
+    ring = RingBuffer(n_slots=2, max_tokens=cfg.vision_tokens,
+                      dim=cfg.d_model)
+    plan = compile_plan(decompose(cfg), params, tabm=ring)
+    feats = jnp.ones((1, cfg.vision_tokens, cfg.vision_feat_dim),
+                     jnp.float32)
+    s1 = plan.produce({"vision_feats": feats})
+    s2 = plan.produce_many([{"vision_feats": feats}])
+    assert s1 == 0 and s2 == [1]
+    assert ring.stats["writes"] == 2 and ring.stats["slab_commits"] == 0
+    assert plan.tabm_capacity() == 2
+    for _ in range(2):
+        got = plan.consume()
+        plan.release(got[0])
+
+
+# ---------------------------------------------------------------------------
+# engine-level: the acceptance criteria
+# ---------------------------------------------------------------------------
+
+def test_eight_same_class_requests_slab_commit_and_grouped_prefill(vlm):
+    """The issue's acceptance trace: ≥1 multi-request slab commit and ≥1
+    batch>1 prefill call with 8 queued same-class requests — and the ring
+    ends clean."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=4, max_len=128,
+                       stage_batch=4) as eng:
+        reqs = [_req(cfg, i, n_tokens=8, prompt_len=7) for i in range(8)]
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 8 and all(r.error is None for r in done)
+        assert len({r.slot_class for r in reqs}) == 1
+        events = [(e, k) for e, k, _ in eng.trace]
+        slab_ks = [k for e, k in events if e == "slab_commit"]
+        prefill_bs = [k for e, k in events if e == "prefill_batch"]
+        assert slab_ks and max(slab_ks) > 1
+        assert prefill_bs and max(prefill_bs) > 1
+        ring = eng.tabm.ring(reqs[0].slot_class)
+        assert ring.stats["slab_commits"] >= 1
+        assert ring.stats["writes"] == ring.stats["reads"] == 8
+        assert all(st == EMPTY for st in eng.tabm.states)
+
+
+@pytest.mark.parametrize("oracle", ["sync_k1", "async_k1"])
+def test_batched_tokens_identical_to_one_by_one(vlm, oracle):
+    """Greedy tokens through strided slab staging + grouped prefill are
+    identical to one-by-one staging and batch-1 prefill, with ≥2 slot
+    classes in flight."""
+    cfg, params = vlm
+    specs = [(8, 1), (2, 1), (8, 1), (32, 4), (8, 1), (2, 1)]
+    mk = lambda: [_req(cfg, i, n_tokens=t, n_images=n, n_new=5)
+                  for i, (t, n) in enumerate(specs)]
+
+    def run(async_staging, stage_batch, max_batch):
+        eng = ServingEngine(cfg, params, n_slots=4, max_len=128,
+                            async_staging=async_staging,
+                            stage_batch=stage_batch)
+        eng.executor.policy.full_batch = max_batch
+        with eng:
+            reqs = mk()
+            for r in reqs:
+                eng.submit(r)
+            done = eng.run()
+            assert len({r.slot_class for r in reqs}) >= 2
+            return {r.rid: r.out_tokens for r in done}
+
+    batched = run(True, 4, 128)
+    one_by_one = run(oracle == "async_k1", 1, 1)
+    assert batched == one_by_one
+    assert all(batched[i] for i in range(len(specs)))
+
+
+def test_staging_microbatch_error_isolated_to_owner(vlm):
+    """A bad request inside a staging microbatch fails only its owner:
+    the slab is aborted whole, then restaged one-by-one (batchmates
+    commit, the bad input's error lands on the bad request)."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=4, max_len=128,
+                       stage_batch=4) as eng:
+        good0 = _req(cfg, 0, n_tokens=8)
+        bad = _req(cfg, 1, n_tokens=8)
+        # wrong feature dim: stacking/projector cannot contract
+        bad.vision_feats = np.ones(
+            (1, 8, cfg.vision_feat_dim + 3), np.float32)
+        bad.slot_class = good0.slot_class = None
+        good1 = _req(cfg, 2, n_tokens=8)
+        for r in (good0, bad, good1):
+            eng.submit(r)
+        done = eng.run()
+        by_rid = {r.rid: r for r in done}
+        assert by_rid[1].error is not None and not by_rid[1].out_tokens
+        for rid in (0, 2):
+            assert by_rid[rid].error is None
+            assert len(by_rid[rid].out_tokens) >= 4
+        assert all(st == EMPTY for st in eng.tabm.states)
+
+
+def test_group_bind_failure_releases_unconsumed_ready_slots(vlm):
+    """If a bind fails partway through a prefill group, the batchmates'
+    staged-but-unconsumed READY slots must be pulled out of the ring too
+    — an ownerless READY slot would break every later same-class consume
+    (per-class FIFO) and eventually wedge the producer."""
+    from repro.core.tabm import TABMError
+
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=4, max_len=128,
+                       stage_batch=4) as eng:
+        reqs = [_req(cfg, i, n_tokens=8, prompt_len=7) for i in range(2)]
+        real_wait = eng.plan.wait_ready
+        eng.plan.wait_ready = lambda *a, **k: False    # every bind fails
+        for r in reqs:
+            eng.submit(r)
+        deadline = time.monotonic() + 60
+        while not all(r.error is not None for r in reqs):
+            assert time.monotonic() < deadline
+            eng.step()
+        assert all(isinstance(r.error, TABMError) for r in reqs)
+        assert all(st == EMPTY for st in eng.tabm.states)   # no orphans
+        eng.plan.wait_ready = real_wait
+        ok = _req(cfg, 9, n_tokens=8, prompt_len=7)
+        eng.submit(ok)                         # the class keeps serving
+        done = eng.run()
+        assert ok in done and ok.error is None
+        assert len(ok.out_tokens) >= 4
+
+
+def test_cross_class_aging_reserves_kv_slot(vlm):
+    """A hi-res head skipped (class ring jammed) for aging_steps rounds
+    reserves the KV slot: a newer thumbnail may not take it; once the
+    class unjams, the aged request admits first."""
+    cfg, params = vlm
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=128,
+                        async_staging=False, aging_steps=2)
+    with eng:
+        hi_cls = eng.tabm.classify(8, 1)
+        ring = eng.tabm.ring(hi_cls)
+        jam = []                               # occupy the hi-res ring
+        for _ in range(ring.n_slots):
+            s = ring.acquire_write()
+            ring.commit_write(s, jnp.zeros((8, cfg.d_model)))
+            jam.append(s)
+        hi = _req(cfg, 0, n_tokens=8, n_new=2)
+        th1 = _req(cfg, 1, n_tokens=2, n_new=2)
+        th2 = _req(cfg, 2, n_tokens=2, n_new=2)
+        for r in (hi, th1, th2):
+            eng.submit(r)
+        # the thumbnail flood cycles through the only KV slot while hi's
+        # class is jammed — the starvation the reservation exists to stop
+        for _ in range(60):
+            eng.step()
+            if th2.finish_t is not None:
+                break
+        assert th1.error is None and th2.error is None
+        assert hi.slot is None
+        for _ in range(4):                     # hi is skipped every round a
+            eng.step()                         # slot is free: it ages
+        assert hi.aging >= eng.aging_steps     # aged on real skips
+        th3 = _req(cfg, 3, n_tokens=2, n_new=2)
+        eng.submit(th3)
+        # the freed slot is now reserved for aged hi: th3 must NOT take it
+        for _ in range(4):
+            eng.step()
+        assert th3.slot is None and th3 in eng.queue
+        assert len(eng.slots.free) == 1        # held free by the reservation
+        for s in jam:                          # unjam hi's class ring
+            got = ring.acquire_read()
+            ring.release(got[0])
+        done = eng.run()
+        assert {r.rid for r in done} == {0, 1, 2, 3}
+        assert all(r.error is None for r in done)
+        order = [r for e, r, _ in eng.trace if e == "prefill"]
+        assert order.index(0) < order.index(3)  # aged hi beat newer thumb
+
+
+# ---------------------------------------------------------------------------
+# insert_many == sequential insert
+# ---------------------------------------------------------------------------
+
+def test_kv_insert_many_matches_sequential_insert(vlm):
+    cfg, params = vlm
+    from repro.models import model as M
+
+    many = SlotCache(cfg, n_slots=4, max_len=32)
+    seq = SlotCache(cfg, n_slots=4, max_len=32)
+    batch = M.init_decode_state(cfg, 3, 32, start_index=0)
+    key = jax.random.PRNGKey(3)
+    batch["layers"] = jax.tree.map(
+        lambda l: jax.random.normal(key, l.shape, jnp.float32
+                                    ).astype(l.dtype), batch["layers"])
+    slots, lens = [2, 0, 3], [5, 7, 3]
+    many.insert_many(slots, batch, lens)
+    for b, (slot, n) in enumerate(zip(slots, lens)):
+        one = {"layers": jax.tree.map(lambda l: l[:, b:b + 1],
+                                      batch["layers"])}
+        seq.insert(slot, one, n)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        many.cache["layers"], seq.cache["layers"])
+    np.testing.assert_array_equal(np.asarray(many.lengths),
+                                  np.asarray(seq.lengths))
+
+
+# ---------------------------------------------------------------------------
+# batch-aware scheduler + battery knob
+# ---------------------------------------------------------------------------
+
+def test_brick_cost_amortizes_weight_traffic_over_microbatch():
+    cfg = get_config("llava-onevision-0.5b")
+    from repro.core.bricks import decompose
+    import dataclasses
+    proj = dataclasses.replace(decompose(cfg).brick("projector"),
+                               param_bytes=10**9)   # memory-bound
+    gpu = edge_accelerators()[1]
+    one = brick_cost(proj, gpu, n_tokens=729)
+    four = brick_cost(proj, gpu, n_tokens=729, batch=4)
+    # weight traffic is charged once per call: a memory-bound microbatch
+    # rides the same weight stream (latency flat), while 4 independent
+    # calls would pay it 4 times
+    assert one.latency_s <= four.latency_s < 4 * one.latency_s
+    assert one.energy_j < four.energy_j < 4 * one.energy_j  # flops do scale
+    assert brick_cost(proj, gpu, 729, batch=1) == one
+    # and the placement DP takes the same knob end to end: a batch-4
+    # microbatch placement costs at most 4 sequential batch-1 ones
+    g = decompose(cfg)
+    g.bricks = [dataclasses.replace(
+        b, param_bytes=max(1, int(b.flops_per_token))) for b in g.bricks]
+    accels = edge_accelerators()
+    p1 = schedule(g, accels, 256)
+    p4 = schedule(g, accels, 256, batch=4)
+    assert p1.latency_s <= p4.latency_s <= 4 * p1.latency_s
+
+
+def test_class_staging_budgets_charge_one_microbatch_per_round(vlm):
+    cfg, _ = vlm
+    pool = SlotClassPool.from_config(cfg, slots_per_class=4)
+    free = class_staging_budgets(pool, in_flight={})
+    assert all(b == 4 for b in free.values())        # depth-capped only
+    capped = class_staging_budgets(pool, in_flight={}, stage_batch=2)
+    assert all(b == 2 for b in capped.values())      # one microbatch/round
+    # in-flight still charges against depth before the microbatch cap
+    some = class_staging_budgets(pool, in_flight={"1img-2tok": 3},
+                                 stage_batch=2)
+    assert some["1img-2tok"] == 1
+
+
+def test_knobs_shrink_stage_batch_before_shedding_depth():
+    pol = PowerPolicy(full_stage_batch=4)
+    assert pol.knobs(0.9).max_stage_batch == 4       # UNCONSTRAINED
+    high = pol.knobs(0.55)                           # alpha 0.875
+    assert 1 <= high.max_stage_batch < 4             # batch shrinks already
+    assert high.class_depth_scale > 0.8              # depth barely touched
+    mid = pol.knobs(0.40)                            # alpha 0.5
+    assert mid.max_stage_batch == 1                  # batch floored first...
+    assert mid.class_depth_scale == pytest.approx(0.5)   # ...depth still up
+    assert pol.knobs(0.05).max_stage_batch == 1      # CRITICAL: strictly K=1
+
+
+# ---------------------------------------------------------------------------
+# one substrate table (scheduler cost model == backend lowering)
+# ---------------------------------------------------------------------------
+
+def test_substrate_table_is_the_single_source_of_truth():
+    # the scheduler's throughput scale reads the shared table
+    for acc in edge_accelerators():
+        row = SUBSTRATES[acc.profile.name]
+        for label, eff in row.bit_efficiency:
+            assert acc.throughput_scale(label) == pytest.approx(
+                eff * acc.width)
+            assert bit_efficiency(acc.profile.name, label) == eff
+        # backend selection reads the same row
+        assert acc.backend_name() == row.backend
+        assert substrate_backend(acc.profile.name) == row.backend
+    # kernel-mode coherence: units priced with an fp penalty are exactly
+    # the ones lowering through reference-kernel backends
+    for name, row in SUBSTRATES.items():
+        fp = row.efficiency("bf16")
+        assert (row.kernel_mode == "ref") == (fp < 1.0), (
+            f"{name}: fp efficiency {fp} disagrees with kernel mode "
+            f"{row.kernel_mode}")
+    assert bit_efficiency("unknown-unit", "bf16") == 1.0
+    assert BACKENDS[SUBSTRATES["rk-npu"].backend].kernel_mode == "ref"

@@ -126,6 +126,141 @@ def test_state_machine_invariants_random_schedules(ops):
 
 
 # ---------------------------------------------------------------------------
+# strided slab commits (acquire_write_many / commit_many / abort_many)
+# ---------------------------------------------------------------------------
+
+def test_slab_roundtrip_fifo_and_per_slot_lengths():
+    """One strided commit covers K slots; reads come out in acquisition
+    order with each slot's own true length."""
+    rb = make(n=4, tokens=8, dim=16)
+    slots = rb.acquire_write_many(3)
+    assert slots == [0, 1, 2]
+    slab = jnp.stack([jnp.full((8, 16), float(i)) for i in range(3)])
+    rb.commit_many(slots, slab, lengths=[3, 8, 5])
+    assert rb.stats["writes"] == 3 and rb.stats["slab_commits"] == 1
+    for want_val, want_n in [(0.0, 3), (1.0, 8), (2.0, 5)]:
+        slot, view, n = rb.acquire_read()
+        assert n == want_n
+        assert float(view[0, 0]) == pytest.approx(want_val, abs=1e-2)
+        # the padded tail beyond the slot's length is zeroed
+        if n < rb.max_tokens:
+            assert float(jnp.abs(view[n:]).max()) == 0.0
+        rb.release(slot)
+    assert all(st == EMPTY for st in rb.states)
+
+
+def test_slab_acquire_full_mid_batch_is_all_or_nothing():
+    """FULL mid-batch: a K-slot acquire either gets the whole contiguous
+    run or nothing — no partial acquisition ever leaks."""
+    rb = make(n=3)
+    s = rb.acquire_write()
+    rb.commit_write(s, jnp.ones((1, 16)))
+    assert rb.acquire_write_many(3) is None    # only 2 free -> all-or-nothing
+    assert rb.stats["stalls"] == 1
+    assert sum(st == STAGING for st in rb.states) == 0   # nothing half-taken
+    got = rb.acquire_write_many(2)             # the free run fits
+    assert got == [1, 2]
+    rb.abort_many(got)
+    with pytest.raises(TABMError):             # K > capacity is a caller bug
+        rb.acquire_write_many(4)
+    slot, _, _ = rb.acquire_read()
+    rb.release(slot)
+    assert rb.acquire_write_many(3) is not None  # wrap-around run works
+
+
+def test_slab_blocking_acquire_waits_for_whole_run():
+    """A producer parked for K slots resumes only once the whole run is
+    free (consumer releases), and close() wakes it with None."""
+    rb = make(n=2)
+    a = rb.acquire_write(); rb.commit_write(a, jnp.ones((1, 16)))
+    got = []
+    t = threading.Thread(
+        target=lambda: got.append(rb.acquire_write_many(
+            2, block=True, timeout=30.0)))
+    t.start(); time.sleep(0.05)
+    assert not got                             # one slot busy: still parked
+    slot, _, _ = rb.acquire_read()
+    rb.release(slot)                           # whole ring free now
+    t.join(30.0)
+    assert got and got[0] is not None and len(got[0]) == 2
+
+
+def test_slab_partial_abort_rejected_full_abort_rewinds():
+    """abort-all-on-failure: the whole run rewinds (write pointer back to
+    the first slot); aborting a strict subset out of order is rejected —
+    the FIFO invariant commit order == read order survives failures."""
+    rb = make(n=4)
+    slots = rb.acquire_write_many(3)
+    with pytest.raises(TABMError):
+        rb.abort_many(slots[:2])               # not the most recent run
+    with pytest.raises(TABMError):
+        rb.abort_many([slots[0], slots[2]])    # not contiguous
+    rb.abort_many(slots)
+    assert rb.stats["aborts"] == 3
+    assert all(st == EMPTY for st in rb.states)
+    again = rb.acquire_write_many(2)
+    assert again == slots[:2]                  # pointer rewound, not skipped
+    rb.commit_many(again, jnp.ones((2, 4, 16)))
+    s0, _, _ = rb.acquire_read()
+    assert s0 == slots[0]                      # read pointer still aligned
+    rb.release(s0)
+
+
+def test_slab_commit_validates_run_and_capacity():
+    rb = make(n=4, tokens=8)
+    slots = rb.acquire_write_many(2)
+    with pytest.raises(TABMError):             # oversized slab
+        rb.commit_many(slots, jnp.ones((2, 9, 16)))
+    with pytest.raises(TABMError):             # length beyond slab width
+        rb.commit_many(slots, jnp.ones((2, 4, 16)), lengths=[4, 6])
+    with pytest.raises(TABMError):             # slab/run size mismatch
+        rb.commit_many(slots, jnp.ones((3, 4, 16)))
+    with pytest.raises(TABMError):             # non-contiguous run
+        rb.commit_many([slots[0], (slots[1] + 1) % 4],
+                       jnp.ones((2, 4, 16)))
+    rb.commit_many(slots, jnp.ones((2, 4, 16)))  # the valid commit works
+    with pytest.raises(TABMError):             # double commit: not STAGING
+        rb.commit_many(slots, jnp.ones((2, 4, 16)))
+
+
+def test_slab_commit_fires_per_slot_ready_events_with_generation_check():
+    """Each slot of a slab commit wakes its own wait_ready waiter — and a
+    slot recycled after abort_many never satisfies the old lifecycle's
+    wait (generation checks hold across strided ops)."""
+    rb = make(n=4)
+    slots = rb.acquire_write_many(2)
+    results = {}
+    threads = [threading.Thread(
+        target=lambda s=s: results.__setitem__(
+            s, rb.wait_ready(s, timeout=30.0))) for s in slots]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    rb.commit_many(slots, jnp.ones((2, 2, 16)))
+    for t in threads:
+        t.join(30.0)
+    assert results == {slots[0]: True, slots[1]: True}
+    # drain, then: an aborted slab ends waits with False
+    for _ in slots:
+        s, _, _ = rb.acquire_read()
+        rb.release(s)
+    slots2 = rb.acquire_write_many(2)
+    out = []
+    t = threading.Thread(
+        target=lambda: out.append(rb.wait_ready(slots2[0], timeout=30.0)))
+    t.start(); time.sleep(0.05)
+    rb.abort_many(slots2)
+    t.join(30.0)
+    assert out == [False]
+    # recycle: a later lifecycle's slab commit must not satisfy a wait
+    # captured before the abort (generation arithmetic)
+    g0 = rb.slot_generation(slots2[0])
+    slots3 = rb.acquire_write_many(2)
+    rb.commit_many(slots3, jnp.ones((2, 2, 16)))
+    assert rb.slot_generation(slots3[0]) != g0
+
+
+# ---------------------------------------------------------------------------
 # thread-safety: the async producer/consumer contract
 # ---------------------------------------------------------------------------
 
