@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: check test examples
+.PHONY: check test lint examples
 
 # tier-1 pytest + reduced lm/vlm dry-runs (no TPU needed) — the CI gate
 check:
@@ -9,6 +9,11 @@ check:
 
 test:
 	python -m pytest -x -q
+
+# replint: AST concurrency + JAX-discipline analyzer (docs/LINTS.md);
+# exits non-zero on any unsuppressed finding
+lint:
+	python scripts/repro_lint.py
 
 examples:
 	python examples/quickstart.py

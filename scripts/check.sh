@@ -21,6 +21,12 @@ python -m pytest -x -q "$@" \
 echo "== docs lint (core docstrings + README quickstart smoke) =="
 python scripts/docs_lint.py --docs
 
+echo "== replint (lock discipline, donation, dispatch, host-sync, triples) =="
+# AST analyzer over src/ — zero unsuppressed findings required; the JSON
+# report lands next to the other check outputs (docs/LINTS.md)
+mkdir -p /tmp/repro-check
+python scripts/repro_lint.py --json /tmp/repro-check/replint.json
+
 echo "== reduced dry-run: lm arch =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.dryrun --arch stablelm-1.6b --shape decode_32k \

@@ -1,0 +1,66 @@
+#!/usr/bin/env python
+"""replint CLI — gate the tree on the five rule families (docs/LINTS.md).
+
+Usage:
+    python scripts/repro_lint.py                 # lint src/, exit 1 on findings
+    python scripts/repro_lint.py --json out.json # also write the JSON report
+    python scripts/repro_lint.py --write-baseline  # accept current findings
+
+Wired into ``make lint``, scripts/check.sh and the CI lint job (which
+uploads the JSON report as an artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.lint import run_lint, write_baseline  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", type=Path, default=ROOT / "src" / "repro",
+                    help="tree to lint (default: src/repro)")
+    ap.add_argument("--baseline", type=Path,
+                    default=ROOT / "scripts" / "replint_baseline.json",
+                    help="checked-in accepted-debt file")
+    ap.add_argument("--json", type=Path, default=None, metavar="PATH",
+                    help="write the machine-readable report here")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="accept every current unsuppressed finding into "
+                         "the baseline and exit 0")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    result = run_lint(args.root, baseline=args.baseline)
+
+    if args.json is not None:
+        args.json.parent.mkdir(parents=True, exist_ok=True)
+        args.json.write_text(json.dumps(result.to_json(), indent=2) + "\n",
+                             encoding="utf-8")
+
+    if args.write_baseline:
+        write_baseline(args.baseline, result.findings
+                       + result.baseline_matched)
+        print(f"replint: baseline written to {args.baseline} "
+              f"({len(result.findings) + len(result.baseline_matched)} "
+              f"entries)")
+        return 0
+
+    for f in result.findings:
+        print(f.render())
+    if not args.quiet:
+        print(f"replint: {result.files_checked} files, "
+              f"{len(result.findings)} unsuppressed, "
+              f"{len(result.suppressed)} suppressed, "
+              f"{len(result.baseline_matched)} baselined")
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

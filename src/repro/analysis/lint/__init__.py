@@ -1,0 +1,28 @@
+"""replint — AST-based concurrency + JAX-discipline analyzer.
+
+Five rule families gate every push (docs/LINTS.md has the catalog):
+
+* ``lock-discipline`` — guarded-field writes / notify / wait and
+  called-with-lock-held methods must hold the owning lock;
+* ``donation-aliasing`` — a buffer donated to jit must not be read after
+  the call;
+* ``dispatch-hygiene`` — backend probes and REPRO_FORCE_REF only through
+  kernels/dispatch.py;
+* ``host-sync`` — no silent device round-trips in jit regions or the
+  decode/staging hot paths;
+* ``kernel-triple`` — every kernels/*/ package keeps ops/ref/kernel
+  signatures coherent and BlockSpec index-map arity == grid rank.
+
+Entry point: ``scripts/repro_lint.py`` (wired into ``make lint``,
+scripts/check.sh and CI).  ``lint_source`` is the in-process test hook.
+"""
+from repro.analysis.lint.driver import (LintResult, lint_source,
+                                        load_baseline, run_lint,
+                                        write_baseline)
+from repro.analysis.lint.findings import (Finding, LintConfig, ModuleInfo,
+                                          Rule)
+from repro.analysis.lint.rules import ALL_RULES, default_rules
+
+__all__ = ["ALL_RULES", "Finding", "LintConfig", "LintResult", "ModuleInfo",
+           "Rule", "default_rules", "lint_source", "load_baseline",
+           "run_lint", "write_baseline"]

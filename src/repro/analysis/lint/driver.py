@@ -1,0 +1,142 @@
+"""replint driver: discovery, pragmas, baseline, JSON report.
+
+The driver walks ``src/**/*.py``, parses each file once, runs every rule
+(per-module and cross-module), then partitions findings three ways:
+
+* **suppressed** — an inline ``# replint: disable=RULE[,RULE]`` pragma on
+  the finding's line or the line directly above it.  Pragmas are the
+  tool's escape hatch for *deliberate* violations and each one in the
+  tree carries a one-line justification (see docs/LINTS.md).
+* **baselined** — present in the checked-in baseline file
+  (``scripts/replint_baseline.json``), matched on the line-number-
+  independent :meth:`Finding.key` so accepted debt survives unrelated
+  edits.  The baseline ships empty; growing it is a reviewed change.
+* **unsuppressed** — everything else.  ``make lint`` exits non-zero if
+  any exist.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint.findings import Finding, LintConfig, ModuleInfo, Rule
+from repro.analysis.lint.rules import default_rules
+
+_PRAGMA_RE = re.compile(r"#\s*replint:\s*disable=([A-Za-z0-9_,\- ]+)")
+
+
+def _pragmas(source: str) -> Dict[int, Set[str]]:
+    """line number -> rule names disabled on that line."""
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            out[i] = {r.strip() for r in m.group(1).split(",") if r.strip()}
+    return out
+
+
+def _suppressed(f: Finding, pragmas: Dict[int, Set[str]]) -> bool:
+    """A pragma applies on the finding's own line or the line above it."""
+    for line in (f.line, f.line - 1):
+        rules = pragmas.get(line)
+        if rules and (f.rule in rules or "all" in rules):
+            return True
+    return False
+
+
+@dataclass
+class LintResult:
+    findings: List[Finding] = field(default_factory=list)      # unsuppressed
+    suppressed: List[Finding] = field(default_factory=list)
+    baseline_matched: List[Finding] = field(default_factory=list)
+    files_checked: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        def enc(items: List[Finding]) -> List[dict]:
+            return [{"rule": f.rule, "path": f.path, "line": f.line,
+                     "col": f.col, "symbol": f.symbol,
+                     "message": f.message} for f in items]
+        return {"tool": "replint", "files_checked": self.files_checked,
+                "ok": self.ok, "findings": enc(self.findings),
+                "suppressed": enc(self.suppressed),
+                "baseline_matched": enc(self.baseline_matched)}
+
+
+def discover(root: Path) -> List[Path]:
+    """All tracked .py files under ``root`` (``src/`` in production)."""
+    return sorted(p for p in root.rglob("*.py")
+                  if "__pycache__" not in p.parts)
+
+
+def load_modules(root: Path, config: Optional[LintConfig] = None
+                 ) -> List[ModuleInfo]:
+    config = config or LintConfig()
+    mods: List[ModuleInfo] = []
+    for p in discover(root):
+        rel = p.relative_to(root.parent if root.name == "repro"
+                            else root).as_posix()
+        source = p.read_text(encoding="utf-8")
+        mods.append(ModuleInfo.from_source(source, path=rel, config=config,
+                                           abspath=p))
+    return mods
+
+
+def run_rules(mods: Sequence[ModuleInfo],
+              rules: Optional[Sequence[Rule]] = None) -> List[Finding]:
+    rules = list(rules) if rules is not None else default_rules()
+    findings: List[Finding] = []
+    for rule in rules:
+        for mod in mods:
+            findings.extend(rule.check_module(mod))
+        findings.extend(rule.check_project(list(mods)))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def load_baseline(path: Optional[Path]) -> Set[Tuple[str, str, str, str]]:
+    if path is None or not path.exists():
+        return set()
+    entries = json.loads(path.read_text(encoding="utf-8"))
+    return {(e["rule"], e["path"], e["symbol"], e["message"])
+            for e in entries}
+
+
+def write_baseline(path: Path, findings: Sequence[Finding]) -> None:
+    entries = [{"rule": f.rule, "path": f.path, "symbol": f.symbol,
+                "message": f.message}
+               for f in sorted(findings, key=lambda f: f.key())]
+    path.write_text(json.dumps(entries, indent=2) + "\n", encoding="utf-8")
+
+
+def run_lint(root: Path, rules: Optional[Sequence[Rule]] = None,
+             config: Optional[LintConfig] = None,
+             baseline: Optional[Path] = None) -> LintResult:
+    """Lint every .py file under ``root``; partition findings."""
+    mods = load_modules(root, config)
+    pragma_by_path = {m.path: _pragmas(m.source) for m in mods}
+    result = LintResult(files_checked=len(mods))
+    base = load_baseline(baseline)
+    for f in run_rules(mods, rules):
+        if _suppressed(f, pragma_by_path.get(f.path, {})):
+            result.suppressed.append(f)
+        elif f.key() in base:
+            result.baseline_matched.append(f)
+        else:
+            result.findings.append(f)
+    return result
+
+
+def lint_source(source: str, path: str = "<fixture>",
+                rules: Optional[Sequence[Rule]] = None,
+                config: Optional[LintConfig] = None) -> List[Finding]:
+    """Test hook: lint one source string, honoring inline pragmas."""
+    mod = ModuleInfo.from_source(source, path=path, config=config)
+    pragmas = _pragmas(source)
+    return [f for f in run_rules([mod], rules)
+            if not _suppressed(f, pragmas)]

@@ -1,0 +1,186 @@
+"""replint core types: findings, per-module context, and the rule protocol.
+
+A :class:`Finding` is one violation of one rule family at one source
+location.  Rules receive a :class:`ModuleInfo` (parsed AST + source +
+repo-relative path) and yield findings; the driver owns suppression
+(inline ``# replint: disable=RULE`` pragmas), the checked-in baseline,
+and the JSON report (see driver.py and docs/LINTS.md).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``symbol`` is the enclosing ``Class.method`` / function (or ``<module>``)
+    — together with ``rule``, ``path`` and ``message`` it forms the
+    line-number-independent identity the baseline matches on, so accepted
+    debt survives unrelated edits that shift lines."""
+
+    rule: str                  # rule family id, e.g. "lock-discipline"
+    path: str                  # repo-relative posix path
+    line: int
+    col: int
+    message: str
+    symbol: str = "<module>"
+
+    def key(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.symbol, self.message)
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{self.symbol}] {self.message}")
+
+
+@dataclass
+class LintConfig:
+    """Knobs the rules read; defaults encode this repo's conventions
+    (documented per rule in docs/LINTS.md)."""
+
+    # dispatch-hygiene: repo-relative path prefixes where raw backend /
+    # REPRO_FORCE_REF probes are legal.  kernels/dispatch.py IS the
+    # dispatch layer; launch/ holds diagnostics that print the substrate;
+    # the analyzer itself names the probes it greps for.
+    dispatch_allowed: Tuple[str, ...] = (
+        "repro/kernels/dispatch.py",
+        "repro/launch/",
+        "repro/analysis/lint/",
+    )
+    # host-sync: (ClassName, method) pairs treated as hot-path even though
+    # they are not lexically jitted — the decode step loop and the plan's
+    # staging/run paths, where a stray device sync stalls the pipeline.
+    hot_paths: Tuple[Tuple[str, str], ...] = (
+        ("ServingEngine", "step"),
+        ("ExecutionPlan", "run"),
+        ("ExecutionPlan", "produce_many"),
+    )
+    # kernel-triple: the package that is the dispatch layer, not a triple
+    kernels_skip: Tuple[str, ...] = ("dispatch.py", "__init__.py")
+
+
+@dataclass
+class ModuleInfo:
+    """One parsed source file handed to the per-module rules."""
+
+    path: str                  # repo-relative posix path
+    source: str
+    tree: ast.Module
+    config: LintConfig = field(default_factory=LintConfig)
+    abspath: Optional[Path] = None
+
+    @classmethod
+    def from_source(cls, source: str, path: str = "<fixture>",
+                    config: Optional[LintConfig] = None,
+                    abspath: Optional[Path] = None) -> "ModuleInfo":
+        return cls(path=path, source=source,
+                   tree=ast.parse(source, filename=path),
+                   config=config or LintConfig(), abspath=abspath)
+
+
+class Rule:
+    """Base rule: override ``check_module`` (per-file rules) and/or
+    ``check_project`` (cross-file rules like kernel-triple)."""
+
+    name: str = "base"
+    description: str = ""
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, mods: List[ModuleInfo]) -> Iterator[Finding]:
+        return iter(())
+
+
+# ---------------------------------------------------------------------------
+# small AST helpers shared by the rules
+# ---------------------------------------------------------------------------
+
+def dotted(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` / ``a.b[0]`` as a stable string, or None for expressions
+    too dynamic to track (calls, arithmetic, ...)."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = dotted(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    if isinstance(node, ast.Subscript):
+        base = dotted(node.value)
+        if base is None:
+            return None
+        if isinstance(node.slice, ast.Constant):
+            return f"{base}[{node.slice.value!r}]"
+        return f"{base}[*]"
+    return None
+
+
+def call_name(node: ast.Call) -> Optional[str]:
+    """The called expression as a dotted string (``jax.jit``,
+    ``self._cond.notify_all``), or None."""
+    return dotted(node.func)
+
+
+def parent_map(tree: ast.AST) -> Dict[ast.AST, ast.AST]:
+    parents: Dict[ast.AST, ast.AST] = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            parents[child] = parent
+    return parents
+
+
+def enclosing(node: ast.AST, parents: Dict[ast.AST, ast.AST],
+              kinds: tuple) -> Optional[ast.AST]:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, kinds):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def symbol_of(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> str:
+    """``Class.method`` / ``func`` / ``<module>`` for a node."""
+    names: List[str] = []
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            names.append(cur.name)
+        elif isinstance(cur, ast.Lambda):
+            names.append("<lambda>")
+        cur = parents.get(cur)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def assign_targets(stmt: ast.stmt) -> Iterable[ast.expr]:
+    """Flattened store targets of an assignment-like statement."""
+    targets: List[ast.expr] = []
+    if isinstance(stmt, ast.Assign):
+        targets = list(stmt.targets)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    out: List[ast.expr] = []
+    stack = targets
+    while stack:
+        t = stack.pop()
+        if isinstance(t, (ast.Tuple, ast.List)):
+            stack.extend(t.elts)
+        else:
+            out.append(t)
+    return out
+
+
+def lambda_arity(fn: ast.AST) -> Optional[Tuple[int, int]]:
+    """(required, total) positional-arg counts of a lambda/def."""
+    if not isinstance(fn, (ast.Lambda, ast.FunctionDef,
+                           ast.AsyncFunctionDef)):
+        return None
+    a = fn.args
+    total = len(a.posonlyargs) + len(a.args)
+    required = total - len(a.defaults)
+    return required, total

@@ -1,0 +1,28 @@
+"""replint rule registry — one entry per rule family (docs/LINTS.md)."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis.lint.findings import Rule
+from repro.analysis.lint.rules.dispatch_hygiene import DispatchHygieneRule
+from repro.analysis.lint.rules.donation_aliasing import DonationAliasingRule
+from repro.analysis.lint.rules.host_sync import HostSyncRule
+from repro.analysis.lint.rules.kernel_triples import KernelTripleRule
+from repro.analysis.lint.rules.lock_discipline import LockDisciplineRule
+
+ALL_RULES = (
+    LockDisciplineRule,
+    DonationAliasingRule,
+    DispatchHygieneRule,
+    HostSyncRule,
+    KernelTripleRule,
+)
+
+
+def default_rules() -> List[Rule]:
+    return [cls() for cls in ALL_RULES]
+
+
+__all__ = ["ALL_RULES", "default_rules", "DispatchHygieneRule",
+           "DonationAliasingRule", "HostSyncRule", "KernelTripleRule",
+           "LockDisciplineRule"]

@@ -1,0 +1,63 @@
+"""dispatch-hygiene — backend probing only through kernels/dispatch.py.
+
+PR 3 deduplicated five hand-rolled ``jax.default_backend() == "tpu"``
+checks into :mod:`repro.kernels.dispatch` (``resolve_interpret`` /
+``on_tpu`` / ``force_ref``), because a raw probe frozen into a jit trace
+silently ignores ``REPRO_FORCE_REF`` and ``force_ref()`` overrides, and a
+sixth copy crept straight back in (models/attention.py, fixed alongside
+this rule).  This rule keeps the dispatch decision in one place:
+
+* calls to ``jax.default_backend()`` / ``jax.lib.xla_bridge.get_backend``,
+* any literal mention of the ``REPRO_FORCE_REF`` environment variable
+  (``os.environ`` / ``os.getenv`` reads or otherwise),
+
+are only legal under the path prefixes in
+:attr:`LintConfig.dispatch_allowed` — by default the dispatch module
+itself, ``launch/`` diagnostics (which *print* the substrate rather than
+branch on it), and this analyzer.  Everything else must call the
+dispatch API (``resolve_interpret`` for the kernel choice, ``on_tpu``
+for a hardware fact).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.lint.findings import (Finding, ModuleInfo, Rule,
+                                          call_name, parent_map, symbol_of)
+
+_PROBE_CALLS = {
+    "jax.default_backend",
+    "jax.lib.xla_bridge.get_backend",
+    "xla_bridge.get_backend",
+}
+_ENV_VAR = "REPRO_FORCE_REF"
+
+
+class DispatchHygieneRule(Rule):
+    name = "dispatch-hygiene"
+    description = ("raw backend probes and REPRO_FORCE_REF reads are only "
+                   "legal in kernels/dispatch.py and launch/ diagnostics")
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        if any(mod.path.startswith(p) or f"/{p}" in mod.path
+               for p in mod.config.dispatch_allowed):
+            return
+        parents = parent_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call) \
+                    and call_name(node) in _PROBE_CALLS:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"raw backend probe '{call_name(node)}()' outside the "
+                    f"dispatch layer — use repro.kernels.dispatch "
+                    f"(resolve_interpret / on_tpu) so REPRO_FORCE_REF and "
+                    f"force_ref() overrides keep working",
+                    symbol_of(node, parents))
+            elif isinstance(node, ast.Constant) and node.value == _ENV_VAR:
+                yield Finding(
+                    self.name, mod.path, node.lineno, node.col_offset,
+                    f"'{_ENV_VAR}' referenced outside the dispatch layer — "
+                    f"only repro.kernels.dispatch may read the override "
+                    f"env var (call dispatch.force_ref_active instead)",
+                    symbol_of(node, parents))

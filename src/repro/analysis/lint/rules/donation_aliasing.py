@@ -1,0 +1,169 @@
+"""donation-aliasing — never read a buffer after donating it to jit.
+
+``jax.jit(..., donate_argnums=...)`` invalidates the caller's buffer: the
+donated array aliases the output and a later dispatch against the old
+reference raises (or worse, on some backends, reads freed memory).  The
+repo's convention is *rebind in the calling statement*:
+
+    self.pool = _write_slot(self.pool, ...)        # OK — rebound
+    params, opt, m = jitted(params, opt, batch)    # OK — rebound
+
+This rule tracks every jitted-with-donation callable defined in a module —
+
+* ``@functools.partial(jax.jit, donate_argnums=(...))`` decorated defs,
+* ``name = jax.jit(fn, donate_argnums=(...))`` assignments (including
+  attribute targets like ``self._decode``),
+
+— then audits every direct call site: the expression at each donated
+position (when it is a trackable name/attribute) must not be read again
+after the call in the enclosing function, unless rebound first.  A
+same-statement rebind or ``return`` is safe; passing the same buffer at
+two argument positions of one donating call is flagged outright.
+
+Approximations (documented in docs/LINTS.md): tracking is lexical within
+one function — reads at earlier lines of a surrounding loop body are not
+seen, and ``jitted.lower(...)`` (tracing, no buffers consumed) is
+deliberately not treated as a call.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.lint.findings import (Finding, ModuleInfo, Rule,
+                                          assign_targets, call_name, dotted,
+                                          enclosing, parent_map, symbol_of)
+
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def _donate_positions(call: ast.Call) -> Optional[Tuple[int, ...]]:
+    """``donate_argnums`` keyword of a jax.jit/partial(jax.jit) call."""
+    for kw in call.keywords:
+        if kw.arg == "donate_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                out = []
+                for e in v.elts:
+                    if not (isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)):
+                        return None
+                    out.append(e.value)
+                return tuple(out)
+            return None
+    return None
+
+
+def _jit_call(node: ast.AST) -> Optional[ast.Call]:
+    """The jax.jit(...) call inside ``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)``, else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = call_name(node)
+    if name == "jax.jit":
+        return node
+    if name in ("functools.partial", "partial") and node.args \
+            and dotted(node.args[0]) == "jax.jit":
+        return node
+    return None
+
+
+def _collect_donating(tree: ast.Module) -> Dict[str, Tuple[int, ...]]:
+    """callable-name -> donated positions, for this module."""
+    out: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                jit = _jit_call(dec)
+                pos = _donate_positions(jit) if jit is not None else None
+                if pos:
+                    out[node.name] = pos
+        elif isinstance(node, ast.Assign):
+            jit = _jit_call(node.value)
+            pos = _donate_positions(jit) if jit is not None else None
+            if pos:
+                for t in assign_targets(node):
+                    name = dotted(t)
+                    if name is not None:
+                        out[name] = pos
+    return out
+
+
+class DonationAliasingRule(Rule):
+    name = "donation-aliasing"
+    description = ("a buffer passed at a donate_argnums position must not "
+                   "be read after the call (rebind it in the statement)")
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        donating = _collect_donating(mod.tree)
+        if not donating:
+            return
+        parents = parent_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            pos = donating.get(call_name(node) or "")
+            if not pos:
+                continue
+            yield from self._check_call(mod, node, pos, parents)
+
+    def _check_call(self, mod: ModuleInfo, call: ast.Call,
+                    pos: Tuple[int, ...], parents) -> Iterator[Finding]:
+        sym = symbol_of(call, parents)
+        arg_names = [dotted(a) for a in call.args]
+        for p in pos:
+            if p >= len(call.args):
+                continue
+            name = arg_names[p]
+            if name is None:
+                continue                      # untrackable expression
+            if arg_names.count(name) > 1:
+                yield Finding(
+                    self.name, mod.path, call.lineno, call.col_offset,
+                    f"'{name}' is donated at position {p} but also passed "
+                    f"at another argument position of the same call "
+                    f"(aliased donation)", sym)
+            stmt = enclosing(call, parents, (ast.stmt,))
+            if stmt is None or isinstance(stmt, ast.Return):
+                continue
+            if name in (dotted(t) for t in assign_targets(stmt)):
+                continue                      # rebound by this statement
+            fn = enclosing(call, parents, _FUNCS)
+            if fn is None or isinstance(fn, ast.Lambda):
+                continue                      # lambda body: nothing follows
+            read = self._first_read_after(fn, stmt, name)
+            if read is not None:
+                yield Finding(
+                    self.name, mod.path, read.lineno, read.col_offset,
+                    f"'{name}' read after being donated to "
+                    f"'{call_name(call)}' at line {call.lineno} — the "
+                    f"buffer is invalid; rebind it in the calling "
+                    f"statement", sym)
+
+    @staticmethod
+    def _first_read_after(fn: ast.AST, call_stmt: ast.stmt,
+                          name: str) -> Optional[ast.expr]:
+        """First Load of ``name`` after the call statement, unless a
+        rebind (Store) comes first.  Events are ordered by line."""
+        end = getattr(call_stmt, "end_lineno", call_stmt.lineno)
+        events: List[Tuple[int, int, str, ast.expr]] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, (ast.Name, ast.Attribute,
+                                     ast.Subscript)):
+                continue
+            if dotted(node) != name:
+                continue
+            if node.lineno <= end:
+                continue
+            ctx = getattr(node, "ctx", None)
+            if isinstance(ctx, ast.Store):
+                events.append((node.lineno, node.col_offset, "store", node))
+            elif isinstance(ctx, ast.Load):
+                events.append((node.lineno, node.col_offset, "load", node))
+        for _ln, _col, kind, node in sorted(events, key=lambda e: e[:2]):
+            if kind == "store":
+                return None
+            return node
+        return None

@@ -1,0 +1,236 @@
+"""kernel-triple — every kernels/*/ package keeps ops/ref/kernel coherent.
+
+The repo's kernel contract (docs/ARCHITECTURE.md): each Pallas kernel is a
+*triple* — ``ops.py`` (public jit wrapper), ``ref.py`` (pure-jnp oracle),
+``kernel.py`` (the Pallas body) — kept interchangeable so tests can assert
+kernel==ref and the dispatch layer can force the reference path anywhere.
+Per package this rule checks:
+
+* all three files exist;
+* ``ops.py`` exposes at least one public wrapper with a keyword-only
+  ``interpret`` parameter defaulting to ``None`` whose body calls
+  ``resolve_interpret`` (the kernels/dispatch resolution, outside the
+  inner jit);
+* the wrapper's positional signature matches its ``ref_*`` oracle
+  (wrapper positional names must be a prefix of the ref's, any extra ref
+  parameters defaulted — e.g. the oracle's optional initial state);
+  aliased oracles (``from ... import x as ref_y``) are resolved through
+  the import;
+* ``kernel.py`` exposes a public entry that accepts ``interpret`` and
+  plumbs it into ``pl.pallas_call(..., interpret=...)``;
+* every ``pl.BlockSpec`` index-map lambda's required arity equals the
+  grid rank plus ``num_scalar_prefetch`` (a mismatched index map is a
+  shape error only on real TPU hardware — this catches it at push time).
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.analysis.lint.findings import (Finding, LintConfig, ModuleInfo,
+                                          Rule, call_name, lambda_arity)
+
+
+def _positional_names(fn: ast.FunctionDef) -> List[str]:
+    return [a.arg for a in (*fn.args.posonlyargs, *fn.args.args)]
+
+
+def _required_positional(fn: ast.FunctionDef) -> List[str]:
+    names = _positional_names(fn)
+    n_def = len(fn.args.defaults)
+    return names[: len(names) - n_def] if n_def else names
+
+
+def _kwonly(fn: ast.FunctionDef) -> Dict[str, Optional[ast.expr]]:
+    return {a.arg: d for a, d in zip(fn.args.kwonlyargs,
+                                     fn.args.kw_defaults)}
+
+
+def _top_defs(tree: ast.Module) -> Dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body if isinstance(n, ast.FunctionDef)}
+
+
+def _calls_in(fn: ast.FunctionDef, name: str) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            cn = call_name(node) or ""
+            if cn == name or cn.endswith("." + name):
+                return True
+    return False
+
+
+class KernelTripleRule(Rule):
+    name = "kernel-triple"
+    description = ("kernels/*/ packages must keep ops/ref/kernel "
+                   "signatures matching, plumb interpret=, and have "
+                   "BlockSpec index-map arity == grid rank")
+
+    def check_project(self, mods: List[ModuleInfo]) -> Iterator[Finding]:
+        by_path = {m.path: m for m in mods}
+        packages: Dict[str, Dict[str, ModuleInfo]] = {}
+        for m in mods:
+            parts = Path(m.path).parts
+            if "kernels" not in parts:
+                continue
+            i = parts.index("kernels")
+            if len(parts) != i + 3:        # kernels/<pkg>/<file>.py
+                continue
+            pkg, fname = parts[i + 1], parts[i + 2]
+            packages.setdefault(pkg, {})[fname] = m
+        for pkg in sorted(packages):
+            yield from self._check_package(pkg, packages[pkg], by_path)
+
+    def _check_package(self, pkg: str, files: Dict[str, ModuleInfo],
+                       by_path: Dict[str, ModuleInfo]) -> Iterator[Finding]:
+        anchor = next(iter(files.values()))
+        missing = [f for f in ("ops.py", "ref.py", "kernel.py")
+                   if f not in files]
+        if missing:
+            yield Finding(self.name, anchor.path, 1, 0,
+                          f"kernels/{pkg} is missing {missing} — every "
+                          f"kernel package is an ops/ref/kernel triple",
+                          f"kernels.{pkg}")
+            return
+        ops, ref, kern = files["ops.py"], files["ref.py"], files["kernel.py"]
+
+        wrappers = [fn for fn in _top_defs(ops.tree).values()
+                    if not fn.name.startswith("_")
+                    and "interpret" in _kwonly(fn)]
+        if not wrappers:
+            yield Finding(self.name, ops.path, 1, 0,
+                          f"kernels/{pkg}/ops.py has no public wrapper "
+                          f"with a keyword-only 'interpret' parameter",
+                          f"kernels.{pkg}")
+            return
+        for fn in wrappers:
+            default = _kwonly(fn)["interpret"]
+            if not (isinstance(default, ast.Constant)
+                    and default.value is None):
+                yield Finding(
+                    self.name, ops.path, fn.lineno, fn.col_offset,
+                    f"'{fn.name}' must default interpret=None so "
+                    f"kernels/dispatch resolves it (hardware + "
+                    f"REPRO-override aware)", f"kernels.{pkg}.{fn.name}")
+            if not _calls_in(fn, "resolve_interpret"):
+                yield Finding(
+                    self.name, ops.path, fn.lineno, fn.col_offset,
+                    f"'{fn.name}' does not resolve interpret= through "
+                    f"kernels.dispatch.resolve_interpret (the dispatch "
+                    f"decision must stay outside the inner jit)",
+                    f"kernels.{pkg}.{fn.name}")
+
+        refs = self._ref_fns(ref, by_path)
+        if not refs:
+            yield Finding(self.name, ref.path, 1, 0,
+                          f"kernels/{pkg}/ref.py defines (or re-exports) "
+                          f"no 'ref_*' oracle", f"kernels.{pkg}")
+        else:
+            yield from self._match_signatures(pkg, ops, wrappers, refs)
+
+        yield from self._check_kernel(pkg, kern)
+
+    # -- oracle discovery (including aliased re-exports) --------------------
+    def _ref_fns(self, ref: ModuleInfo, by_path: Dict[str, ModuleInfo]
+                 ) -> Dict[str, ast.FunctionDef]:
+        out = {name: fn for name, fn in _top_defs(ref.tree).items()
+               if name.startswith("ref_")}
+        for node in ref.tree.body:
+            if not isinstance(node, ast.ImportFrom) or node.module is None:
+                continue
+            target = "/".join(node.module.split(".")) + ".py"
+            target_mod = next((m for p, m in by_path.items()
+                               if p.endswith(target)), None)
+            if target_mod is None:
+                continue
+            defs = _top_defs(target_mod.tree)
+            for alias in node.names:
+                ref_name = alias.asname or alias.name
+                if ref_name.startswith("ref_") and alias.name in defs:
+                    out.setdefault(ref_name, defs[alias.name])
+        return out
+
+    def _match_signatures(self, pkg: str, ops: ModuleInfo,
+                          wrappers: List[ast.FunctionDef],
+                          refs: Dict[str, ast.FunctionDef]
+                          ) -> Iterator[Finding]:
+        for fn in wrappers:
+            ref_fn = refs.get(f"ref_{fn.name}")
+            if ref_fn is None and len(refs) == 1 and len(wrappers) == 1:
+                ref_fn = next(iter(refs.values()))
+            if ref_fn is None:
+                yield Finding(
+                    self.name, ops.path, fn.lineno, fn.col_offset,
+                    f"no oracle pairs with '{fn.name}' (expected "
+                    f"'ref_{fn.name}' or a single ref_* export)",
+                    f"kernels.{pkg}.{fn.name}")
+                continue
+            w, r = _positional_names(fn), _positional_names(ref_fn)
+            ref_required = _required_positional(ref_fn)
+            if r[: len(w)] != w or len(ref_required) > len(w):
+                yield Finding(
+                    self.name, ops.path, fn.lineno, fn.col_offset,
+                    f"'{fn.name}{tuple(w)}' does not match its oracle "
+                    f"'{ref_fn.name}{tuple(r)}' — wrapper positional "
+                    f"names must prefix the oracle's, extra oracle "
+                    f"params defaulted", f"kernels.{pkg}.{fn.name}")
+
+    # -- pallas entry + BlockSpec arity -------------------------------------
+    def _check_kernel(self, pkg: str, kern: ModuleInfo) -> Iterator[Finding]:
+        entries = [fn for fn in _top_defs(kern.tree).values()
+                   if not fn.name.startswith("_")
+                   and ("interpret" in _kwonly(fn)
+                        or "interpret" in _positional_names(fn))]
+        if not entries:
+            yield Finding(self.name, kern.path, 1, 0,
+                          f"kernels/{pkg}/kernel.py has no public entry "
+                          f"taking interpret= — the Pallas body must stay "
+                          f"runnable in interpret mode off-TPU",
+                          f"kernels.{pkg}")
+            return
+        for fn in entries:
+            plumbed = False
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call) \
+                        and (call_name(node) or "").endswith("pallas_call"):
+                    if any(kw.arg == "interpret" for kw in node.keywords):
+                        plumbed = True
+            if not plumbed:
+                yield Finding(
+                    self.name, kern.path, fn.lineno, fn.col_offset,
+                    f"'{fn.name}' takes interpret= but never passes it to "
+                    f"pl.pallas_call", f"kernels.{pkg}.{fn.name}")
+            yield from self._check_blockspecs(pkg, kern, fn)
+
+    def _check_blockspecs(self, pkg: str, kern: ModuleInfo,
+                          fn: ast.FunctionDef) -> Iterator[Finding]:
+        rank: Optional[int] = None
+        prefetch = 0
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            for kw in node.keywords:
+                if kw.arg == "grid" and isinstance(kw.value, ast.Tuple):
+                    rank = len(kw.value.elts)
+                elif kw.arg == "num_scalar_prefetch" \
+                        and isinstance(kw.value, ast.Constant):
+                    prefetch = int(kw.value.value)
+        if rank is None:
+            return
+        want = rank + prefetch
+        for node in ast.walk(fn):
+            if not (isinstance(node, ast.Call)
+                    and (call_name(node) or "").endswith("BlockSpec")
+                    and len(node.args) >= 2):
+                continue
+            arity = lambda_arity(node.args[1])
+            if arity is None:
+                continue                   # named/opaque index map: skip
+            required, total = arity
+            if not (required <= want <= total):
+                yield Finding(
+                    self.name, kern.path, node.lineno, node.col_offset,
+                    f"BlockSpec index map takes {required} required "
+                    f"args but the grid rank (+scalar prefetch) is "
+                    f"{want} — the index map runs once per grid "
+                    f"coordinate", f"kernels.{pkg}.{fn.name}")

@@ -1,0 +1,174 @@
+"""lock-discipline — every guarded state transition under the owning lock.
+
+The TABM ring's correctness argument (docs/TABM.md) is "every state
+transition happens under one ``threading.Condition``".  This rule makes
+that machine-checked, per class that owns a lock:
+
+* a class *owns a lock* when any method assigns
+  ``self.X = threading.Condition() | Lock() | RLock()``;
+* a field is *guarded* when it is ever written lexically inside
+  ``with self.X:`` (or inside a lock-required method, below) outside
+  ``__init__``/``__post_init__``;
+* every other write to a guarded field must itself be lexically inside
+  ``with self.X:`` — constructor writes are exempt (the object is not
+  shared yet);
+* ``self.X.notify*() / wait() / wait_for()`` must be inside
+  ``with self.X:`` (calling them unlocked raises at runtime only when the
+  race actually fires — this catches it at push time);
+* a method whose docstring declares the convention ("Caller must hold
+  ``self._cond``", "called with the lock held", ...) is **lock-required**:
+  its own guarded writes are legal, but every intra-class call site
+  (``self.meth(...)``) must be inside a locked region or inside another
+  lock-required method — the intra-class call-graph walk.
+
+Known approximation: "inside" is lexical containment.  A closure built
+under the lock but invoked later escapes this analysis; keep such
+callbacks out of locked regions (none exist in the tree today).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.lint.findings import (Finding, ModuleInfo, Rule,
+                                          assign_targets, call_name, dotted,
+                                          parent_map)
+
+_LOCK_CTORS = {"threading.Condition", "threading.Lock", "threading.RLock"}
+_WAIT_NOTIFY = {"notify", "notify_all", "wait", "wait_for"}
+_HELD_RE = re.compile(
+    r"(?i)(caller\s+(must|should)\s+hold|called\s+with\s+.{0,40}\bheld)")
+_INIT_METHODS = {"__init__", "__post_init__", "__new__"}
+
+
+def _is_lock_required(fn: ast.FunctionDef) -> bool:
+    doc = ast.get_docstring(fn) or ""
+    return bool(_HELD_RE.search(doc))
+
+
+def _field_of_target(t: ast.expr) -> Optional[str]:
+    """``self.attr`` / ``self.attr[...]`` -> ``attr`` (writes to locals or
+    other objects are not this class's state)."""
+    if isinstance(t, ast.Subscript):
+        t = t.value
+    if isinstance(t, ast.Attribute) and isinstance(t.value, ast.Name) \
+            and t.value.id == "self":
+        return t.attr
+    return None
+
+
+class _MethodScan:
+    """Lexical facts about one method body."""
+
+    def __init__(self, fn: ast.FunctionDef, lock_attrs: Set[str]):
+        self.fn = fn
+        self.lock_required = _is_lock_required(fn)
+        self.locked_nodes: Set[ast.AST] = set()
+        # writes: (field, node, locked); lock-ops / self-calls similarly
+        self.writes: List[Tuple[str, ast.stmt, bool]] = []
+        self.lock_ops: List[Tuple[ast.Call, bool]] = []
+        self.self_calls: List[Tuple[str, ast.Call, bool]] = []
+        self._walk(fn, locked=False, lock_attrs=lock_attrs)
+
+    def _walk(self, node: ast.AST, locked: bool, lock_attrs: Set[str]):
+        for child in ast.iter_child_nodes(node):
+            child_locked = locked
+            if isinstance(child, ast.With):
+                for item in child.items:
+                    d = dotted(item.context_expr)
+                    if d is not None and d.startswith("self.") \
+                            and d[len("self."):] in lock_attrs:
+                        child_locked = True
+            if isinstance(child, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                for t in assign_targets(child):
+                    f = _field_of_target(t)
+                    if f is not None:
+                        self.writes.append((f, child, child_locked))
+            if isinstance(child, ast.Call):
+                name = call_name(child)
+                if name is not None and name.startswith("self."):
+                    parts = name.split(".")
+                    if (len(parts) == 3 and parts[1] in lock_attrs
+                            and parts[2] in _WAIT_NOTIFY):
+                        self.lock_ops.append((child, child_locked))
+                    elif len(parts) == 2:
+                        self.self_calls.append((parts[1], child,
+                                                child_locked))
+            # nested defs still belong to the method lexically; a nested
+            # def/lambda inside a locked region inherits "locked" (the
+            # wait_for predicate lambda pattern)
+            self._walk(child, child_locked, lock_attrs)
+
+
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    description = ("guarded-field writes, notify*/wait* and lock-required "
+                   "method calls must hold the owning lock")
+
+    def check_module(self, mod: ModuleInfo) -> Iterator[Finding]:
+        parents = parent_map(mod.tree)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                yield from self._check_class(mod, node, parents)
+
+    def _check_class(self, mod: ModuleInfo, cls: ast.ClassDef,
+                     parents) -> Iterator[Finding]:
+        methods = [n for n in cls.body
+                   if isinstance(n, ast.FunctionDef)]
+        lock_attrs: Set[str] = set()
+        for fn in methods:
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign) and isinstance(sub.value,
+                                                              ast.Call):
+                    ctor = call_name(sub.value)
+                    if ctor in _LOCK_CTORS:
+                        for t in assign_targets(sub):
+                            f = _field_of_target(t)
+                            if f is not None:
+                                lock_attrs.add(f)
+        if not lock_attrs:
+            return
+
+        scans: Dict[str, _MethodScan] = {
+            fn.name: _MethodScan(fn, lock_attrs) for fn in methods}
+        required = {name for name, s in scans.items() if s.lock_required}
+
+        # guarded fields: written under a lock (or in a lock-required
+        # method) anywhere outside construction
+        guarded: Set[str] = set()
+        for name, s in scans.items():
+            if name in _INIT_METHODS:
+                continue
+            for f, _stmt, locked in s.writes:
+                if (locked or s.lock_required) and f not in lock_attrs:
+                    guarded.add(f)
+
+        for name, s in scans.items():
+            if name in _INIT_METHODS:
+                continue
+            sym = f"{cls.name}.{name}"
+            if not s.lock_required:
+                for f, stmt, locked in s.writes:
+                    if f in guarded and not locked:
+                        yield Finding(
+                            self.name, mod.path, stmt.lineno,
+                            stmt.col_offset,
+                            f"write to guarded field 'self.{f}' outside "
+                            f"'with self.<lock>:' (guarded because it is "
+                            f"written under the lock elsewhere in "
+                            f"{cls.name})", sym)
+                for call, locked in s.lock_ops:
+                    if not locked:
+                        yield Finding(
+                            self.name, mod.path, call.lineno,
+                            call.col_offset,
+                            f"'{call_name(call)}()' called without "
+                            f"holding the lock", sym)
+            for callee, call, locked in s.self_calls:
+                if callee in required and not locked and not s.lock_required:
+                    yield Finding(
+                        self.name, mod.path, call.lineno, call.col_offset,
+                        f"'self.{callee}()' is documented as "
+                        f"called-with-lock-held but this call site does "
+                        f"not hold the lock", sym)

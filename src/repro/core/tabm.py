@@ -168,6 +168,8 @@ class RingBuffer:
 
     # -- state machine (always called with self._cond held) -----------------
     def _transition(self, slot: int, to: int):
+        """Caller must hold ``self._cond`` (enforced by replint
+        lock-discipline: every call site is checked)."""
         frm = self.states[slot]
         if to not in _VALID[frm]:
             raise TABMError(

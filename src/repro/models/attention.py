@@ -143,9 +143,10 @@ def attn_train(p, cfg, x, rope_fn, *, causal=True, kv_override=None):
     # TP-region layout: heads sharded, sequence replicated (see sharding.py)
     q, k, v = constrain_heads(q), constrain_heads(k), constrain_heads(v)
     if getattr(cfg, "attn_q_chunk", 512) == 0:
-        if jax.default_backend() == "tpu":
+        from repro.kernels.dispatch import resolve_interpret
+        if not resolve_interpret():
             # the real kernel on real hardware; dense_attention is its
-            # compile-time stand-in for the CPU dry-run
+            # compile-time stand-in off-TPU and under force_ref()
             from repro.kernels.flash_attention import flash_attention
             o = flash_attention(q, k, v, causal=causal)
         else:

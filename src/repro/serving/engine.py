@@ -922,10 +922,12 @@ class ServingEngine:
         finished = []
         for slot, req in list(self.live.items()):
             tok = self._pick(logits[slot:slot + 1], req)
-            t = int(tok[0])
+            # deliberate per-token sampling read: the sampled id feeds the
+            # next step's host-side token buffer and EOS check
+            t = int(tok[0])  # replint: disable=host-sync
             req.out_tokens.append(t)
             self.stats.decoded_tokens += 1
-            over_len = int(self.slots.lengths[slot]) + 1 >= self.max_len
+            over_len = int(self.slots.lengths[slot]) + 1 >= self.max_len  # replint: disable=host-sync
             if (t == EOS_ID or len(req.out_tokens) >= req.max_new_tokens
                     or over_len):
                 req.finish_t = time.time()

@@ -1,0 +1,471 @@
+"""replint: each rule family fires on seeded violations, stays quiet on
+conforming code, pragmas/baseline suppress, the RingBuffer.commit_many
+mutation is caught, and the real tree lints clean (see docs/LINTS.md)."""
+import ast
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (Finding, LintConfig, lint_source, run_lint,
+                                 write_baseline)
+from repro.analysis.lint.driver import load_modules, run_rules
+from repro.analysis.lint.rules import (DispatchHygieneRule,
+                                       DonationAliasingRule, HostSyncRule,
+                                       KernelTripleRule, LockDisciplineRule)
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+
+def rules_of(findings, name):
+    return [f for f in findings if f.rule == name]
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+# ---------------------------------------------------------------------------
+
+LOCKED_CLASS = '''
+import threading
+
+class Box:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self.items = []
+        self.n = 0
+
+    def put(self, x):
+        with self._cond:
+            self.items.append(x)
+            self.n = self.n + 1
+            self._cond.notify_all()
+'''
+
+
+def test_lock_discipline_quiet_on_clean_class():
+    assert lint_source(LOCKED_CLASS, rules=[LockDisciplineRule()]) == []
+
+
+def test_lock_discipline_flags_unlocked_write():
+    src = LOCKED_CLASS + '''
+    def reset(self):
+        self.n = 0
+'''
+    fs = lint_source(src, rules=[LockDisciplineRule()])
+    assert len(fs) == 1 and "self.n" in fs[0].message
+    assert fs[0].symbol == "Box.reset"
+
+
+def test_lock_discipline_flags_unlocked_notify():
+    src = LOCKED_CLASS + '''
+    def poke(self):
+        self._cond.notify_all()
+'''
+    fs = lint_source(src, rules=[LockDisciplineRule()])
+    assert len(fs) == 1 and "notify_all" in fs[0].message
+
+
+def test_lock_discipline_lock_required_method_call_graph():
+    src = '''
+import threading
+
+class Box:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self.state = 0
+
+    def _advance(self):
+        """Caller must hold ``self._cond``."""
+        self.state += 1
+
+    def ok(self):
+        with self._cond:
+            self._advance()
+
+    def bad(self):
+        self._advance()
+'''
+    fs = lint_source(src, rules=[LockDisciplineRule()])
+    assert len(fs) == 1 and fs[0].symbol == "Box.bad"
+    assert "called-with-lock-held" in fs[0].message
+
+
+def test_lock_discipline_wait_for_predicate_lambda_is_locked():
+    src = '''
+import threading
+
+class Box:
+    def __init__(self):
+        self._cond = threading.Condition()
+        self.done = False
+
+    def finish(self):
+        with self._cond:
+            self.done = True
+            self._cond.notify_all()
+
+    def join(self):
+        with self._cond:
+            self._cond.wait_for(lambda: self.done)
+'''
+    assert lint_source(src, rules=[LockDisciplineRule()]) == []
+
+
+def test_lock_discipline_mutation_commit_many_caught():
+    """Seed a lock bypass into a copy of RingBuffer.commit_many: replace
+    its 'with self._cond:' with 'if True:' and the rule must fire."""
+    source = (SRC / "core" / "tabm.py").read_text()
+    assert lint_source(source, path="repro/core/tabm.py",
+                       rules=[LockDisciplineRule()]) == []
+
+    lines = source.splitlines(keepends=True)
+    start = next(i for i, l in enumerate(lines)
+                 if "def commit_many" in l)
+    with_i = next(i for i in range(start, len(lines))
+                  if "with self._cond:" in lines[i])
+    lines[with_i] = lines[with_i].replace("with self._cond:", "if True:")
+    mutated = "".join(lines)
+    assert mutated != source
+
+    fs = lint_source(mutated, path="repro/core/tabm.py",
+                     rules=[LockDisciplineRule()])
+    assert any(f.symbol == "RingBuffer.commit_many" for f in fs), \
+        [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# donation-aliasing
+# ---------------------------------------------------------------------------
+
+DONATING = '''
+import functools
+import jax
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write(pool, v):
+    return pool.at[0].set(v)
+'''
+
+
+def test_donation_rebind_in_statement_is_safe():
+    src = DONATING + '''
+def caller(pool, v):
+    pool = write(pool, v)
+    return pool.sum()
+'''
+    assert lint_source(src, rules=[DonationAliasingRule()]) == []
+
+
+def test_donation_read_after_donate_flagged():
+    src = DONATING + '''
+def caller(pool, v):
+    new = write(pool, v)
+    return pool.sum() + new.sum()
+'''
+    fs = lint_source(src, rules=[DonationAliasingRule()])
+    assert len(fs) == 1 and "'pool'" in fs[0].message
+    assert fs[0].symbol == "caller"
+
+
+def test_donation_attribute_target_and_self_field():
+    src = '''
+import jax
+
+class Engine:
+    def __init__(self, cache):
+        self.cache = cache
+        self._decode = jax.jit(lambda p, t, c: (p, c),
+                               donate_argnums=(2,))
+
+    def ok(self, p, t):
+        logits, self.cache = self._decode(p, t, self.cache)
+        return logits
+
+    def bad(self, p, t):
+        logits, fresh = self._decode(p, t, self.cache)
+        return logits, self.cache
+'''
+    fs = lint_source(src, rules=[DonationAliasingRule()])
+    assert len(fs) == 1 and fs[0].symbol == "Engine.bad"
+
+
+def test_donation_aliased_argument_positions_flagged():
+    src = DONATING + '''
+def caller(pool):
+    return write(pool, pool)
+'''
+    fs = lint_source(src, rules=[DonationAliasingRule()])
+    assert len(fs) == 1 and "aliased donation" in fs[0].message
+
+
+def test_donation_lower_is_not_a_call():
+    src = '''
+import jax
+
+def probe(fn, pool):
+    jitted = jax.jit(fn, donate_argnums=(0,))
+    print(jitted.lower(pool).as_text())
+    return pool.sum()
+'''
+    assert lint_source(src, rules=[DonationAliasingRule()]) == []
+
+
+def test_donation_sites_in_tree_are_clean():
+    """The audit of the tree's donate_argnums call sites (docs/LINTS.md):
+    every one rebinds in the calling statement or returns."""
+    mods = load_modules(SRC)
+    donating = [m.path for m in mods if "donate_argnums" in m.source]
+    assert len(donating) >= 6, donating       # the audited modules exist
+    fs = run_rules(mods, [DonationAliasingRule()])
+    assert fs == [], [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# dispatch-hygiene
+# ---------------------------------------------------------------------------
+
+def test_dispatch_probe_flagged_outside_dispatch_layer():
+    src = '''
+import jax
+
+def pick():
+    if jax.default_backend() == "tpu":
+        return "kernel"
+    return "ref"
+'''
+    fs = lint_source(src, path="repro/models/attention.py",
+                     rules=[DispatchHygieneRule()])
+    assert len(fs) == 1 and "jax.default_backend" in fs[0].message
+
+
+def test_dispatch_env_var_read_flagged():
+    src = '''
+import os
+
+def forced():
+    return os.environ.get("REPRO_FORCE_REF", "") == "1"
+'''
+    fs = lint_source(src, path="repro/models/x.py",
+                     rules=[DispatchHygieneRule()])
+    assert len(fs) == 1 and "REPRO_FORCE_REF" in fs[0].message
+
+
+def test_dispatch_allowed_in_dispatch_and_launch():
+    src = 'import jax\nBACKEND = jax.default_backend()\n'
+    for path in ("repro/kernels/dispatch.py", "repro/launch/dryrun.py"):
+        assert lint_source(src, path=path,
+                           rules=[DispatchHygieneRule()]) == []
+
+
+def test_attention_train_fix_regression():
+    """The pre-fix attention.py pattern fires; the checked-in fix routes
+    through kernels/dispatch and is quiet."""
+    old = '''
+import jax
+
+def attn_train(q, k, v):
+    if jax.default_backend() == "tpu":
+        return "flash"
+    return "dense"
+'''
+    assert lint_source(old, path="repro/models/attention.py",
+                       rules=[DispatchHygieneRule()]) != []
+    current = (SRC / "models" / "attention.py").read_text()
+    assert "resolve_interpret" in current
+    assert lint_source(current, path="repro/models/attention.py",
+                       rules=[DispatchHygieneRule()]) == []
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_item_in_jit_region():
+    src = '''
+import functools
+import jax
+
+@functools.partial(jax.jit)
+def step(x):
+    return x * x.sum().item()
+'''
+    fs = lint_source(src, rules=[HostSyncRule()])
+    assert len(fs) == 1 and ".item()" in fs[0].message
+
+
+def test_host_sync_hot_path_method_and_static_exemption():
+    src = '''
+class ServingEngine:
+    def step(self, logits, tok):
+        n = int(logits.shape[0])          # static: exempt
+        t = int(tok[0])                   # device read: flagged
+        return n + t
+'''
+    fs = lint_source(src, rules=[HostSyncRule()])
+    assert len(fs) == 1 and fs[0].line == 5
+
+
+def test_host_sync_quiet_outside_hot_contexts():
+    src = '''
+import numpy as np
+
+def offline_report(x):
+    return float(np.asarray(x).mean())
+'''
+    assert lint_source(src, rules=[HostSyncRule()]) == []
+
+
+def test_host_sync_lambda_passed_to_jit():
+    src = '''
+import jax
+
+decode = jax.jit(lambda p, c: jax.device_get(c), donate_argnums=(1,))
+'''
+    fs = lint_source(src, rules=[HostSyncRule()])
+    assert len(fs) == 1 and "device_get" in fs[0].message
+
+
+def test_host_sync_pragma_suppresses():
+    src = '''
+class ServingEngine:
+    def step(self, tok):
+        t = int(tok[0])  # replint: disable=host-sync
+        return t
+'''
+    assert lint_source(src, rules=[HostSyncRule()]) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel-triple
+# ---------------------------------------------------------------------------
+
+GOOD_OPS = '''
+from repro.kernels.dispatch import resolve_interpret
+
+def addone(x, y, *, interpret=None):
+    interpret = resolve_interpret(interpret)
+    return x + y
+'''
+GOOD_REF = '''
+def ref_addone(x, y, scale=1.0):
+    return (x + y) * scale
+'''
+GOOD_KERNEL = '''
+import jax.experimental.pallas as pl
+
+def addone_pallas(x, y, *, interpret=False):
+    grid = None
+    return pl.pallas_call(
+        lambda xr, yr, o: None,
+        grid=(4, 2),
+        in_specs=[pl.BlockSpec((8, 8), lambda i, j: (i, j)),
+                  pl.BlockSpec((8, 8), lambda i, j: (i, j))],
+        interpret=interpret,
+    )(x, y)
+'''
+
+
+def _fake_pkg(tmp_path, ops=GOOD_OPS, ref=GOOD_REF, kernel=GOOD_KERNEL,
+              name="addone"):
+    pkg = tmp_path / "kernels" / name
+    pkg.mkdir(parents=True)
+    files = {"ops.py": ops, "ref.py": ref, "kernel.py": kernel}
+    for fname, text in files.items():
+        if text is not None:
+            (pkg / fname).write_text(text)
+    return tmp_path                 # lint from above so paths keep kernels/
+
+
+def _lint_tree(root):
+    mods = load_modules(root)
+    return run_rules(mods, [KernelTripleRule()])
+
+
+def test_kernel_triple_good_package(tmp_path):
+    assert _lint_tree(_fake_pkg(tmp_path)) == []
+
+
+def test_kernel_triple_missing_ref(tmp_path):
+    fs = _lint_tree(_fake_pkg(tmp_path, ref=None))
+    assert len(fs) == 1 and "missing" in fs[0].message
+
+
+def test_kernel_triple_signature_mismatch(tmp_path):
+    fs = _lint_tree(_fake_pkg(
+        tmp_path, ref="def ref_addone(a, b):\n    return a + b\n"))
+    assert len(fs) == 1 and "oracle" in fs[0].message
+
+
+def test_kernel_triple_interpret_not_plumbed(tmp_path):
+    bad = GOOD_KERNEL.replace("        interpret=interpret,\n", "")
+    fs = _lint_tree(_fake_pkg(tmp_path, kernel=bad))
+    assert len(fs) == 1 and "pallas_call" in fs[0].message
+
+
+def test_kernel_triple_blockspec_arity(tmp_path):
+    bad = GOOD_KERNEL.replace("lambda i, j: (i, j)),\n", "lambda i: (i,)),\n",
+                              1)
+    fs = _lint_tree(_fake_pkg(tmp_path, kernel=bad))
+    assert len(fs) == 1 and "index map" in fs[0].message
+
+
+def test_kernel_triple_interpret_default_must_be_none(tmp_path):
+    bad = GOOD_OPS.replace("interpret=None", "interpret=False")
+    fs = _lint_tree(_fake_pkg(tmp_path, ops=bad))
+    assert len(fs) == 1 and "interpret=None" in fs[0].message
+
+
+def test_kernel_triple_real_tree_is_clean():
+    fs = run_rules(load_modules(SRC), [KernelTripleRule()])
+    assert fs == [], [f.render() for f in fs]
+
+
+# ---------------------------------------------------------------------------
+# driver: pragmas, baseline, whole-tree gate
+# ---------------------------------------------------------------------------
+
+def test_pragma_line_above():
+    src = '''
+class ServingEngine:
+    def step(self, tok):
+        # replint: disable=host-sync
+        t = int(tok[0])
+        return t
+'''
+    assert lint_source(src, rules=[HostSyncRule()]) == []
+
+
+def test_pragma_wrong_rule_does_not_suppress():
+    src = '''
+class ServingEngine:
+    def step(self, tok):
+        t = int(tok[0])  # replint: disable=lock-discipline
+        return t
+'''
+    assert len(lint_source(src, rules=[HostSyncRule()])) == 1
+
+
+def test_baseline_matches_independent_of_line(tmp_path):
+    f = Finding("host-sync", "repro/x.py", 10, 4, "msg", "C.m")
+    base = tmp_path / "base.json"
+    write_baseline(base, [f])
+    entries = json.loads(base.read_text())
+    assert entries == [{"rule": "host-sync", "path": "repro/x.py",
+                        "symbol": "C.m", "message": "msg"}]
+    shifted = Finding("host-sync", "repro/x.py", 99, 0, "msg", "C.m")
+    assert shifted.key() == f.key()
+
+
+def test_repo_tree_zero_unsuppressed():
+    """The gate itself: the shipped tree has zero unsuppressed findings
+    against the shipped (empty) baseline."""
+    result = run_lint(SRC, baseline=REPO / "scripts" /
+                      "replint_baseline.json")
+    assert result.files_checked > 80
+    assert result.findings == [], [f.render() for f in result.findings]
+    # the deliberate syncs are suppressed in-line, not baselined
+    assert result.baseline_matched == []
+    assert len(result.suppressed) >= 5
+    report = result.to_json()
+    assert report["ok"] and report["tool"] == "replint"
