@@ -59,4 +59,11 @@ echo "== batched staging smoke: strided slab commit + grouped prefill =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.smoke_classes --stage-batch 4
 
+echo "== decode-cohort smoke: paged KV + mid-flight admit/retire =="
+# five mixed-class requests against a 2-slot paged pool: continuous
+# batching must retire and admit mid-flight while survivors decode in
+# one batched cohort step, with tokens == the per-request oracle
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.smoke_classes --decode-cohort
+
 echo "OK: check passed"

@@ -473,6 +473,20 @@ class ExecutionPlan:
         (and per-class) ready wait, replacing inline staging."""
         return self._tabm_ring(slot_class).wait_ready(slot, timeout)
 
+    def addref(self, slot: int, gen: int, *,
+               slot_class: Optional[str] = None) -> bool:
+        """Pin an already-consumed TABM slot for one more bucket-matched
+        consumer (refcounted READY-slot sharing; see
+        :meth:`repro.core.tabm.RingBuffer.addref`).  False = the slot was
+        recycled, the caller must stage its own copy."""
+        return self._tabm_ring(slot_class).addref(slot, gen)
+
+    def shared_view(self, slot: int, gen: int, *,
+                    slot_class: Optional[str] = None):
+        """(view, n_tokens) of a shared consumed slot, seqlock-validated
+        against ``gen`` — None when the slot moved on."""
+        return self._tabm_ring(slot_class).shared_view(slot, gen)
+
     def release(self, slot: int, *, slot_class: Optional[str] = None):
         self._tabm_ring(slot_class).release(slot)
 

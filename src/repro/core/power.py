@@ -88,6 +88,14 @@ class Knobs:
     # depth scale is still at 0.5.  CRITICAL stages strictly one request
     # at a time.
     max_stage_batch: int = 1
+    # paged-KV admission hook: scale factor for per-class KV *block*
+    # budgets (core/scheduler.kv_block_budgets over the engine's
+    # PagedKVCache).  Same high-resolution-first shed order as
+    # class_depth_scale (core/slot_classes.shed_scales): under THROTTLED
+    # the hi-res classes' share of the paged decode pool shrinks first,
+    # so expensive long-context KV grants are shed while thumbnail
+    # requests keep admitting; CRITICAL zeroes the large classes' share.
+    class_kv_scale: float = 1.0
 
 
 @dataclass
@@ -131,11 +139,12 @@ class PowerPolicy:
                          backend_demotion="host" if a < 0.5 else None,
                          class_depth_scale=a,
                          max_stage_batch=max(1, int(
-                             self.full_stage_batch * max(0.0, 2 * a - 1))))
+                             self.full_stage_batch * max(0.0, 2 * a - 1))),
+                         class_kv_scale=a)
         return Knobs(1, admission_rate=0.0, frame_rate_hz=0.0,
                      mem_clock_scale=0.25, submesh_width=0.25, cascade=True,
                      backend_demotion="host", class_depth_scale=0.0,
-                     max_stage_batch=1)
+                     max_stage_batch=1, class_kv_scale=0.0)
 
 
 @dataclass

@@ -335,6 +335,34 @@ def class_staging_budgets(pool, in_flight: Dict[str, int],
     return budgets
 
 
+def kv_block_budgets(pool, total_blocks: int,
+                     used: Dict[Optional[str], int],
+                     kv_scale: float = 1.0) -> Dict[str, int]:
+    """Per-class paged-KV *block* budgets — staged-ahead depth charging
+    applied to decode memory.
+
+    The engine's :class:`~repro.serving.kv_cache.PagedKVCache` grants
+    each admitted request a run of fixed-size KV blocks; this table says
+    how many MORE blocks each slot class may be granted right now.  Each
+    class's cap is its share of the whole block pool under
+    ``core/power.Knobs.class_kv_scale``, shed high-resolution-first in
+    exactly the staged-ahead order (``core/slot_classes.shed_scales``):
+    at scale 1.0 every class may use the full pool (free-block count is
+    the only bound), under THROTTLED the largest class's cap shrinks
+    fully by the scale while the thumbnail class keeps the whole pool —
+    so long-context hi-res KV grants are the first decode-side load
+    shed, mirroring how ``class_staging_budgets`` sheds staging depth.
+
+    ``used``: blocks currently granted per class
+    (``PagedKVCache.used_blocks``); classes absent from it hold none."""
+    from repro.core.slot_classes import shed_scales
+    budgets = {}
+    for name, eff in shed_scales(pool.classes, kv_scale).items():
+        cap = max(0, min(total_blocks, int(total_blocks * eff)))
+        budgets[name] = max(0, cap - used.get(name, 0))
+    return budgets
+
+
 # ---------------------------------------------------------------------------
 # pod-mode hand-off (the TABM edge between submeshes)
 # ---------------------------------------------------------------------------

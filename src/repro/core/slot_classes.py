@@ -93,6 +93,24 @@ def build_slot_classes(cfg: ModelConfig, slots_per_class: int = 2
     return {c.name: c for c in classes}
 
 
+def shed_scales(names_ascending, scale: float) -> Dict[str, float]:
+    """Per-class effective scale factors under one battery scale in [0, 1]:
+    ``names_ascending`` is the class table in ascending slab order, the
+    largest class shrinks fully by ``scale``, the smallest keeps 1.0, and
+    intermediate classes interpolate linearly — high-resolution sheds
+    first.  This is THE shed ordering, shared by staged-ahead depth
+    scaling (``core/tabm.SlotClassPool.admission_table`` driven by
+    ``Knobs.class_depth_scale``) and paged-KV block budgeting
+    (``core/scheduler.kv_block_budgets`` driven by
+    ``Knobs.class_kv_scale``), so battery pressure degrades staging and
+    decode memory in the same class order."""
+    s = min(1.0, max(0.0, scale))
+    names = list(names_ascending)
+    K = len(names)
+    return {name: 1.0 - (1.0 - s) * (rank / (K - 1) if K > 1 else 0.0)
+            for rank, name in enumerate(names)}
+
+
 def classify(classes: Dict[str, SlotClass], n_tokens: int,
              n_images: int = 1) -> SlotClass:
     """Map a request's vision spec to the smallest class that holds it.

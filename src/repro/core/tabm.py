@@ -161,10 +161,15 @@ class RingBuffer:
         self.generation: List[int] = [0] * self.n_slots
         self._write_ptr = 0
         self._read_ptr = 0
+        # consumer refcount per slot: acquire_read pins with 1, addref
+        # pins further bucket-matched sharers; release drops the slot back
+        # to EMPTY only at zero, so one staged embedding can feed >1
+        # prefill (prefix/repeated-image reuse)
+        self.refs: List[int] = [0] * self.n_slots
         self._cond = threading.Condition()
         self._closed = False
         self.stats = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0,
-                      "slab_commits": 0}
+                      "slab_commits": 0, "shares": 0}
 
     # -- state machine (always called with self._cond held) -----------------
     def _transition(self, slot: int, to: int):
@@ -373,17 +378,51 @@ class RingBuffer:
                 return None
             self._transition(slot, CONSUMED)
             self._read_ptr = (slot + 1) % self.n_slots
+            self.refs[slot] = 1
             view = _read_slot(self.pool, jnp.asarray(slot))
             self.stats["reads"] += 1
             return slot, view, self.tokens[slot]
 
+    def addref(self, slot: int, gen: int) -> bool:
+        """Pin an already-CONSUMED slot for one more bucket-matched
+        consumer (the seqlock generation captured by the first consumer
+        must still match, i.e. the slot was not recycled).  Each addref
+        must be paired with one :meth:`release`; the slot returns to
+        EMPTY only when every holder has released.  Returns False when
+        the slot moved on — the caller stages its own copy instead."""
+        with self._cond:
+            if self.states[slot] != CONSUMED or self.generation[slot] != gen:
+                return False
+            self.refs[slot] += 1
+            self.stats["shares"] += 1
+            return True
+
+    def shared_view(self, slot: int, gen: int
+                    ) -> Optional[Tuple[jnp.ndarray, int]]:
+        """Zero-copy (view, n_tokens) of a CONSUMED slot for a sharing
+        holder (:meth:`addref`), or None when the slot was recycled
+        (generation mismatch) — the read-side twin of acquire_read that
+        does not advance the FIFO read pointer."""
+        with self._cond:
+            if self.states[slot] != CONSUMED or self.generation[slot] != gen:
+                return None
+            return (_read_slot(self.pool, jnp.asarray(slot)),
+                    self.tokens[slot])
+
     def release(self, slot: int):
         """Consumer returns a slot.  Only legal from CONSUMED — a producer
-        abandoning a write must use abort_write."""
+        abandoning a write must use abort_write.  With sharing
+        (:meth:`addref`) each release drops one reference; the slot stays
+        CONSUMED — generation untouched, other holders' views still
+        seqlock-valid — until the last holder releases."""
         with self._cond:
             if self.states[slot] != CONSUMED:
                 raise TABMError(f"release on slot {slot} in "
                                 f"{_STATE_NAMES[self.states[slot]]}")
+            self.refs[slot] -= 1
+            if self.refs[slot] > 0:
+                return
+            self.refs[slot] = 0
             self._transition(slot, EMPTY)
             self.tokens[slot] = 0
             self._cond.notify_all()
@@ -459,12 +498,14 @@ class RingBuffer:
                 if self.states[slot] == CONSUMED:
                     self._transition(slot, EMPTY)
                     self.tokens[slot] = 0
+                    self.refs[slot] = 0        # outstanding shares are void
                     drained += 1
             while self.states[self._read_ptr] == READY:
                 slot = self._read_ptr
                 self._transition(slot, CONSUMED)
                 self._transition(slot, EMPTY)
                 self.tokens[slot] = 0
+                self.refs[slot] = 0
                 self._read_ptr = (slot + 1) % self.n_slots
                 drained += 1
             self._cond.notify_all()
@@ -617,14 +658,10 @@ class SlotClassPool:
         ``depth_scale`` (down to 0 — fully gated), intermediate classes
         proportionally less, and the smallest class keeps its full depth,
         so thumbnails keep flowing while the battery drains."""
-        s = min(1.0, max(0.0, depth_scale))
-        names = list(self.classes)             # ascending slab order
-        K = len(names)
+        from repro.core.slot_classes import shed_scales
         table = {}
-        for rank, name in enumerate(names):
+        for name, eff in shed_scales(self.classes, depth_scale).items():
             base = self.max_ahead(name)
-            frac = rank / (K - 1) if K > 1 else 0.0
-            eff = 1.0 - (1.0 - s) * frac
             table[name] = (self._rings.get(name),
                            max(0, min(base, int(base * eff))))
         return table
@@ -645,7 +682,7 @@ class SlotClassPool:
     @property
     def stats(self) -> "dict[str, int]":
         agg = {"writes": 0, "reads": 0, "stalls": 0, "aborts": 0,
-               "slab_commits": 0}
+               "slab_commits": 0, "shares": 0}
         for r in self._rings.values():
             for k in agg:
                 agg[k] += r.stats[k]

@@ -14,8 +14,17 @@ commit (``slab_commit`` trace event + ring ``slab_commits`` stat) and at
 least one batch>1 grouped prefill (``prefill_batch``), with greedy tokens
 identical to the synchronous one-by-one oracle.
 
+``--decode-cohort`` runs the *continuous-batching decode* smoke: five
+mixed-class requests against a 2-slot paged KV pool, so the engine must
+retire and admit mid-flight while the survivors keep decoding in the
+same batched cohort step.  Asserts the acceptance evidence — a
+``decode_cohort`` trace of size > 1, at least one retirement before a
+later admission, >= 2 slot classes — and that every request's greedy
+tokens equal the request decoded alone in its own engine.
+
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-        python -m repro.launch.smoke_classes [--stage-batch 4]
+        python -m repro.launch.smoke_classes [--stage-batch 4 \
+                                             | --decode-cohort]
 """
 from __future__ import annotations
 
@@ -129,11 +138,72 @@ def _batched_staging_smoke(cfg, params, stage_batch: int) -> int:
     return 0
 
 
+def _decode_cohort_smoke(cfg, params) -> int:
+    from repro.serving.engine import Request, ServingEngine
+
+    def reqs():
+        out = []
+        for rid, (n_tok, n_img, n_new, plen) in enumerate(
+                [(8, 1, 6, 7), (2, 1, 3, 6), (32, 4, 5, 9),
+                 (2, 1, 4, 8), (8, 1, 3, 6)]):
+            rng = np.random.default_rng(rid)
+            out.append(Request(
+                rid=rid, tokens=(np.arange(plen) % 50 + 3).astype(np.int32),
+                n_images=n_img, max_new_tokens=n_new,
+                vision_feats=rng.standard_normal(
+                    (1, n_tok, cfg.vision_feat_dim)
+                ).astype(np.float32) * 0.02))
+        return out
+
+    batch = reqs()
+    with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                       block_size=32) as eng:
+        for r in batch:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 5, f"expected 5 finished, got {len(done)}"
+        for r in done:
+            assert r.error is None, f"request {r.rid} failed: {r.error!r}"
+        classes = {r.slot_class for r in batch}
+        assert len(classes) >= 2, f"expected >=2 classes, got {classes}"
+        events = [(e, k) for e, k, _ in eng.trace]
+        cohorts = [k for e, k in events if e == "decode_cohort"]
+        assert max(cohorts) > 1, f"never decoded a cohort >1: {cohorts}"
+        first_finish = next(i for i, (e, _) in enumerate(events)
+                            if e == "finish")
+        assert any(e == "prefill" and i > first_finish
+                   for i, (e, _) in enumerate(events)), (
+            "no mid-flight admission after the first retirement")
+        eng.slots.check_block_invariants()
+        cohort_tokens = {r.rid: r.out_tokens for r in done}
+        print(f"classes: {sorted(classes)}  cohort sizes: {sorted(set(cohorts))}")
+        print(f"paged pool: {eng.slots.n_blocks} blocks x "
+              f"{eng.slots.block_size} tok, all free again")
+
+    for ref in reqs():                         # the per-request oracle
+        with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                           block_size=32) as eng:
+            eng.submit(ref)
+            eng.run()
+            assert ref.error is None
+            assert cohort_tokens[ref.rid] == ref.out_tokens, (
+                f"request {ref.rid}: cohort decode changed greedy tokens\n"
+                f"  cohort: {cohort_tokens[ref.rid]}\n"
+                f"  alone:  {ref.out_tokens}")
+    print("OK: decode-cohort smoke passed (tokens == per-request oracle, "
+          "mid-flight admit/retire observed)")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description="class-partitioned TABM smoke")
     ap.add_argument("--stage-batch", type=int, default=1,
                     help="staging microbatch; >1 runs the batched-staging "
                          "smoke (strided slab commit + grouped prefill)")
+    ap.add_argument("--decode-cohort", action="store_true",
+                    help="run the continuous-batching decode smoke "
+                         "(paged KV, mid-flight admit/retire, per-request "
+                         "oracle equivalence)")
     args = ap.parse_args(argv)
 
     import jax
@@ -142,6 +212,8 @@ def main(argv=None) -> int:
 
     cfg = get_config("llava-onevision-0.5b").reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
+    if args.decode_cohort:
+        return _decode_cohort_smoke(cfg, params)
     if args.stage_batch > 1:
         return _batched_staging_smoke(cfg, params, args.stage_batch)
     return _mixed_class_smoke(cfg, params)

@@ -68,6 +68,25 @@ Other paper mechanisms wired in:
 * **static shapes** — prompts bucket-pad (kv_cache.bucket_length): one
   compiled prefill per bucket, one compiled decode step, never recompiled.
 
+Decode is a **cohort step** over a **paged KV pool**
+(kv_cache.PagedKVCache): every in-flight request joins one batched jit
+decode call — padded to a small set of cohort-size buckets (powers of
+two, one compile each) — that gathers each row's context through its
+block table and scatters the new K/V back into its granted blocks.
+Admission *grants* each request the KV blocks its lifetime needs,
+charged per slot class (core/scheduler.kv_block_budgets) exactly like
+staged-ahead depth, and the battery knob ``class_kv_scale`` sheds the
+high-resolution classes' block share first under THROTTLED.  A
+finishing request's blocks return to the free pool the same step
+(continuous batching: the next staged request can admit mid-flight,
+while everyone else's rows decode on undisturbed).
+
+Staged TABM slots are **shared**: two requests submitting identical
+vision bytes (same class, same content hash) stage ONCE — the second
+takes a refcounted read view of the first's READY slot
+(core/tabm.addref/shared_view) and the slab frees only when the last
+holder releases.
+
 Metrics mirror the paper's evaluation: tokens/s, end-to-end latency
 (submit -> finish), modeled energy, memory (pool + weights).  ``trace``
 records the producer/consumer interleaving ((event, rid, t) tuples) —
@@ -75,6 +94,7 @@ the overlap evidence the async tests assert on.
 """
 from __future__ import annotations
 
+import hashlib
 import queue
 import threading
 import time
@@ -91,10 +111,10 @@ from repro.configs.base import ModelConfig
 from repro.core.bricks import decompose
 from repro.core.plan import compile_plan
 from repro.core.power import BatteryAwareExecutor, PMU, PowerState
-from repro.core.scheduler import class_staging_budgets
+from repro.core.scheduler import class_staging_budgets, kv_block_budgets
 from repro.core.tabm import SlotClassPool, TABMError
 from repro.models import model as M
-from repro.serving.kv_cache import SlotCache, bucket_length
+from repro.serving.kv_cache import PagedKVCache, SlotCache, bucket_length
 from repro.serving.sampling import sample
 
 EOS_ID = 1
@@ -124,6 +144,12 @@ class Request:
                                                # (cross-class KV reservation
                                                # once >= engine.aging_steps)
     error: Optional[BaseException] = None      # staging/engine failure
+    # staged-slab sharing: identical vision bytes stage once.  share_of
+    # points at the request that owns the staging; the owner's sharers
+    # list is granted refcounted views of its slot at bind time
+    share_of: Optional["Request"] = None
+    sharers: List["Request"] = field(default_factory=list, repr=False)
+    _share_key: Optional[tuple] = None
     _tabm_gen: Optional[int] = None            # seqlock gen at consume
     _staged_ev: threading.Event = field(default_factory=threading.Event,
                                         repr=False)
@@ -341,12 +367,24 @@ class ServingEngine:
                  rng_seed: int = 0, async_staging: bool = True,
                  placement=None, accels=None, backend=None,
                  stage_batch: Optional[int] = None,
-                 aging_steps: int = 32):
+                 aging_steps: int = 32, block_size: int = 64,
+                 kv_blocks: Optional[int] = None,
+                 max_cohort: Optional[int] = None,
+                 share_staged: bool = True):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
-        self.slots = SlotCache(cfg, n_slots, max_len)
+        # paged decode pool: kv_blocks < n_slots*blocks_per_slot
+        # oversubscribes slots against KV memory; admission grants per
+        # request, per class (kv_block_budgets)
+        self.slots = PagedKVCache(cfg, n_slots, max_len,
+                                  block_size=block_size,
+                                  total_blocks=kv_blocks)
         self.max_len = max_len
+        # cohort cap (None = every live slot decodes each step); when
+        # capped, a rotating pointer keeps the excluded rows fair
+        self.max_cohort = max_cohort
+        self._rotate = 0
         self.executor = executor or BatteryAwareExecutor(PMU())
         # staging microbatch override; None = min(arch max_stage_batch,
         # battery Knobs.max_stage_batch), always clamped to ring capacity
@@ -412,9 +450,11 @@ class ServingEngine:
         self._closed = False
 
         self._prefill_cache: Dict[int, Any] = {}
-        self._decode = jax.jit(
-            lambda p, t, c: M.lm_decode_step(p, cfg, t, c),
-            donate_argnums=(2,))
+        # one compiled cohort decode step per cohort-size bucket
+        self._cohort_cache: Dict[int, Any] = {}
+        # staged-slab dedup registry: share key -> owning request
+        self.share_staged = bool(share_staged and self.tabm is not None)
+        self._stage_keys: Dict[tuple, Request] = {}
 
     # -- public api ----------------------------------------------------------
     def submit(self, req: Request):
@@ -430,6 +470,19 @@ class ServingEngine:
                 int(np.asarray(req.vision_feats).shape[1]), req.n_images)
         else:
             self.tabm.ring(req.slot_class)     # unknown class fails fast
+        if self.share_staged and req.vision_feats is not None:
+            # staged-slab dedup: identical vision bytes (class + shape +
+            # content hash) stage once; later twins take refcounted read
+            # views of the owner's slot at bind time (_grant_shares)
+            key = self._stage_key(req)
+            req._share_key = key
+            owner = self._stage_keys.get(key)
+            if (owner is not None and owner.error is None
+                    and owner.finish_t is None):
+                req.share_of = owner
+                owner.sharers.append(req)
+            else:
+                self._stage_keys[key] = req
         self.queue.append(req)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -480,9 +533,24 @@ class ServingEngine:
     def _trace_event(self, event: str, rid: int):
         self.trace.append((event, rid, time.monotonic()))
 
+    def _stage_key(self, req: Request) -> tuple:
+        """Dedup identity of a request's staged vision: class + slab
+        shape + dtype + content hash — equal keys would commit
+        byte-identical slabs, so one commit can serve all of them."""
+        feats = np.asarray(req.vision_feats)
+        return (req.slot_class, feats.shape, str(feats.dtype),
+                hashlib.sha1(feats.tobytes()).hexdigest())
+
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_cache:
             cfg = self.cfg
+            # prefilled caches are written straight into granted KV
+            # blocks (insert_many), so the cache width must be
+            # block-aligned — the prompt bucket rounded up, NOT max_len:
+            # a short prompt's prefill touches only the blocks its
+            # grant actually covers
+            bs = self.slots.block_size
+            decode_len = -(-bucket // bs) * bs
 
             def fn(p, tokens, vision_embeds, last_idx):
                 """Right-padded bucket prefill; logits read at the true
@@ -503,7 +571,7 @@ class ServingEngine:
                 from repro.models import decoder as dec
                 x, caches, _ = dec.stack_forward(
                     p["layers"], cfg, x, rope_fn, causal=True,
-                    want_cache=True, decode_len=self.max_len, remat=False)
+                    want_cache=True, decode_len=decode_len, remat=False)
                 x_last = jnp.take_along_axis(
                     x, (last_idx - 1)[:, None, None].astype(jnp.int32), 1)
                 logits = M._head(p, cfg, x_last)
@@ -511,6 +579,82 @@ class ServingEngine:
 
             self._prefill_cache[bucket] = jax.jit(fn)
         return self._prefill_cache[bucket]
+
+    def _cohort_bucket(self, n: int) -> int:
+        """Pad the cohort to the next power of two (capped at n_slots):
+        a handful of compiled step sizes instead of one per live count."""
+        return min(1 << max(0, n - 1).bit_length(), self.slots.n_slots)
+
+    def _cohort_slots(self) -> List[int]:
+        """The slots decoding this step.  Uncapped: every live slot —
+        ONE batched call serves the whole fleet.  Capped (max_cohort): a
+        rotating window so excluded rows are never starved."""
+        slots = sorted(self.live)
+        if self.max_cohort is not None and len(slots) > self.max_cohort:
+            k = self._rotate % len(slots)
+            slots = (slots[k:] + slots[:k])[: self.max_cohort]
+            self._rotate += self.max_cohort
+        return slots
+
+    def _cohort_fn(self, bc: int):
+        """The compiled cohort decode step for cohort-size bucket `bc`:
+        gather each row's context from the paged pool through its block
+        table — (bc, W) ids -> (G, bc, W*block_size, ...) — run ONE
+        ``lm_decode_step`` over the cohort (per-row lengths as the
+        index vector; rows are independent, so each decodes exactly as
+        it would alone), then scatter the one new K/V position back
+        into each row's current block and the updated slot state back
+        by slot id.  Padded rows carry sentinel ids: gathers fill
+        zeros (masked by length 0), scatters drop — padding costs no
+        host branching and writes nothing."""
+        if bc not in self._cohort_cache:
+            cfg = self.cfg
+            paged = self.slots.paged
+            bs = self.slots.block_size
+            W = self.slots.blocks_per_slot
+
+            def fn(p, tokens, lengths, slot_ids, tables, pool):
+                layers = []
+                for pos, is_paged in enumerate(paged):
+                    if is_paged:
+                        layers.append(jax.tree.map(
+                            lambda l: jnp.take(
+                                l, tables, axis=1, mode="fill",
+                                fill_value=0).reshape(
+                                    (l.shape[0], bc, W * bs)
+                                    + l.shape[3:]),
+                            pool[pos]))
+                    else:
+                        layers.append(jax.tree.map(
+                            lambda l: jnp.take(l, slot_ids, axis=1,
+                                               mode="fill", fill_value=0),
+                            pool[pos]))
+                cache = {"layers": tuple(layers), "index": lengths}
+                logits, new = M.lm_decode_step(p, cfg, tokens, cache)
+                # the block holding each row's newly written position
+                blk = jnp.take_along_axis(
+                    tables, (lengths // bs)[:, None], axis=1)[:, 0]
+                off = lengths % bs
+                out = []
+                for pos, is_paged in enumerate(paged):
+                    if is_paged:
+                        def scat(l, nl):
+                            idx = lengths.reshape(
+                                (1, bc) + (1,) * (nl.ndim - 2))
+                            row = jnp.take_along_axis(nl, idx, axis=2)
+                            return l.at[:, blk, off].set(
+                                row[:, :, 0].astype(l.dtype), mode="drop")
+                        out.append(jax.tree.map(
+                            scat, pool[pos], new["layers"][pos]))
+                    else:
+                        out.append(jax.tree.map(
+                            lambda l, nl: l.at[:, slot_ids].set(
+                                nl.astype(l.dtype), mode="drop"),
+                            pool[pos], new["layers"][pos]))
+                return logits, tuple(out)
+
+            self._cohort_cache[bc] = jax.jit(fn, donate_argnums=(5,))
+        return self._cohort_cache[bc]
 
     def _stage(self, depth_scale: float = 1.0):
         """Synchronous fallback producer (``async_staging=False``): run the
@@ -527,7 +671,8 @@ class ServingEngine:
         table = self.tabm.admission_table(depth_scale)
         stalled: set = set()                   # classes FULL this pass
         for req in self.queue:
-            if req.staged or req.vision_feats is None:
+            if req.staged or req.vision_feats is None \
+                    or req.share_of is not None:
                 continue
             if req.slot_class in stalled:      # keep FIFO within the class
                 continue
@@ -605,7 +750,8 @@ class ServingEngine:
             knobs.class_depth_scale, stage_batch=global_cap)
         groups: Dict[str, List[Request]] = {}
         for req in self.queue:
-            if req.staged or req.stage_submitted or req.vision_feats is None:
+            if req.staged or req.stage_submitted \
+                    or req.vision_feats is None or req.share_of is not None:
                 continue
             # budgets are already microbatch- and ring-capacity-capped
             if len(groups.get(req.slot_class, ())) >= \
@@ -629,6 +775,17 @@ class ServingEngine:
         stayed valid across the prefill."""
         if req.tabm_slot is None:
             return None
+        if req.share_of is not None:
+            # refcounted read view of the owner's consumed slot — the
+            # slab was staged once, this request never touched the ring
+            got = self.plan.shared_view(req.tabm_slot, req._tabm_gen,
+                                        slot_class=req.slot_class)
+            if got is None:
+                raise TABMError(
+                    f"shared slot {req.tabm_slot} ({req.slot_class}) "
+                    f"recycled before request {req.rid} bound its view")
+            view, n = got
+            return view[None, :n]
         # normally immediate — admission only runs once `staged` is set,
         # which the worker sets strictly after commit — but this is the
         # formal consumer-side gate (and the blocking point if admission
@@ -648,9 +805,44 @@ class ServingEngine:
                 f"{req.slot_class} (per-class FIFO order broken)")
         slot, view, n = got
         req._tabm_gen = self._ring_of(req).slot_generation(slot)
+        self._grant_shares(req, slot)
         return view[None, :n]
 
+    def _grant_shares(self, owner: Request, slot: int):
+        """The owner's slab just got consumed: grant every waiting twin
+        a refcounted view of the same slot (tabm.addref) so they admit
+        without ever staging.  A twin the addref misses (slot already
+        on its way out) falls back to staging privately."""
+        if owner._share_key is not None and \
+                self._stage_keys.get(owner._share_key) is owner:
+            self._stage_keys.pop(owner._share_key)
+        for s in owner.sharers:
+            if (s.error is not None or s.finish_t is not None
+                    or s.share_of is not owner):
+                continue
+            if self.plan.addref(slot, owner._tabm_gen,
+                                slot_class=owner.slot_class):
+                s.tabm_slot = slot
+                s._tabm_gen = owner._tabm_gen
+                s._staged_ev.set()         # admissible, no staging needed
+                self._trace_event("stage_share", s.rid)
+            else:
+                s.share_of = None          # stage privately instead
+        owner.sharers = []
+
+    def _unshare(self, req: Request):
+        """A request leaves the dedup registry (failed or shut down):
+        sharers not yet granted a view go back to staging privately."""
+        if req._share_key is not None and \
+                self._stage_keys.get(req._share_key) is req:
+            self._stage_keys.pop(req._share_key)
+        for s in req.sharers:
+            if s.share_of is req and s.tabm_slot is None:
+                s.share_of = None
+        req.sharers = []
+
     def _fail(self, req: Request):
+        self._unshare(req)
         req.finish_t = req.finish_t or time.time()
         self.stats.failed += 1
         self._trace_event("failed", req.rid)
@@ -691,17 +883,40 @@ class ServingEngine:
         return not (self.tabm is not None and req.vision_feats is not None
                     and not req.staged)
 
-    def _collect_group(self, i: int, max_n: int) -> List[Request]:
+    def _block_need(self, req: Request) -> int:
+        """KV blocks this request's lifetime needs: the block-aligned
+        prompt bucket (the prefill writes that many), grown to cover
+        max_new_tokens of decode, capped at a full slot's worth."""
+        bs = self.slots.block_size
+        bucket = bucket_length(len(req.tokens), buckets=self._buckets())
+        aligned = -(-bucket // bs) * bs
+        want = max(aligned,
+                   min(self.max_len, len(req.tokens) + req.max_new_tokens))
+        return min(self.slots.blocks_per_slot, -(-want // bs))
+
+    def _collect_group(self, i: int, max_n: int,
+                       kv_budget: Optional[int] = None) -> List[Request]:
         """Pop the maximal run of *consecutive* bucket-matched admissible
         requests starting at queue position i (consecutive, so per-class
-        ring-FIFO consume order and overall admission FIFO both hold)."""
+        ring-FIFO consume order and overall admission FIFO both hold).
+        The run also stops where its cumulative KV-block need would
+        outrun the free pool (or the class's battery-scaled block
+        budget) — the caller admits what fits, the rest keeps FIFO."""
         key = self._group_key(self.queue[i])
+        blocks_left = self.slots.free_block_count
+        if kv_budget is not None:
+            blocks_left = min(blocks_left, kv_budget)
+        blocks_left -= self._block_need(self.queue[i])
         j = i + 1
         while j < len(self.queue) and j - i < max_n:
             nxt = self.queue[j]
             if (nxt.error is not None or not self._admissible(nxt)
                     or self._group_key(nxt) != key):
                 break
+            need = self._block_need(nxt)
+            if need > blocks_left:
+                break
+            blocks_left -= need
             j += 1
         group = self.queue[i:j]
         del self.queue[i:j]
@@ -723,11 +938,15 @@ class ServingEngine:
         compiled call."""
         taken: List[int] = []
         try:
-            for _ in group:
+            for req in group:
                 slot = self.slots.take_slot()
                 if slot is None:               # sized by the caller; defensive
                     raise RuntimeError("KV slots exhausted mid-group")
                 taken.append(slot)
+                # the lifetime block grant, charged to the class — the
+                # caller (_collect_group) sized the group to fit
+                self.slots.grant_blocks(slot, self._block_need(req),
+                                        slot_class=req.slot_class)
             B = len(group)
             bucket = self._group_key(group[0])[0]
             padded = np.zeros((B, bucket), np.int32)
@@ -811,6 +1030,15 @@ class ServingEngine:
         budget = min(len(self.slots.free), knobs.max_batch)
         if not power_ok:
             budget = 0
+        # per-class KV *block* budgets, battery-scaled exactly like the
+        # staging depth (shed_scales): under THROTTLED the hi-res
+        # classes' share of the paged pool shrinks first, so expensive
+        # long-context grants are shed while thumbnails keep admitting
+        kv_budgets = None
+        if self.tabm is not None:
+            kv_budgets = kv_block_budgets(
+                self.tabm, self.slots.n_blocks, self.slots.used_blocks,
+                knobs.class_kv_scale)
         # cross-class aging: classes of requests that have waited out
         # aging_steps admission rounds while skipped (class stalled or
         # slow); each holds one KV-slot reservation that newer requests
@@ -870,7 +1098,29 @@ class ServingEngine:
                 req.aging += 1
                 i += 1                         # reserved: skip, keep position
                 continue
-            group = self._collect_group(i, min(budget, avail))
+            # paged-KV admission: the head's lifetime block need must fit
+            # the class's battery-scaled share (hi-res classes shed
+            # first) AND the free pool; a gated head keeps its FIFO
+            # position — blocks freed by any finishing request are
+            # grantable the very next round (continuous batching)
+            need = self._block_need(req)
+            kv_cap = (kv_budgets.get(req.slot_class)
+                      if kv_budgets is not None
+                      and req.vision_feats is not None else None)
+            if kv_cap is not None and need > kv_cap:
+                stalled.add(req.slot_class)    # keep class FIFO
+                req.aging += 1
+                self._trace_event("kv_gated", req.rid)
+                i += 1
+                continue
+            if need > self.slots.free_block_count:
+                if req.vision_feats is not None:
+                    stalled.add(req.slot_class)
+                req.aging += 1
+                i += 1
+                continue
+            group = self._collect_group(i, min(budget, avail),
+                                        kv_budget=kv_cap)
             budget -= len(group)
             self._admit_group(group)
             # queue shrank at position i: the next candidate is at i again
@@ -910,24 +1160,42 @@ class ServingEngine:
         if not self.live:
             self.stats.steps += 1
             return
-        # batched decode over ALL slots (inactive ones masked out)
-        tokens = np.zeros((self.slots.n_slots, 1), np.int32)
-        for slot, req in self.live.items():
-            tokens[slot, 0] = req.out_tokens[-1]
-        logits, self.slots.cache = self._decode(
-            self.params, jnp.asarray(tokens), self.slots.cache)
+        # cohort decode: every in-flight request rides ONE batched jit
+        # step, padded to a power-of-two cohort bucket (sentinel rows:
+        # gathers fill, scatters drop).  Rows are independent, so a
+        # request admitted or retired between steps never perturbs the
+        # others' tokens — mid-flight continuous batching
+        cohort = self._cohort_slots()
+        bc = self._cohort_bucket(len(cohort))
+        tokens = np.zeros((bc, 1), np.int32)
+        lengths = np.zeros((bc,), np.int32)
+        slot_ids = np.full((bc,), self.slots.n_slots, np.int32)
+        tables = np.full((bc, self.slots.blocks_per_slot),
+                         self.slots.n_blocks, np.int32)
+        tables[:len(cohort)] = self.slots.gather_tables(cohort)
+        for b, slot in enumerate(cohort):
+            req = self.live[slot]
+            tokens[b, 0] = req.out_tokens[-1]
+            lengths[b] = self.slots.lengths[slot]
+            slot_ids[b] = slot
+        logits, self.slots.pool = self._cohort_fn(bc)(
+            self.params, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(slot_ids), jnp.asarray(tables), self.slots.pool)
         self.stats.steps += 1
         self._trace_event("decode_step", self.stats.steps)
+        self._trace_event("decode_cohort", len(cohort))
 
         finished = []
-        for slot, req in list(self.live.items()):
-            tok = self._pick(logits[slot:slot + 1], req)
+        for b, slot in enumerate(cohort):
+            req = self.live[slot]
+            tok = self._pick(logits[b:b + 1], req)
             # deliberate per-token sampling read: the sampled id feeds the
             # next step's host-side token buffer and EOS check
             t = int(tok[0])  # replint: disable=host-sync
             req.out_tokens.append(t)
+            self.slots.bump(slot)
             self.stats.decoded_tokens += 1
-            over_len = int(self.slots.lengths[slot]) + 1 >= self.max_len  # replint: disable=host-sync
+            over_len = self.slots.lengths[slot] + 1 >= self.max_len
             if (t == EOS_ID or len(req.out_tokens) >= req.max_new_tokens
                     or over_len):
                 req.finish_t = time.time()
@@ -935,6 +1203,8 @@ class ServingEngine:
         for slot in finished:
             req = self.live.pop(slot)
             self.done.append(req)
+            # the retiring request's KV blocks return to the free pool
+            # NOW — grantable to the next admission round, mid-flight
             self.slots.release(slot)
             self.stats.finished += 1
             self._trace_event("finish", req.rid)

@@ -1,0 +1,395 @@
+"""Continuous-batching decode cohort over paged, class-aware KV (PR 6).
+
+The decode-equivalence battery the issue asks for:
+
+* **cohort == per-request oracle** — greedy tokens from the batched
+  cohort decode (mixed slot classes, mid-flight admissions and
+  retirements against a 2-slot pool) are identical to each request
+  decoded alone in its own engine;
+* **paged block allocator invariants** (hypothesis) — random
+  take/grant/release schedules never double-grant a block, never orphan
+  one, and conserve the free count; ``insert_many``'s strided writes
+  land in the owner's granted blocks ONLY;
+* **refcounted READY slots** — two requests with identical vision bytes
+  stage ONCE (one ring write, one ``shares`` grant) and decode exactly
+  like private copies; a shared slot frees only when the last holder
+  releases;
+* **battery-aware KV shed** — THROTTLED shrinks the hi-res classes'
+  block budgets first (``kv_block_budgets`` + engine admission), and
+  restores them when charge recovers;
+* **free-list fix** — ``SlotCache.free`` is a deque (O(1) ``popleft``,
+  not ``list.pop(0)``) and still hands slots out FIFO.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from hypothesis import given, strategies as hst
+
+from repro.configs import get_config
+from repro.core.power import BatteryAwareExecutor, PMU
+from repro.core.scheduler import kv_block_budgets
+from repro.core.slot_classes import shed_scales
+from repro.core.tabm import CONSUMED, EMPTY, RingBuffer, SlotClassPool
+from repro.launch.steps import init_params
+from repro.models import decoder as dec
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.kv_cache import PagedKVCache, SlotCache
+
+
+@pytest.fixture(scope="module")
+def vlm():
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def lm_cfg():
+    return get_config("stablelm-1.6b").reduced()
+
+
+def _req(cfg, rid, n_tokens, n_images=1, n_new=4, seed=0, prompt_len=None):
+    rng = np.random.default_rng(seed + rid)
+    plen = prompt_len if prompt_len is not None else 6 + (rid % 3)
+    return Request(
+        rid=rid, tokens=(np.arange(plen) % 50 + 3).astype(np.int32),
+        n_images=n_images, max_new_tokens=n_new,
+        vision_feats=rng.standard_normal(
+            (1, n_tokens, cfg.vision_feat_dim)).astype(np.float32) * 0.02)
+
+
+# ---------------------------------------------------------------------------
+# headline: cohort decode == per-request oracle, with mid-flight churn
+# ---------------------------------------------------------------------------
+
+def test_cohort_matches_per_request_oracle(vlm):
+    """Five mixed-class requests through a 2-slot engine: the pool is
+    oversubscribed, so requests retire and admit mid-flight while
+    others keep decoding in the same cohort step.  Every request's
+    greedy tokens must equal the request decoded alone."""
+    cfg, params = vlm
+
+    def reqs():
+        return [
+            _req(cfg, 0, 8, n_images=1, n_new=6, prompt_len=7),
+            _req(cfg, 1, 2, n_images=1, n_new=3, prompt_len=6),
+            _req(cfg, 2, 32, n_images=4, n_new=5, prompt_len=9),
+            _req(cfg, 3, 2, n_images=1, n_new=4, prompt_len=8),
+            _req(cfg, 4, 8, n_images=1, n_new=3, prompt_len=6),
+        ]
+
+    batch = reqs()
+    with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                       block_size=32) as eng:
+        for r in batch:
+            eng.submit(r)
+        done = eng.run()
+        assert len(done) == 5 and all(r.error is None for r in done)
+        assert len({r.slot_class for r in batch}) >= 2, (
+            f"battery needs >=2 slot classes, got "
+            f"{[r.slot_class for r in batch]}")
+        events = [(e, k) for e, k, _ in eng.trace]
+        cohorts = [k for e, k in events if e == "decode_cohort"]
+        assert max(cohorts) > 1, f"never decoded a cohort >1: {cohorts}"
+        # mid-flight churn: some retirement precedes some admission
+        first_finish = events.index(("finish", done[0].rid))
+        later_prefills = [i for i, (e, _) in enumerate(events)
+                          if e == "prefill" and i > first_finish]
+        assert later_prefills, (
+            "no admission after the first retirement — the pool never "
+            f"churned mid-flight: {events}")
+        cohort_tokens = {r.rid: r.out_tokens for r in done}
+
+    for ref in reqs():
+        with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                           block_size=32) as eng:
+            eng.submit(ref)
+            done = eng.run()
+            assert done[0].error is None
+            assert cohort_tokens[ref.rid] == ref.out_tokens, (
+                f"request {ref.rid}: cohort decode changed greedy tokens\n"
+                f"  cohort: {cohort_tokens[ref.rid]}\n"
+                f"  alone:  {ref.out_tokens}")
+
+
+def test_mid_flight_blocks_recycle(vlm):
+    """A finishing request's KV blocks are free the same step — the next
+    request's grant reuses them (block ids overlap)."""
+    cfg, params = vlm
+    with ServingEngine(cfg, params, n_slots=1, max_len=128,
+                       block_size=32) as eng:
+        a, b = _req(cfg, 0, 2, n_new=3), _req(cfg, 1, 2, n_new=3, seed=50)
+        eng.submit(a)
+        eng.submit(b)
+        seen = {}
+        for _ in range(60):
+            for slot, req in eng.live.items():
+                seen[req.rid] = list(eng.slots.block_tables[slot])
+            if not (eng.queue or eng.live):
+                break
+            eng.step()
+        assert a.error is None and b.error is None
+        assert set(seen[0]) & set(seen[1]), (
+            f"freed blocks were not recycled: {seen}")
+        assert eng.slots.free_block_count == eng.slots.n_blocks
+        eng.slots.check_block_invariants()
+
+
+# ---------------------------------------------------------------------------
+# paged block allocator: property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _tiny_pool(cfg, n_slots=4, max_len=64, block_size=16):
+    return PagedKVCache(cfg, n_slots, max_len, block_size=block_size)
+
+
+@given(ops=hst.lists(hst.tuples(hst.integers(0, 2), hst.integers(0, 7)),
+                     max_size=40))
+def test_block_allocator_invariants(ops):
+    """Random take/grant/release schedules: no double grant, no orphan,
+    free-count conservation, class charges match the tables — after
+    EVERY op (``check_block_invariants``)."""
+    cfg = get_config("stablelm-1.6b").reduced()
+    kv = _tiny_pool(cfg)
+    classes = ("thumb", "hi")
+    live = []
+    for op, v in ops:
+        if op in (0, 2) and kv.free:           # admit: slot + lifetime grant
+            need = 1 + v % kv.blocks_per_slot
+            slot = kv.take_slot()
+            if need <= kv.free_block_count:
+                kv.grant_blocks(slot, need, slot_class=classes[v % 2])
+                live.append(slot)
+            else:                              # grant refused atomically
+                with pytest.raises(RuntimeError):
+                    kv.grant_blocks(slot, need, slot_class=classes[v % 2])
+                kv.release(slot)
+        elif op == 1 and live:                 # retire: blocks free NOW
+            slot = live.pop(v % len(live))
+            freed = len(kv.block_tables[slot])
+            before = kv.free_block_count
+            kv.release(slot)
+            assert kv.free_block_count == before + freed
+        kv.check_block_invariants()
+    total_granted = sum(len(t) for t in kv.block_tables.values())
+    assert total_granted + kv.free_block_count == kv.n_blocks
+
+
+def test_double_grant_raises(lm_cfg):
+    kv = _tiny_pool(lm_cfg)
+    slot = kv.take_slot()
+    kv.grant_blocks(slot, 2)
+    with pytest.raises(RuntimeError):
+        kv.grant_blocks(slot, 1)               # one grant per residency
+    kv.release(slot)
+    kv.check_block_invariants()
+
+
+def test_insert_many_writes_only_owner_blocks(lm_cfg):
+    """The strided block scatter lands each request's prefill in ITS
+    granted blocks and nowhere else — ungranted blocks stay zero."""
+    cfg = lm_cfg
+    kv = _tiny_pool(cfg)                       # 16 blocks of 16 tokens
+    bs = kv.block_size
+    s0, s1 = kv.take_slot(), kv.take_slot()
+    kv.grant_blocks(s0, 2, slot_class="a")
+    kv.grant_blocks(s1, 2, slot_class="b")
+    # fake block-aligned prefill (K=2, S=2 blocks): row b holds b+1
+    layers = jax.tree.map(
+        lambda l: jnp.broadcast_to(
+            jnp.arange(1, 3, dtype=l.dtype).reshape(
+                (1, 2) + (1,) * (l.ndim - 2)), l.shape),
+        dec.init_cache(cfg, 2, 2 * bs))
+    kv.insert_many([s0, s1], {"layers": layers}, [5, 9])
+    assert int(kv.lengths[s0]) == 5 and int(kv.lengths[s1]) == 9
+    owned = {s0: 1.0, s1: 2.0}
+    for pos, is_paged in enumerate(kv.paged):
+        if not is_paged:
+            continue
+        for leaf in jax.tree.leaves(kv.pool[pos]):
+            got = np.asarray(leaf, np.float32)
+            for slot, val in owned.items():
+                for blk in kv.block_tables[slot]:
+                    assert np.all(got[:, blk] == val), (
+                        f"slot {slot}'s value missing from its block {blk}")
+            granted = {b for t in kv.block_tables.values() for b in t}
+            for blk in range(kv.n_blocks):
+                if blk not in granted:
+                    assert np.all(got[:, blk] == 0.0), (
+                        f"write leaked into ungranted block {blk}")
+    kv.check_block_invariants()
+
+
+def test_insert_many_requires_block_aligned_and_granted(lm_cfg):
+    cfg = lm_cfg
+    kv = _tiny_pool(cfg)
+    bs = kv.block_size
+    slot = kv.take_slot()
+    kv.grant_blocks(slot, 1)
+    layers = dec.init_cache(cfg, 1, bs + 1)    # misaligned width
+    with pytest.raises(RuntimeError):
+        kv.insert_many([slot], {"layers": layers}, [3])
+    layers = dec.init_cache(cfg, 1, 2 * bs)    # wider than the grant
+    with pytest.raises(RuntimeError):
+        kv.insert_many([slot], {"layers": layers}, [3])
+
+
+# ---------------------------------------------------------------------------
+# refcounted READY slots: stage once, feed many
+# ---------------------------------------------------------------------------
+
+def test_ring_refcount_frees_at_zero():
+    rb = RingBuffer(n_slots=2, max_tokens=8, dim=16)
+    s = rb.acquire_write()
+    rb.commit_write(s, jnp.ones((3, 16)))
+    slot, view, n = rb.acquire_read()
+    gen = rb.slot_generation(slot)
+    assert rb.addref(slot, gen)                # second holder
+    assert rb.stats["shares"] == 1
+    shared = rb.shared_view(slot, gen)
+    assert shared is not None and shared[1] == 3
+    rb.release(slot)                           # 2 -> 1: stays CONSUMED
+    assert rb.states[slot] == CONSUMED
+    assert rb.view_valid(slot, gen)            # survivors' views stay valid
+    rb.release(slot)                           # 1 -> 0: now recycled
+    assert rb.states[slot] == EMPTY
+    assert not rb.addref(slot, gen)            # stale gen can't re-pin
+    assert rb.shared_view(slot, gen) is None
+
+
+def test_shared_staging_decodes_like_private(vlm):
+    """Two requests with byte-identical vision stage ONCE (ring writes
+    == 1, one ``shares`` grant) and produce exactly the tokens two
+    private stagings produce."""
+    cfg, params = vlm
+
+    def reqs():
+        rng = np.random.default_rng(3)
+        feats = rng.standard_normal(
+            (1, cfg.vision_tokens, cfg.vision_feat_dim)
+        ).astype(np.float32) * 0.02
+        return [Request(rid=i, tokens=np.arange(7) + 3, max_new_tokens=4,
+                        vision_feats=feats.copy()) for i in range(2)]
+
+    twins = reqs()
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        for r in twins:
+            eng.submit(r)
+        assert twins[1].share_of is twins[0]   # dedup keyed on bytes
+        done = eng.run()
+        assert all(r.error is None for r in done)
+        ring = eng.tabm.ring(twins[0].slot_class)
+        assert ring.stats["writes"] == 1, (
+            f"identical vision staged twice: {ring.stats}")
+        assert ring.stats["shares"] == 1, ring.stats
+        assert ("stage_share", twins[1].rid) in [
+            (e, k) for e, k, _ in eng.trace]
+        shared_tokens = {r.rid: r.out_tokens for r in done}
+
+    private = reqs()
+    with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                       share_staged=False) as eng:
+        for r in private:
+            eng.submit(r)
+        done = eng.run()
+        assert all(r.error is None for r in done)
+        ring = eng.tabm.ring(private[0].slot_class)
+        assert ring.stats["writes"] == 2       # the un-deduped baseline
+        private_tokens = {r.rid: r.out_tokens for r in done}
+    assert shared_tokens == private_tokens, (
+        f"refcounted reuse changed greedy tokens:\n"
+        f"  shared:  {shared_tokens}\n  private: {private_tokens}")
+
+
+def test_failed_owner_releases_sharers(vlm):
+    """If the staging owner fails before binding, its sharers fall back
+    to staging privately instead of waiting forever."""
+    cfg, params = vlm
+    rng = np.random.default_rng(9)
+    feats = rng.standard_normal(
+        (1, cfg.vision_tokens, cfg.vision_feat_dim)
+    ).astype(np.float32) * 0.02
+    reqs = [Request(rid=i, tokens=np.arange(6) + 3, max_new_tokens=3,
+                    vision_feats=feats.copy()) for i in range(2)]
+    with ServingEngine(cfg, params, n_slots=2, max_len=128) as eng:
+        for r in reqs:
+            eng.submit(r)
+        assert reqs[1].share_of is reqs[0]
+        eng._unshare(reqs[0])                  # what _fail does to an owner
+        assert reqs[1].share_of is None        # twin stages privately now
+        done = eng.run()
+        assert all(r.error is None for r in done) and len(done) == 2
+
+
+# ---------------------------------------------------------------------------
+# battery-aware KV shed: hi-res block budgets shrink first, then restore
+# ---------------------------------------------------------------------------
+
+def test_kv_block_budgets_shed_hires_first(vlm):
+    cfg, _ = vlm
+    pool = SlotClassPool.from_config(cfg, slots_per_class=2)
+    names = list(pool.classes)                 # ascending by slab size
+    eff = shed_scales(pool.classes, 0.5)
+    assert eff[names[0]] == 1.0 and eff[names[-1]] == 0.5
+    assert all(eff[a] >= eff[b] for a, b in zip(names, names[1:])), (
+        f"shed order must be hi-res first: {eff}")
+    budgets = kv_block_budgets(pool, 100, {}, 0.5)
+    assert budgets[names[0]] == 100 and budgets[names[-1]] == 50
+    # used blocks are charged against the class's own cap
+    budgets = kv_block_budgets(pool, 100, {names[-1]: 30}, 0.5)
+    assert budgets[names[-1]] == 20
+    assert kv_block_budgets(pool, 100, {}, 0.0)[names[-1]] == 0
+
+
+def test_throttled_sheds_hires_kv_before_thumbnail(vlm):
+    """At 40% charge (alpha 0.5) a 6-block pool: the largest class's
+    budget is int(6*0.5)=3 < the 4-block lifetime need -> gated, while
+    the thumbnail class (full scale) admits.  Recovered charge restores
+    the hi-res grant."""
+    cfg, params = vlm
+    pmu = PMU(level=0.4)
+    with ServingEngine(cfg, params, n_slots=2, max_len=128,
+                       block_size=32, kv_blocks=6,
+                       executor=BatteryAwareExecutor(pmu)) as eng:
+        hi = _req(cfg, 0, 32, n_images=4, n_new=3)   # largest class
+        thumb = _req(cfg, 1, 2, n_images=1, n_new=3)
+        eng.submit(hi)
+        eng.submit(thumb)
+        for _ in range(40):
+            if thumb.finish_t is not None:
+                break
+            eng.step()
+        assert thumb.finish_t is not None and thumb.error is None, (
+            "thumbnail must keep admitting under THROTTLED")
+        assert hi.slot is None and hi.finish_t is None, (
+            "hi-res class must be KV-gated at alpha 0.5")
+        assert ("kv_gated", hi.rid) in [(e, k) for e, k, _ in eng.trace]
+        assert hi.aging > 0
+        pmu.level = 1.0                        # charge recovers
+        done = eng.run()
+        assert hi.error is None and hi.finish_t is not None, (
+            f"hi-res request must admit once restored: {hi.error!r}")
+        assert len(done) == 2
+        eng.slots.check_block_invariants()
+
+
+# ---------------------------------------------------------------------------
+# free-list fix: deque semantics preserved
+# ---------------------------------------------------------------------------
+
+def test_slot_free_lists_are_fifo_deques(vlm, lm_cfg):
+    from collections import deque
+    cfg, _ = vlm
+    flat = SlotCache(cfg, n_slots=4, max_len=32)
+    paged = _tiny_pool(lm_cfg)
+    for pool in (flat, paged):
+        assert isinstance(pool.free, deque)
+        took = [pool.take_slot() for _ in range(4)]
+        assert took == [0, 1, 2, 3]            # FIFO, like list.pop(0)
+        assert pool.take_slot() is None
+        pool.release(2)
+        pool.release(0)
+        assert pool.take_slot() == 2           # reuse order = release order
+        assert pool.take_slot() == 0

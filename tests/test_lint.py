@@ -464,8 +464,10 @@ def test_repo_tree_zero_unsuppressed():
                       "replint_baseline.json")
     assert result.files_checked > 80
     assert result.findings == [], [f.render() for f in result.findings]
-    # the deliberate syncs are suppressed in-line, not baselined
+    # the deliberate syncs are suppressed in-line, not baselined (the
+    # cohort-decode engine keeps exactly one per-token sync; plan.py
+    # carries the other three)
     assert result.baseline_matched == []
-    assert len(result.suppressed) >= 5
+    assert len(result.suppressed) >= 4
     report = result.to_json()
     assert report["ok"] and report["tool"] == "replint"
