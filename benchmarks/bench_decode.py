@@ -24,7 +24,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, emit_rows
 
 COHORTS = (1, 4)
 N_LIVE = 4
@@ -40,9 +40,11 @@ def _setup():
     return cfg, params
 
 
-def _decode_rate(cfg, params, max_cohort, iters: int) -> float:
+def _decode_rate(cfg, params, max_cohort, iters: int):
     """Tokens/s of the steady-state decode loop with N_LIVE requests in
-    flight (spares queued so a retirement refills the cohort)."""
+    flight (spares queued so a retirement refills the cohort); also
+    returns the engine's measured telemetry ledger (prefill + decode
+    wall-time spans)."""
     from repro.serving.engine import Request, ServingEngine
 
     with ServingEngine(cfg, params, n_slots=N_LIVE, max_len=128,
@@ -61,12 +63,17 @@ def _decode_rate(cfg, params, max_cohort, iters: int) -> float:
             eng.step()
         jax.block_until_ready(eng.slots.pool)
         dt = time.perf_counter() - t0
-        return (eng.stats.decoded_tokens - before) / dt
+        return (eng.stats.decoded_tokens - before) / dt, \
+            eng.measured_ledger()
 
 
 def run_bench(iters: int):
     cfg, params = _setup()
-    rates = {c: _decode_rate(cfg, params, c, iters) for c in COHORTS}
+    ledger = None
+    rates = {}
+    for c in COHORTS:
+        rates[c], led = _decode_rate(cfg, params, c, iters)
+        ledger = led if ledger is None else ledger.merge(led)
     rows = [
         Row(f"decode/cohort/B={c}", 0.0,
             f"decode_tokens_per_s={rates[c]:.1f} live={N_LIVE} "
@@ -78,7 +85,7 @@ def run_bench(iters: int):
                     f"B{COHORTS[-1]}_over_B{COHORTS[0]}={ratio:.2f}x "
                     f"(one batched step + one donated paged-pool update "
                     f"serve the whole cohort)"))
-    return rows, rates, ratio
+    return rows, rates, ratio, ledger
 
 
 def main(argv=None) -> int:
@@ -93,14 +100,24 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="also write the CSV rows to this path (CI "
                          "artifact)")
+    ap.add_argument("--bench-json", default=None,
+                    help="fold rows/metrics/measured ledger into this "
+                         "versioned BENCH_<pr>.json (shared telemetry "
+                         "writer)")
     args = ap.parse_args(argv)
     iters = args.iters or (30 if args.smoke else 80)
-    rows, rates, ratio = run_bench(iters)
-    lines = ["name,us_per_call,derived"] + [row.csv() for row in rows]
-    print("\n".join(lines), flush=True)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write("\n".join(lines) + "\n")
+    rows, rates, ratio, ledger = run_bench(iters)
+    from repro.telemetry.writer import metric
+    emit_rows(
+        rows, out=args.out, bench_json=args.bench_json, section="decode",
+        metrics={
+            # wall-clock throughputs are machine-dependent: recorded for
+            # the trajectory, not CI-gated (the >= GATE smoke below is
+            # the real regression check for cohort batching)
+            f"decode_tokens_per_s_b{c}": metric(rates[c], gate=False)
+            for c in COHORTS} | {
+            "decode_speedup_b4_over_b1": metric(ratio, gate=False)},
+        ledger=ledger)
     if args.smoke and ratio < GATE:            # gate, not just a report
         print(f"FAIL: cohort decode is not >= {GATE}x "
               f"(B4/B1 = {ratio:.2f}x)")

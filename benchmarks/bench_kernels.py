@@ -12,7 +12,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import Row, timeit
+from benchmarks.common import Row, emit_rows, timeit
 from repro.analysis import hlo_cost
 from repro.core.quantize import QuantSpec, dequantize, quantize
 from repro.kernels.dequant_gemm import dequant_gemm, ref_dequant_gemm
@@ -29,8 +29,11 @@ def run(m: int = M, k: int = K, n: int = N):
 
 
 def _bench(m: int, k: int, n: int):
-    """Returns (rows, rel_err) — the numeric residual is what the CI
-    smoke gates on, independent of row order or label wording."""
+    """Returns (rows, rel_err, traffic_ratio) — the numeric residual is
+    what the CI smoke gates on, independent of row order or label
+    wording; the analytic two-pass/fused HBM-traffic ratio is
+    deterministic (pure shape arithmetic) and regression-gated through
+    BENCH_<pr>.json."""
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (m, k), jnp.float32).astype(jnp.bfloat16)
     w = (jax.random.normal(key, (n, k), jnp.float32) * 0.05
@@ -70,7 +73,7 @@ def _bench(m: int, k: int, n: int):
             f"rel_err_vs_ref={res/scale:.2e} "
             f"(BlockSpec 128x128x512, fp32 acc)"),
     ]
-    return rows, res / scale
+    return rows, res / scale, t_two / t_fused
 
 
 def main(argv=None) -> int:
@@ -86,12 +89,23 @@ def main(argv=None) -> int:
                     help="tiny CI shapes (seconds, not minutes) — still "
                          "compiles both forms and checks the interpret-"
                          "mode kernel residual")
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV rows to this path (CI "
+                         "artifact)")
+    ap.add_argument("--bench-json", default=None,
+                    help="fold rows/metrics into this versioned "
+                         "BENCH_<pr>.json (shared telemetry writer)")
     args = ap.parse_args(argv)
-    rows, rel = _bench(*((SMOKE_M, SMOKE_K, SMOKE_N) if args.smoke
-                         else (M, K, N)))
-    print("name,us_per_call,derived")
-    for row in rows:
-        print(row.csv(), flush=True)
+    rows, rel, traffic = _bench(*((SMOKE_M, SMOKE_K, SMOKE_N) if args.smoke
+                                  else (M, K, N)))
+    from repro.telemetry.writer import metric
+    emit_rows(
+        rows, out=args.out, bench_json=args.bench_json, section="kernels",
+        metrics={
+            # analytic shape arithmetic — deterministic, so gateable
+            "fused_hbm_traffic_ratio": metric(traffic, better="higher",
+                                              gate=True),
+            "kernel_rel_err": metric(rel, better="lower", gate=False)})
     if args.smoke and rel > 1e-2:              # gate, not just a report
         print(f"FAIL: kernel residual {rel} too large")
         return 1

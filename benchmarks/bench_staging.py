@@ -21,7 +21,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import Row
+from benchmarks.common import Row, emit_rows
 
 KS = (1, 4)
 
@@ -32,11 +32,13 @@ def _setup(slots_per_class: int = 8):
     from repro.core.plan import compile_plan
     from repro.core.tabm import SlotClassPool
     from repro.launch.steps import init_params
+    from repro.telemetry.probes import WallProbe
 
     cfg = get_config("llava-onevision-0.5b").reduced()
     params = init_params(jax.random.PRNGKey(0), cfg)
     pool = SlotClassPool.from_config(cfg, slots_per_class=slots_per_class)
-    plan = compile_plan(decompose(cfg), params, tabm=pool)
+    plan = compile_plan(decompose(cfg), params, tabm=pool,
+                        probe=WallProbe())
     cls = pool.classify(cfg.vision_tokens, 1)
     rng = np.random.default_rng(0)
     feats = rng.standard_normal(
@@ -82,7 +84,9 @@ def run_bench(iters: int):
                     f"K{KS[-1]}_over_K{KS[0]}={ratio:.2f}x (one batched "
                     f"projector call + one strided slab commit per "
                     f"microbatch)"))
-    return rows, rates, ratio
+    # measured per-brick staging ledger from the plan's wall-time probe
+    ledger = plan.probe.to_ledger(meta={"bench": "staging"})
+    return rows, rates, ratio, ledger
 
 
 def main(argv=None) -> int:
@@ -96,14 +100,24 @@ def main(argv=None) -> int:
     ap.add_argument("--out", default=None,
                     help="also write the CSV rows to this path (CI "
                          "artifact)")
+    ap.add_argument("--bench-json", default=None,
+                    help="fold rows/metrics/measured ledger into this "
+                         "versioned BENCH_<pr>.json (shared telemetry "
+                         "writer)")
     args = ap.parse_args(argv)
     iters = args.iters or (24 if args.smoke else 64)
-    rows, rates, ratio = run_bench(iters)
-    lines = ["name,us_per_call,derived"] + [row.csv() for row in rows]
-    print("\n".join(lines), flush=True)
-    if args.out:
-        with open(args.out, "w") as f:
-            f.write("\n".join(lines) + "\n")
+    rows, rates, ratio, ledger = run_bench(iters)
+    from repro.telemetry.writer import metric
+    emit_rows(
+        rows, out=args.out, bench_json=args.bench_json, section="staging",
+        metrics={
+            # raw wall-clock throughputs are machine-dependent: recorded
+            # for the trajectory, not CI-gated (the K4>K1 smoke below and
+            # the deterministic fleet metrics carry the gates)
+            f"staged_tokens_per_s_k{k}": metric(rates[k], gate=False)
+            for k in KS} | {
+            "staging_speedup_k4_over_k1": metric(ratio, gate=False)},
+        ledger=ledger)
     if args.smoke and ratio <= 1.0:            # gate, not just a report
         print(f"FAIL: batched staging is not faster (K=4/K=1 = "
               f"{ratio:.2f}x)")

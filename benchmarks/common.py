@@ -21,6 +21,28 @@ class Row:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"
 
 
+def emit_rows(rows: List[Row], *, out: Optional[str] = None,
+              bench_json: Optional[str] = None, section: str = "bench",
+              metrics: Optional[Dict] = None, ledger=None) -> List[str]:
+    """The one benchmark exit path (telemetry/writer.py owns the
+    formats): print the classic ``name,us_per_call,derived`` table,
+    side-emit it to ``out`` as a CSV artifact, and — when ``bench_json``
+    is given — fold rows + gateable ``metrics`` + a measured telemetry
+    ``ledger`` into the versioned ``BENCH_<pr>.json`` section, which
+    ``scripts/bench_gate.py`` regression-gates in CI.  Replaces the
+    hand-rolled ``lines = [header] + ...`` blocks each bench used to
+    carry."""
+    from repro.telemetry import writer
+    lines = writer.csv_lines(rows)
+    print("\n".join(lines), flush=True)
+    if out:
+        writer.write_csv(out, rows)
+    if bench_json:
+        writer.merge_section(bench_json, section, rows=rows,
+                             metrics=metrics, ledger=ledger)
+    return lines
+
+
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     """Median wall time (us) of fn(*args) with block_until_ready."""
     for _ in range(warmup):

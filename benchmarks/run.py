@@ -1,14 +1,18 @@
 """Benchmark harness: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig8]
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,fig8] [--out CSV]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows through the shared
+telemetry writer (``benchmarks.common.emit_rows``), optionally
+side-emitting them as one CSV artifact.
 """
 from __future__ import annotations
 
 import argparse
 import sys
 import traceback
+
+from benchmarks.common import Row, emit_rows
 
 MODULES = {
     "table1": "benchmarks.table1_offload",
@@ -25,21 +29,24 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(MODULES))
+    ap.add_argument("--out", default=None,
+                    help="also write the CSV rows to this path (CI "
+                         "artifact)")
     args = ap.parse_args(argv)
     names = (args.only.split(",") if args.only else list(MODULES))
 
     import importlib
-    print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for name in names:
         try:
             mod = importlib.import_module(MODULES[name])
-            for row in mod.run():
-                print(row.csv(), flush=True)
+            rows.extend(mod.run())
         except Exception:
             failures += 1
-            print(f"{name},0,ERROR: {traceback.format_exc(limit=2)!r}",
-                  flush=True)
+            rows.append(Row(name, 0.0,
+                            f"ERROR: {traceback.format_exc(limit=2)!r}"))
+    emit_rows(rows, out=args.out)
     return 1 if failures else 0
 
 

@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Regression gate over the versioned benchmark ledger.
+
+    PYTHONPATH=src python scripts/bench_gate.py CANDIDATE.json \
+        [--baseline BENCH_N.json] [--allow-missing]
+
+Compares every ``gate: true`` metric in the BASELINE (the latest
+committed ``BENCH_<n>.json`` at the repo root unless ``--baseline`` is
+given) against the freshly produced CANDIDATE:
+
+* a gated baseline metric missing from the candidate fails (a bench was
+  silently dropped) unless ``--allow-missing``;
+* a candidate value worse than baseline by more than the baseline's
+  ``rel_tol`` in its ``better`` direction fails;
+* no baseline at all accepts with a notice — the first PR that ships a
+  ledger has nothing to regress against.
+
+Only machine-independent metrics carry ``gate: true`` (simulated fleet
+tokens/s and J/token, analytic traffic ratios); raw wall-clock rides
+along ungated.  See src/repro/telemetry/writer.py.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.telemetry import writer  # noqa: E402
+
+
+def compare(baseline: dict, candidate: dict, *,
+            allow_missing: bool = False):
+    """Pure gate: returns (ok, report_lines).  Testable without files."""
+    base_gated = writer.gated_metrics(baseline)
+    cand_all = {
+        f"{sec}/{name}": m
+        for sec, body in (candidate.get("sections") or {}).items()
+        for name, m in (body.get("metrics") or {}).items()}
+    ok = True
+    lines = []
+    for key, bm in sorted(base_gated.items()):
+        cm = cand_all.get(key)
+        if cm is None:
+            if allow_missing:
+                lines.append(f"SKIP {key}: missing from candidate "
+                             f"(--allow-missing)")
+                continue
+            lines.append(f"FAIL {key}: gated metric missing from candidate")
+            ok = False
+            continue
+        bv, cv = float(bm["value"]), float(cm["value"])
+        tol = float(bm.get("rel_tol", 0.10))
+        if bm.get("better") == "lower":
+            worse = cv > bv * (1.0 + tol)
+        else:
+            worse = cv < bv * (1.0 - tol)
+        rel = (cv - bv) / bv if bv else float("inf")
+        verdict = "FAIL" if worse else "PASS"
+        lines.append(f"{verdict} {key}: baseline={bv:.6g} "
+                     f"candidate={cv:.6g} ({rel:+.1%}, tol ±{tol:.0%}, "
+                     f"better={bm.get('better')})")
+        ok = ok and not worse
+    if not base_gated:
+        lines.append("PASS: baseline has no gated metrics")
+    return ok, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="gate a fresh BENCH json against the committed one")
+    ap.add_argument("candidate", help="freshly produced BENCH_<pr>.json")
+    ap.add_argument("--baseline", default=None,
+                    help="explicit baseline (default: latest committed "
+                         "BENCH_<n>.json at the repo root, excluding the "
+                         "candidate)")
+    ap.add_argument("--root", default=str(
+        Path(__file__).resolve().parent.parent),
+        help="where to look for committed baselines")
+    ap.add_argument("--allow-missing", action="store_true",
+                    help="tolerate gated baseline metrics absent from the "
+                         "candidate (partial bench runs)")
+    args = ap.parse_args(argv)
+
+    candidate = writer.read_bench(args.candidate)
+    base_path = args.baseline or writer.latest_baseline(
+        args.root, exclude=args.candidate)
+    if base_path is None:
+        print(f"bench_gate: no committed baseline under {args.root}; "
+              f"accepting {args.candidate}")
+        return 0
+    baseline = writer.read_bench(base_path)
+    print(f"bench_gate: {args.candidate} vs baseline {base_path}")
+    ok, lines = compare(baseline, candidate,
+                        allow_missing=args.allow_missing)
+    print("\n".join(lines))
+    print("OK: no gated regressions" if ok
+          else "FAIL: gated benchmark regression")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -66,4 +66,11 @@ echo "== decode-cohort smoke: paged KV + mid-flight admit/retire =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.smoke_classes --decode-cohort
 
+echo "== fleet battery-simulation smoke: telemetry-priced devices =="
+# >=100 simulated devices on a small pack traverse all three power
+# states (per-device PMU under one PowerPolicy, modality profile priced
+# from the modeled telemetry ledger) and report fleet tokens/s, J/token
+# and a survival-hours histogram; asserts enforced by --smoke
+python -m repro.launch.fleet_sim --smoke
+
 echo "OK: check passed"

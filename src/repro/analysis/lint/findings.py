@@ -59,6 +59,12 @@ class LintConfig:
         ("ServingEngine", "step"),
         ("ExecutionPlan", "run"),
         ("ExecutionPlan", "produce_many"),
+        # telemetry collectors: WallProbe.record is called FROM the paths
+        # above (a device sync in the probe would stall the very pipeline
+        # it measures), and the fleet simulator's per-device tick runs
+        # thousands of times per simulated hour — both must stay host-only
+        ("WallProbe", "record"),
+        ("FleetSimulator", "step"),
     )
     # kernel-triple: the package that is the dispatch layer, not a triple
     kernels_skip: Tuple[str, ...] = ("dispatch.py", "__init__.py")

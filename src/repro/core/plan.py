@@ -131,7 +131,7 @@ class ExecutionPlan:
     def __init__(self, graph: BrickGraph, steps: List[PlanStep], *,
                  residency: str, tabm=None, tabm_producer: Optional[int] = None,
                  tabm_transfer: Optional[Callable] = None,
-                 input_ports: Tuple[Port, ...] = ()):
+                 input_ports: Tuple[Port, ...] = (), probe=None):
         self.graph = graph
         self.cfg = graph.cfg
         self.steps = steps
@@ -140,6 +140,11 @@ class ExecutionPlan:
         self._tabm_producer = tabm_producer
         self._tabm_transfer = tabm_transfer
         self.input_ports = input_ports
+        # optional telemetry WallProbe: per-brick wall-time spans recorded
+        # by run()/produce_many() (host clocks only — on async resident
+        # backends a span measures dispatch, a calibrated lower bound;
+        # transient backends sync, so theirs is true wall time)
+        self.probe = probe
         self._params = None            # full tree, kept for relower()
         # "what a monolithic load would have held": each top-level param
         # entry once — tied-embedding archs share "embed" between the
@@ -260,6 +265,7 @@ class ExecutionPlan:
                 resident += _nbytes(dev_params)
             trace.record(step.brick.name, "load", resident)
 
+            t0 = time.perf_counter()
             ctx = self._gather(step, env, env_src)
             out = step.fn(dev_params, ctx)
             if transient:
@@ -267,6 +273,15 @@ class ExecutionPlan:
                 # brick's device-memory high-water mark observable
                 out = jax.block_until_ready(out)  # replint: disable=host-sync
             trace.record(step.brick.name, "execute", resident)
+            if self.probe is not None:
+                # a full pass is a prefill; bricks up to the TABM edge
+                # are the staging side of it
+                phase = ("stage" if self._tabm_producer is not None
+                         and i <= self._tabm_producer else "prefill")
+                ntok = (int(out.shape[1]) if getattr(out, "ndim", 0) >= 2
+                        else 0)
+                self.probe.record(step.brick.name, phase,
+                                  time.perf_counter() - t0, tokens=ntok)
 
             if self.tabm is not None and i == self._tabm_producer:
                 out, ring, slot = self._through_ring(out)
@@ -431,6 +446,7 @@ class ExecutionPlan:
             for step in self.steps[: self._tabm_producer + 1]:
                 transient = not step.backend.resident
                 dev_params = self._load(step)
+                t0 = time.perf_counter()
                 ctx = self._gather(step, env, env_src)
                 out = step.fn(dev_params, ctx)
                 if transient:
@@ -439,6 +455,10 @@ class ExecutionPlan:
                     step.backend.unload(dev_params)
                 env[step.brick.out_port.name] = out
                 env_src[step.brick.out_port.name] = step.accel
+                if self.probe is not None:
+                    self.probe.record(step.brick.name, "stage",
+                                      time.perf_counter() - t0,
+                                      tokens=len(feats) * slab)
             if out.shape[0] != len(feats):
                 raise PlanError(f"projector returned batch {out.shape[0]} "
                                 f"for a {len(feats)}-request microbatch")
@@ -522,7 +542,7 @@ def _backend_for(brick_name: str, accel, *, override, placement_backends,
 
 def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
                  tabm=None, residency: str = "resident",
-                 backend=None) -> ExecutionPlan:
+                 backend=None, probe=None) -> ExecutionPlan:
     """Compile a BrickGraph (+ optional Placement and TABM ring) into an
     :class:`ExecutionPlan`.
 
@@ -543,6 +563,9 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
         :class:`~repro.core.backends.Backend` instance, or a per-brick
         ``{brick_name: spec}`` dict.  The same graph + placement lowers
         to any substrate; see docs/ARCHITECTURE.md "Backend lowering".
+    probe: a :class:`~repro.telemetry.probes.WallProbe` that run() /
+        produce_many() record per-brick wall-time spans into (the
+        telemetry ledger's dynamic population path); None = no probing.
     """
     if residency not in ("resident", "one-brick"):
         raise PlanError(f"unknown residency {residency!r}")
@@ -616,7 +639,7 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
     plan = ExecutionPlan(graph, steps, residency=residency, tabm=tabm,
                          tabm_producer=tabm_producer,
                          tabm_transfer=tabm_transfer,
-                         input_ports=tuple(externals))
+                         input_ports=tuple(externals), probe=probe)
     plan.pipes = edges
     plan._params = params
     return plan

@@ -37,6 +37,7 @@ from repro.analysis.energy import (EDGE_CPU, EDGE_GPU, EDGE_NPU,
                                    step_time)
 from repro.core.backends import bit_efficiency, substrate_backend
 from repro.core.bricks import Brick, BrickGraph
+from repro.telemetry.calibration import CostCalibration
 
 
 @dataclass(frozen=True)
@@ -132,7 +133,8 @@ class BrickCost:
 
 
 def brick_cost(brick: Brick, acc: Accelerator, n_tokens: int,
-               mem_clock_scale: float = 1.0, batch: int = 1) -> BrickCost:
+               mem_clock_scale: float = 1.0, batch: int = 1,
+               calibration: Optional[CostCalibration] = None) -> BrickCost:
     """Roofline latency + modeled energy of ONE call over a microbatch of
     ``batch`` requests (``n_tokens`` each) on one unit.
 
@@ -142,7 +144,16 @@ def brick_cost(brick: Brick, acc: Accelerator, n_tokens: int,
     independent calls would pay the weight stream ``batch`` times, so
     for memory-bound bricks (exactly the projector/prefill side the TABM
     slab batches) ``brick_cost(..., batch=K).latency_s`` is well below
-    ``K * brick_cost(...).latency_s``."""
+    ``K * brick_cost(...).latency_s``.
+
+    ``calibration`` is the measured-not-modeled feedback edge
+    (telemetry/calibration.py): when the table holds a sample for this
+    (brick, profile) — falling back to the brick's profile-agnostic
+    key — the measured per-token seconds (and joules, when observed)
+    override the model with sample-count weight ``n / (n + prior)``:
+    empty table -> pure model, a well-observed brick -> pure
+    measurement.  Infeasible stays infeasible regardless — no
+    observation can put a dynamic brick on a static-only unit."""
     if not brick.static_shape and acc.static_only:
         return BrickCost(float("inf"), float("inf"), feasible=False)
     flops = brick.flops_per_token * n_tokens * max(1, batch)
@@ -154,6 +165,14 @@ def brick_cost(brick: Brick, acc: Accelerator, n_tokens: int,
         hbm_bw=p.hbm_bw * mem_clock_scale)
     t = step_time(eff, flops, wbytes)
     e = step_energy(eff, flops, wbytes, 0.0, wall_s=t)
+    if calibration is not None:
+        s = calibration.sample(brick.name, p.name)
+        if s is not None and s.tokens > 0:
+            w = calibration.weight(s.n)
+            units = n_tokens * max(1, batch)
+            t = (1.0 - w) * t + w * s.seconds_per_token * units
+            if s.joules > 0:
+                e = (1.0 - w) * e + w * s.joules_per_token * units
     return BrickCost(t, e)
 
 
@@ -197,7 +216,8 @@ def edge_bytes(graph: BrickGraph, n_tokens: int) -> int:
 
 def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
              objective: str = "latency", mem_clock_scale: float = 1.0,
-             batch: int = 1) -> Placement:
+             batch: int = 1,
+             calibration: Optional[CostCalibration] = None) -> Placement:
     """Exact DP over the brick chain.
 
     dp[i][a] = best objective of bricks[0..i] with brick i on accel a.
@@ -205,10 +225,14 @@ def schedule(graph: BrickGraph, accels: List[Accelerator], n_tokens: int,
     requests — the staging pipeline's unit of work — so a placement can
     be optimized for the batched regime, where weight traffic amortizes
     (``brick_cost``) and the latency/energy balance between units shifts
-    toward the compute-bound ones."""
+    toward the compute-bound ones.  ``calibration`` threads measured
+    per-brick costs into every cell (see :func:`brick_cost`), so the DP
+    places from observation when samples exist — a brick the table
+    shows slower-than-modeled on one unit migrates off it."""
     bricks = graph.bricks
     nA = len(accels)
-    costs = [[brick_cost(b, a, n_tokens, mem_clock_scale, batch=batch)
+    costs = [[brick_cost(b, a, n_tokens, mem_clock_scale, batch=batch,
+                         calibration=calibration)
               for a in accels] for b in bricks]
     xfer = edge_bytes(graph, n_tokens) * max(1, batch)
 
@@ -337,7 +361,8 @@ def class_staging_budgets(pool, in_flight: Dict[str, int],
 
 def kv_block_budgets(pool, total_blocks: int,
                      used: Dict[Optional[str], int],
-                     kv_scale: float = 1.0) -> Dict[str, int]:
+                     kv_scale: float = 1.0,
+                     energy_pressure: float = 1.0) -> Dict[str, int]:
     """Per-class paged-KV *block* budgets — staged-ahead depth charging
     applied to decode memory.
 
@@ -354,10 +379,18 @@ def kv_block_budgets(pool, total_blocks: int,
     shed, mirroring how ``class_staging_budgets`` sheds staging depth.
 
     ``used``: blocks currently granted per class
-    (``PagedKVCache.used_blocks``); classes absent from it hold none."""
+    (``PagedKVCache.used_blocks``); classes absent from it hold none.
+
+    ``energy_pressure`` is the telemetry feedback
+    (``CostCalibration.energy_pressure``): the measured-over-modeled
+    decode J/token ratio.  Decode running hotter than the model priced
+    (> 1) tightens the effective scale, so hi-res KV grants shed EARLIER
+    than the battery knob alone would — the paged pool reacts to
+    observed energy, not just predicted charge."""
     from repro.core.slot_classes import shed_scales
+    eff_scale = kv_scale / max(1.0, energy_pressure)
     budgets = {}
-    for name, eff in shed_scales(pool.classes, kv_scale).items():
+    for name, eff in shed_scales(pool.classes, eff_scale).items():
         cap = max(0, min(total_blocks, int(total_blocks * eff)))
         budgets[name] = max(0, cap - used.get(name, 0))
     return budgets

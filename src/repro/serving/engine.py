@@ -101,7 +101,7 @@ import time
 import weakref
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -116,8 +116,23 @@ from repro.core.tabm import SlotClassPool, TABMError
 from repro.models import model as M
 from repro.serving.kv_cache import PagedKVCache, SlotCache, bucket_length
 from repro.serving.sampling import sample
+from repro.telemetry.calibration import CostCalibration
+from repro.telemetry.ledger import Ledger
+from repro.telemetry.probes import WallProbe
 
 EOS_ID = 1
+
+
+class TraceEvent(NamedTuple):
+    """One engine lifecycle event, stamped with ``time.monotonic()`` at
+    record time — monotonic so producer-thread and step-loop events
+    interleave in true order (the telemetry ledger's wall-time probes
+    anchor to the same clock).  Tuple-compatible: existing consumers
+    unpack ``(event, rid, t)``."""
+
+    event: str
+    rid: int
+    t: float
 
 
 class EngineClosed(RuntimeError):
@@ -370,7 +385,8 @@ class ServingEngine:
                  aging_steps: int = 32, block_size: int = 64,
                  kv_blocks: Optional[int] = None,
                  max_cohort: Optional[int] = None,
-                 share_staged: bool = True):
+                 share_staged: bool = True,
+                 calibration: Optional[CostCalibration] = None):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -398,9 +414,19 @@ class ServingEngine:
         self.done: List[Request] = []
         self.stats = EngineStats()
         self.key = jax.random.PRNGKey(rng_seed)
-        # producer/consumer interleaving evidence: (event, rid, t); bounded
-        # so a long-running server doesn't grow it without limit
-        self.trace: "deque[tuple]" = deque(maxlen=4096)
+        # producer/consumer interleaving evidence: TraceEvent(event, rid,
+        # t=monotonic); bounded so a long-running server doesn't grow it
+        # without limit
+        self.trace: "deque[TraceEvent]" = deque(maxlen=4096)
+        # wall-time probe feeding the telemetry ledger: per-brick staging
+        # spans (via the plan) + the engine's prefill/decode spans, all
+        # host clocks — no device syncs beyond the ones the loop already
+        # pays.  `calibration` (optional, e.g. from a previous run's
+        # measured ledger) lets admission price KV budgets from
+        # observation (see _kv_energy_pressure)
+        self.probe = WallProbe()
+        self.calibration = calibration
+        self._kv_pressure: Optional[float] = None
         # class-partitioned TABM pool between encoder and decoder bricks
         # (vlm archs): one class-sized ring per image-count x resolution
         # bucket (core/slot_classes), so a thumbnail request neither pads
@@ -415,7 +441,7 @@ class ServingEngine:
         # them, the paper's "same graph, swappable compute unit"
         self.plan = compile_plan(decompose(cfg), params, tabm=self.tabm,
                                  placement=placement, accels=accels,
-                                 backend=backend)
+                                 backend=backend, probe=self.probe)
         # remembered so the battery policy's demotion can be undone when
         # charge recovers (plan.relower back to the compiled substrate)
         self._lowered_backends = {s.brick.name: s.backend
@@ -531,7 +557,7 @@ class ServingEngine:
 
     # -- internals -----------------------------------------------------------
     def _trace_event(self, event: str, rid: int):
-        self.trace.append((event, rid, time.monotonic()))
+        self.trace.append(TraceEvent(event, rid, time.monotonic()))
 
     def _stage_key(self, req: Request) -> tuple:
         """Dedup identity of a request's staged vision: class + slab
@@ -936,6 +962,7 @@ class ServingEngine:
         batch-level in practice — the per-request inputs (bucketed int
         tokens, validated slab views) cannot individually fail a
         compiled call."""
+        t0 = time.perf_counter()
         taken: List[int] = []
         try:
             for req in group:
@@ -1011,6 +1038,10 @@ class ServingEngine:
             req.first_token_t = time.time()
         if len(group) > 1:                     # the acceptance evidence
             self._trace_event("prefill_batch", len(group))
+        # measured prefill span: ends past insert_many and the first-token
+        # reads, so device work is complete — true wall time of the group
+        self.probe.record("decoder", "prefill", time.perf_counter() - t0,
+                          tokens=int(lens.sum()))
 
     def _admit(self):
         state, knobs, _ = self.executor.current()
@@ -1038,7 +1069,8 @@ class ServingEngine:
         if self.tabm is not None:
             kv_budgets = kv_block_budgets(
                 self.tabm, self.slots.n_blocks, self.slots.used_blocks,
-                knobs.class_kv_scale)
+                knobs.class_kv_scale,
+                energy_pressure=self._kv_energy_pressure())
         # cross-class aging: classes of requests that have waited out
         # aging_steps admission rounds while skipped (class stalled or
         # slow); each holds one KV-slot reservation that newer requests
@@ -1178,6 +1210,7 @@ class ServingEngine:
             tokens[b, 0] = req.out_tokens[-1]
             lengths[b] = self.slots.lengths[slot]
             slot_ids[b] = slot
+        t0 = time.perf_counter()
         logits, self.slots.pool = self._cohort_fn(bc)(
             self.params, jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(slot_ids), jnp.asarray(tables), self.slots.pool)
@@ -1200,6 +1233,11 @@ class ServingEngine:
                     or over_len):
                 req.finish_t = time.time()
                 finished.append(slot)
+        # measured decode span for the telemetry ledger: the per-token
+        # sampling reads above already synced, so this is true wall time
+        # of one cohort step (host clocks only — replint-clean)
+        self.probe.record("decoder", "decode", time.perf_counter() - t0,
+                          tokens=len(cohort))
         for slot in finished:
             req = self.live.pop(slot)
             self.done.append(req)
@@ -1209,9 +1247,44 @@ class ServingEngine:
             self.stats.finished += 1
             self._trace_event("finish", req.rid)
 
-    # -- reporting -----------------------------------------------------------
+    # -- reporting / telemetry ----------------------------------------------
     def memory_bytes(self) -> Dict[str, int]:
         from repro.core.quantize import tree_bytes
         return {"weights": tree_bytes(self.params),
                 "kv_pool": self.slots.nbytes,
                 "tabm": self.tabm.nbytes if self.tabm else 0}
+
+    def _kv_energy_pressure(self) -> float:
+        """Measured-over-modeled decode J/token ratio for kv_block_budgets
+        (cached: one scheduler lookup, not one per admission round).
+        1.0 — i.e. no tightening — without a calibration table, without
+        an energy observation, or when the plan carries no accelerator
+        identities to price the model against."""
+        if self.calibration is None:
+            return 1.0
+        if self._kv_pressure is None:
+            from repro.core.scheduler import brick_cost
+            press = 1.0
+            for s in self.plan.steps:
+                if s.brick.kind == "decoder" and s.accel is not None:
+                    modeled = brick_cost(s.brick, s.accel, 1)
+                    press = self.calibration.energy_pressure(
+                        s.brick.name, s.accel.profile.name,
+                        modeled.energy_j)
+                    break
+            self._kv_pressure = press
+        return self._kv_pressure
+
+    def measured_ledger(self) -> Ledger:
+        """The dynamic (probe-fed) telemetry ledger of this engine run:
+        per-brick staging spans recorded by the plan plus the engine's
+        prefill/decode spans, folded per (brick, phase)."""
+        return self.probe.to_ledger(meta={"collector": "serving-engine"})
+
+    def measured_calibration(self, prior: int = 4) -> CostCalibration:
+        """A scheduler-consumable calibration table from this run's
+        measured ledger — the feedback loop closed in one call:
+        ``schedule(graph, accels, n, calibration=eng.measured_calibration())``
+        prices the next placement from what this engine observed."""
+        return CostCalibration.from_ledger(self.measured_ledger(),
+                                           prior=prior)

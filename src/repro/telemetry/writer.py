@@ -1,0 +1,140 @@
+"""The ONE benchmark emitter: CSV side-emit + versioned BENCH_<pr>.json.
+
+Every benchmark exit path routes through here (``benchmarks/common.py``
+delegates): the classic ``name,us_per_call,derived`` CSV keeps printing
+and side-emitting for artifact diffing, while :func:`merge_section`
+accumulates each bench's rows, gateable metrics, and measured ledger
+into one versioned ``BENCH_<pr>.json`` at the repo root —
+read-modify-write with an atomic replace, so the kernel / staging /
+decode / fleet smokes, run as separate processes, build ONE file.
+
+Metric schema (what ``scripts/bench_gate.py`` consumes)::
+
+    {"value": 123.4, "better": "higher"|"lower",
+     "gate": true|false, "rel_tol": 0.10}
+
+``gate: false`` records a trajectory without failing CI on it — raw
+wall-clock throughputs are machine-dependent (a laptop baseline vs a CI
+runner differs far beyond any honest tolerance), so they ride along
+ungated while machine-independent metrics (the fleet simulator's
+tokens/s and J/token — simulated time over a modeled energy integral —
+and deterministic traffic ratios) carry the 10 % regression gate the
+trajectory needs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple, Union
+
+from repro.telemetry.ledger import Ledger
+
+# the versioned ledger this PR's benches write; bump per PR so the repo
+# root accumulates a BENCH_8.json, BENCH_9.json, ... trajectory
+CURRENT_PR = 8
+SCHEMA = 1
+CSV_HEADER = "name,us_per_call,derived"
+
+RowLike = Union[Tuple[str, float, str], Sequence]
+
+
+def _row_tuple(row: RowLike) -> Tuple[str, float, str]:
+    if hasattr(row, "name") and hasattr(row, "us_per_call"):
+        return (row.name, float(row.us_per_call), str(row.derived))
+    name, us, derived = row
+    return (str(name), float(us), str(derived))
+
+
+def csv_lines(rows: Iterable[RowLike]) -> List[str]:
+    lines = [CSV_HEADER]
+    for row in rows:
+        name, us, derived = _row_tuple(row)
+        lines.append(f"{name},{us:.1f},{derived}")
+    return lines
+
+
+def write_csv(path: str, rows: Iterable[RowLike]) -> str:
+    with open(path, "w") as f:
+        f.write("\n".join(csv_lines(rows)) + "\n")
+    return path
+
+
+def metric(value: float, better: str = "higher", gate: bool = True,
+           rel_tol: float = 0.10) -> Dict:
+    """One gateable metric entry (see module docstring for semantics)."""
+    assert better in ("higher", "lower"), better
+    return {"value": float(value), "better": better, "gate": bool(gate),
+            "rel_tol": float(rel_tol)}
+
+
+def bench_path(root: str = ".", pr: int = CURRENT_PR) -> str:
+    return str(Path(root) / f"BENCH_{pr}.json")
+
+
+def read_bench(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def merge_section(path: str, section: str, *,
+                  rows: Optional[Iterable[RowLike]] = None,
+                  metrics: Optional[Dict[str, Dict]] = None,
+                  ledger: Optional[Ledger] = None,
+                  pr: int = CURRENT_PR) -> Dict:
+    """Fold one bench's output into the versioned ledger file.
+
+    Read-modify-write: an existing file for the SAME pr keeps its other
+    sections (separate bench processes accumulate); a stale or foreign
+    file is restarted.  The ledger merges record-wise, so static and
+    measured rows from different benches compose."""
+    data: Dict = {}
+    try:
+        data = read_bench(path)
+    except (OSError, json.JSONDecodeError):
+        pass
+    if data.get("schema") != SCHEMA or data.get("pr") != pr:
+        data = {"schema": SCHEMA, "pr": pr, "sections": {}, "ledger": None}
+    sec: Dict = {}
+    if rows is not None:
+        sec["rows"] = [list(_row_tuple(r)) for r in rows]
+    if metrics is not None:
+        sec["metrics"] = dict(metrics)
+    data.setdefault("sections", {})[section] = sec
+    if ledger is not None:
+        base = (Ledger.from_dict(data["ledger"]) if data.get("ledger")
+                else Ledger())
+        data["ledger"] = base.merge(ledger).to_dict()
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return data
+
+
+def gated_metrics(data: Dict) -> Dict[str, Dict]:
+    """Flatten ``{section}/{metric}`` -> entry for every gated metric."""
+    out = {}
+    for sec, body in (data.get("sections") or {}).items():
+        for name, m in (body.get("metrics") or {}).items():
+            if m.get("gate"):
+                out[f"{sec}/{name}"] = m
+    return out
+
+
+def latest_baseline(root: str = ".", exclude: Optional[str] = None
+                    ) -> Optional[str]:
+    """Highest-numbered committed ``BENCH_<n>.json`` under ``root``,
+    skipping the candidate file itself (compared by resolved path)."""
+    best: Tuple[int, Optional[str]] = (-1, None)
+    skip = Path(exclude).resolve() if exclude else None
+    for p in Path(root).glob("BENCH_*.json"):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", p.name)
+        if not m or (skip is not None and p.resolve() == skip):
+            continue
+        n = int(m.group(1))
+        if n > best[0]:
+            best = (n, str(p))
+    return best[1]
