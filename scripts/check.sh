@@ -66,6 +66,15 @@ echo "== decode-cohort smoke: paged KV + mid-flight admit/retire =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.launch.smoke_classes --decode-cohort
 
+echo "== disaggregated-fleet smoke: prefill fleet | pipe | decode fleet =="
+# two-fleet serving with the decode fleet as a REAL subprocess over OS
+# pipes: >=3 mixed-class requests cross as serialized RemotePrefill
+# frames (slab + written KV blocks only); the driver asserts greedy
+# tokens bit-identical to a single-process oracle and wire KV bytes
+# under the whole-lane baseline (launch/serve_disagg.py)
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.launch.serve_disagg --transport pipe --requests 3
+
 echo "== fleet battery-simulation smoke: telemetry-priced devices =="
 # >=100 simulated devices on a small pack traverse all three power
 # states (per-device PMU under one PowerPolicy, modality profile priced

@@ -65,6 +65,18 @@ class LintConfig:
         # thousands of times per simulated hour — both must stay host-only
         ("WallProbe", "record"),
         ("FleetSimulator", "step"),
+        # disaggregated-fleet wire paths: Transport send/recv frame every
+        # cross-fleet hand-off, and the fleet workers' run loops sit
+        # between the engine and the wire — a stray sync there serializes
+        # the two fleets.  KV block export IS the serialization boundary
+        # (its pulls carry explicit pragmas); everything around it must
+        # not add more.
+        ("Transport", "send"),
+        ("Transport", "recv"),
+        ("PrefillWorker", "run"),
+        ("DecodeWorker", "run"),
+        ("PagedKVCache", "export_blocks"),
+        ("PagedKVCache", "import_blocks"),
     )
     # kernel-triple: the package that is the dispatch layer, not a triple
     kernels_skip: Tuple[str, ...] = ("dispatch.py", "__init__.py")

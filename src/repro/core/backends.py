@@ -289,6 +289,36 @@ def register_backend(backend: Backend) -> Backend:
     return backend
 
 
+# per-ordinal DeviceBackends ("device:N" specs) — cached so two plans
+# naming the same ordinal share one backend instance, and thus one edge
+# identity in compile_plan's edge cache
+_DEVICE_BACKENDS: Dict[int, DeviceBackend] = {}
+_DEVICE_BACKENDS_LOCK = threading.Lock()
+
+
+def device_backend(ordinal: int) -> DeviceBackend:
+    """The committed DeviceBackend for one device ordinal.
+
+    ``resolve_backend("device:N")`` lands here: each accelerator gets
+    its OWN device/stream — weights committed to ``jax.devices()[N]``,
+    inbound edges device_put onto it — so a multi-GPU (or
+    ``--xla_force_host_platform_device_count``) box is the degenerate
+    single-host two-fleet case: prefill fleet on ``device:0``, decode
+    fleet on ``device:1`` (``core/scheduler.fleet_accelerators``)."""
+    with _DEVICE_BACKENDS_LOCK:
+        be = _DEVICE_BACKENDS.get(ordinal)
+        if be is None:
+            devs = jax.devices()
+            if not 0 <= ordinal < len(devs):
+                raise BackendError(
+                    f"device ordinal {ordinal} out of range "
+                    f"({len(devs)} visible device(s))")
+            be = DeviceBackend(devs[ordinal])
+            be.name = f"device:{ordinal}"
+            _DEVICE_BACKENDS[ordinal] = be
+        return be
+
+
 # ---------------------------------------------------------------------------
 # substrate table — ONE source of truth tying each energy profile (the
 # scheduler's cost-model unit) to the backend it lowers through and the
@@ -362,16 +392,24 @@ def resolve_backend(spec: Union[str, Backend, None],
                     accel=None) -> Backend:
     """Resolve a backend spec to a concrete Backend.
 
-    Priority: explicit ``spec`` (Backend instance or registry name) >
-    the accelerator's ``backend`` profile field > the shared
-    :data:`SUBSTRATES` row of the accelerator's energy profile (the same
-    row the scheduler's cost model prices with) > inferred from the
-    accelerator (mesh -> submesh, mesh-less -> host: the paper's edge
-    units are emulated host-side) > ``device`` (default-device
-    placement when nothing was specified)."""
+    Priority: explicit ``spec`` (Backend instance, registry name, or a
+    ``"device:N"`` ordinal — the per-device committed backend of
+    :func:`device_backend`) > the accelerator's ``backend`` profile
+    field > the shared :data:`SUBSTRATES` row of the accelerator's
+    energy profile (the same row the scheduler's cost model prices
+    with) > inferred from the accelerator (mesh -> submesh, mesh-less ->
+    host: the paper's edge units are emulated host-side) > ``device``
+    (default-device placement when nothing was specified)."""
     if isinstance(spec, Backend):
         return spec
     if spec is not None:
+        if isinstance(spec, str) and spec.startswith("device:"):
+            tail = spec.split(":", 1)[1]
+            if not tail.isdigit():
+                raise BackendError(
+                    f"bad device ordinal in backend spec {spec!r} "
+                    f"(want 'device:<int>')")
+            return device_backend(int(tail))
         try:
             return BACKENDS[spec]
         except KeyError:

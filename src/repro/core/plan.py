@@ -542,7 +542,7 @@ def _backend_for(brick_name: str, accel, *, override, placement_backends,
 
 def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
                  tabm=None, residency: str = "resident",
-                 backend=None, probe=None) -> ExecutionPlan:
+                 backend=None, probe=None, transport=None) -> ExecutionPlan:
     """Compile a BrickGraph (+ optional Placement and TABM ring) into an
     :class:`ExecutionPlan`.
 
@@ -566,6 +566,13 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
     probe: a :class:`~repro.telemetry.probes.WallProbe` that run() /
         produce_many() record per-brick wall-time spans into (the
         telemetry ledger's dynamic population path); None = no probing.
+    transport: a :class:`~repro.core.transport.Transport` instance the
+        plan's cross-accelerator edges are bound to.  None (default) =
+        direct backend edges, exactly the pre-transport behavior; a
+        serializing transport routes every such edge through its wire
+        codec (``Transport.make_edge``), proving the format transparent
+        to plan dataflow — the disaggregated drivers pass their live
+        fleet connection here.
     """
     if residency not in ("resident", "one-brick"):
         raise PlanError(f"unknown residency {residency!r}")
@@ -610,7 +617,9 @@ def compile_plan(graph: BrickGraph, params, *, placement=None, accels=None,
                 key = (src.name if src is not None else "-",
                        accel.name, id(be))
                 if key not in edges:
-                    edges[key] = be.make_edge(src, accel)
+                    edges[key] = (be.make_edge(src, accel)
+                                  if transport is None
+                                  else transport.make_edge(src, accel, be))
                 if edges[key] is not None:
                     inbound[p.name] = edges[key]
         steps.append(PlanStep(

@@ -400,16 +400,69 @@ def kv_block_budgets(pool, total_blocks: int,
 # pod-mode hand-off (the TABM edge between submeshes)
 # ---------------------------------------------------------------------------
 
-class SubmeshPipe:
-    """Producer/consumer hand-off between two submeshes: a sharding-
-    preserving device_put — data moves NPU-slice -> GPU-slice over ICI
-    without a host round trip (the paper's 'bypassing CPU for buffer
-    writes')."""
+# SubmeshPipe moved to core/transport.py (it is the degenerate — same
+# process, nothing serialized — member of the Transport family);
+# re-exported here because SubmeshBackend.make_edge and older callers
+# import it from the scheduler.
+from repro.core.transport import SubmeshPipe  # noqa: E402,F401
 
-    def __init__(self, src: Accelerator, dst: Accelerator, spec):
-        from jax.sharding import NamedSharding
-        self.src, self.dst = src, dst
-        self.dst_sharding = NamedSharding(dst.mesh, spec)
 
-    def transfer(self, x):
-        return jax.device_put(x, self.dst_sharding)
+# ---------------------------------------------------------------------------
+# disaggregated fleets (prefill fleet + decode fleet over a Transport)
+# ---------------------------------------------------------------------------
+
+def fleet_accelerators(transport, n_devices: int = 2) -> List[Accelerator]:
+    """The two-fleet disaggregated topology as scheduler rows.
+
+    "Cost-Efficient Multimodal LLM Inference via Cross-Tier GPU
+    Heterogeneity" (PAPERS.md): vision encode + batched prefill are
+    compute-bound, decode is memory-bound — opposite ideal hardware, so
+    each side gets its own pool.  The prefill fleet is compute-rich and
+    ``static_only`` (it takes the static-shape vision/projector/prefill
+    bricks; the dynamic decode bricks *cannot* land there, so the cut is
+    guaranteed); the decode fleet keeps full memory bandwidth but a
+    fraction of the FLOPs (cheap decode workers).  Both rows' profiles
+    carry ``link_bw = transport.link_bw`` so every cross-fleet edge the
+    chain DP prices is a real serialized wire crossing — the placement
+    responds to the transport (``core/transport.TRANSPORTS``), not to an
+    assumed ICI.
+
+    The fleets lower through per-ordinal device backends
+    (``"device:0"`` / ``"device:1"``) — a multi-GPU box is the
+    degenerate single-host two-fleet case; with one visible device both
+    fleets share ordinal 0."""
+    bw = float(getattr(transport, "link_bw", 8e9))
+    wire = lambda p: dataclasses.replace(p, link_bw=min(p.link_bw, bw))
+    # prefill fleet: a full unit (compute-rich); decode fleet: cheap
+    # workers at a quarter of the FLOPs but the full memory bandwidth
+    # decode's weight streaming wants
+    prefill_p = TPU_V5E
+    decode_p = dataclasses.replace(TPU_V5E,
+                                   peak_flops=TPU_V5E.peak_flops * 0.25)
+    dec_dev = "device:1" if n_devices > 1 else "device:0"
+    return [
+        Accelerator("prefill-fleet", wire(prefill_p), static_only=True,
+                    dynamic_ok=False, backend="device:0"),
+        Accelerator("decode-fleet", wire(decode_p), backend=dec_dev),
+    ]
+
+
+def schedule_split(graph: BrickGraph, transport, n_tokens: int,
+                   objective: str = "latency", batch: int = 1,
+                   calibration: Optional[CostCalibration] = None
+                   ) -> Placement:
+    """Price the prefill/decode split over a serialized transport.
+
+    Runs the same exact chain DP as :func:`schedule`, but over the two
+    fleet rows of :func:`fleet_accelerators` — ``transfer_cost`` then
+    prices every cross-fleet edge at the transport's wire bandwidth, so
+    the scheduler decides what crosses the wire per substrate table AND
+    per transport: a slow socket pushes compute toward fewer crossings,
+    a fast in-process channel frees the DP to cut where the roofline
+    prefers.  ``transport`` may be a Transport class, instance, or
+    registry name (``core/transport.resolve_transport``)."""
+    if isinstance(transport, str):
+        from repro.core.transport import resolve_transport
+        transport = resolve_transport(transport)
+    return schedule(graph, fleet_accelerators(transport), n_tokens,
+                    objective, batch=batch, calibration=calibration)

@@ -1,0 +1,584 @@
+"""Transport — the serialized edge layer for disaggregated fleets.
+
+The paper's zero-copy TABM hand-off assumed producer and consumer share
+one process and one device pool.  At fleet scale ("Cost-Efficient
+Multimodal LLM Inference via Cross-Tier GPU Heterogeneity", PAPERS.md)
+vision/prefill and decode want *different* hardware pools scaled
+independently, so the hand-off must cross a process or machine boundary.
+This module is that boundary as a first-class API, mirroring the
+``BACKENDS`` registry in :mod:`repro.core.backends`:
+
+* :class:`Transport` — the protocol: duplex message send/recv over a
+  checksummed binary wire format, plus ``make_edge`` (how a compiled
+  plan's cross-accelerator edges route when the plan is bound to this
+  transport) and a ``link_bw`` row the scheduler's split pricing reads
+  (``core/scheduler.schedule_split``).
+* :data:`TRANSPORTS` / :func:`resolve_transport` — the registry:
+  ``"inproc"`` (byte queues between two threads), ``"pipe"`` (OS pipes
+  across fork/exec), ``"socket"`` (TCP localhost or LAN).
+* :class:`RemotePrefill` — the wire unit: one request's committed TABM
+  slab plus its prefilled :class:`~repro.serving.kv_cache.PagedKVCache`
+  payload — the *granted* blocks only, never a whole ``max_len`` lane —
+  with the scalar admission metadata (rid, prompt, first token, block
+  grant, slot class) a decode fleet needs to admit it directly into its
+  own paged pool.
+
+Wire format (stdlib only — never pickle, so corruption yields a typed
+:class:`TransportError` instead of arbitrary code paths)::
+
+    MAGIC "TBM1" | rid i64 | header_len u32 |
+    header JSON | crc32(header) u32 |
+    payload bytes (concatenated buffers; lengths in the header) |
+    crc32(payload) u32
+
+The request id sits in the fixed prefix, *before* anything that can be
+corrupted: a frame whose payload fails its checksum still identifies the
+owning request (``TransportError.rid``, ``recoverable=True``) and the
+stream stays aligned — the decode fleet fails exactly that request and
+keeps serving.  A bad magic, a truncated read, or a corrupt header
+(whose buffer lengths can no longer be trusted) is a stream-level
+failure (``recoverable=False``).
+
+Every array crosses as raw bytes with its dtype/shape in the header —
+lossless, which is what makes disaggregated decode bit-identical to the
+single-process engine (tests/test_transport.py, launch/serve_disagg.py).
+
+:class:`SubmeshPipe` (the original intra-pod ICI edge) lives here now:
+it is the degenerate transport — same-process, sharding-preserving,
+nothing serialized — and ``core/scheduler`` re-exports it for
+compatibility.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import socket as _socket
+import struct
+import threading
+import zlib
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+class TransportError(RuntimeError):
+    """A wire-format or channel failure.
+
+    ``rid`` is the owning request when the frame prefix survived (so the
+    caller can fail exactly that request); ``recoverable`` says whether
+    the stream is still frame-aligned (payload checksum mismatch: the
+    frame was fully consumed, keep reading) or dead (truncation, bad
+    magic, corrupt header: lengths can no longer be trusted)."""
+
+    def __init__(self, msg: str, *, rid: Optional[int] = None,
+                 recoverable: bool = False):
+        super().__init__(msg)
+        self.rid = rid
+        self.recoverable = recoverable
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+
+MAGIC = b"TBM1"
+_PREFIX = struct.Struct("<4sqI")       # magic, rid, header_len
+_CRC = struct.Struct("<I")
+
+
+def _crc(data) -> int:
+    return zlib.crc32(data) & 0xFFFFFFFF
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """dtype by *name* ("bfloat16", "float32", ...): extended dtypes like
+    bfloat16 stringify to an opaque void str ("<V2"), so frames carry the
+    name, and decoding registers ml_dtypes when numpy alone cannot
+    resolve it (a decode-fleet process may not have imported jax yet)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        try:
+            return np.dtype(getattr(ml_dtypes, name))
+        except (AttributeError, TypeError):
+            raise TransportError(f"frame names unknown dtype {name!r}") \
+                from None
+
+
+def encode_frame(kind: str, meta: Dict[str, Any],
+                 arrays: Sequence[np.ndarray] = (),
+                 rid: int = -1) -> bytes:
+    """One message as one frame: JSON header (kind + meta + per-buffer
+    dtype/shape/length descriptors) followed by the raw array bytes,
+    each section checksummed."""
+    bufs = [np.ascontiguousarray(a) for a in arrays]
+    header = json.dumps({
+        "kind": kind, "meta": meta,
+        "bufs": [{"dtype": b.dtype.name, "shape": list(b.shape),
+                  "len": int(b.nbytes)} for b in bufs],
+    }).encode()
+    payload = b"".join(b.tobytes() for b in bufs)
+    return b"".join([
+        _PREFIX.pack(MAGIC, rid, len(header)),
+        header, _CRC.pack(_crc(header)),
+        payload, _CRC.pack(_crc(payload)),
+    ])
+
+
+def decode_frame(read: Callable[[int], bytes]
+                 ) -> Tuple[str, Dict[str, Any], List[np.ndarray], int]:
+    """Parse one frame from a ``read(n) -> exactly-n-bytes`` callable
+    (which raises :class:`TransportError` on truncation).  Returns
+    ``(kind, meta, arrays, rid)``; raises :class:`TransportError` typed
+    per the module docstring's failure taxonomy."""
+    magic, rid, header_len = _PREFIX.unpack(read(_PREFIX.size))
+    if magic != MAGIC:
+        raise TransportError(f"bad frame magic {magic!r} (stream "
+                             f"desynchronized or not a transport peer)")
+    header = read(header_len)
+    (want,) = _CRC.unpack(read(_CRC.size))
+    if _crc(header) != want:
+        # the header carries the buffer lengths: with it corrupt the
+        # frame boundary is unknowable, so the stream is dead
+        raise TransportError(
+            f"corrupt frame header for rid {rid} (checksum mismatch)",
+            rid=rid if rid >= 0 else None)
+    try:
+        h = json.loads(header)
+        descs = h["bufs"]
+        total = sum(int(d["len"]) for d in descs)
+    except (ValueError, KeyError, TypeError) as e:
+        raise TransportError(f"unparseable frame header for rid {rid}: "
+                             f"{e}", rid=rid if rid >= 0 else None) from e
+    payload = read(total)
+    (want,) = _CRC.unpack(read(_CRC.size))
+    if _crc(payload) != want:
+        # the frame was fully consumed (lengths were good), so the
+        # stream stays aligned: fail only the owning request
+        raise TransportError(
+            f"corrupt frame payload for rid {rid} (checksum mismatch)",
+            rid=rid if rid >= 0 else None, recoverable=True)
+    arrays, off = [], 0
+    for d in descs:
+        n = int(d["len"])
+        dt = _np_dtype(d["dtype"])
+        arrays.append(np.frombuffer(payload, dtype=dt,
+                                    count=n // dt.itemsize,
+                                    offset=off).reshape(d["shape"]))
+        off += n
+    return h["kind"], h.get("meta", {}), arrays, rid
+
+
+# ---------------------------------------------------------------------------
+# the wire unit
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RemotePrefill:
+    """One prefilled request, ready for remote admission.
+
+    ``kv`` holds, per cache group position, the flat leaf list of the
+    prefill-written state: paged (attention) positions ship ``(L, nb,
+    block_size, ...)`` — the first ``nb`` *written* blocks of the grant,
+    never the whole ``max_len`` lane — and slot-state (SSM / linear
+    attention) positions ship the request's ``(L, 1, ...)`` row.  The
+    tree structure is NOT serialized: both fleets run the same config,
+    so the importer re-derives it from its own pool's treedef
+    (:meth:`repro.serving.kv_cache.PagedKVCache.import_blocks`).
+
+    ``slab`` is the committed TABM slab (trimmed to its true token
+    count): decode itself reads only the imported KV, but the slab rides
+    along so the hand-off is self-contained — the decode fleet holds
+    everything needed to re-prefill or audit the request if its blocks
+    are later lost (failure semantics, docs/ARCHITECTURE.md)."""
+
+    rid: int
+    prompt: np.ndarray                     # int32 prompt token ids
+    first_token: int                       # picked from the prefill logits
+    max_new_tokens: int
+    blocks_granted: int                    # decode-side grant size
+    paged: Tuple[bool, ...]                # per-position layout flags
+    kv: List[List[np.ndarray]]             # per-position flat leaves
+    slot_class: Optional[str] = None
+    slab: Optional[np.ndarray] = None      # committed TABM slab, trimmed
+    prompt_len: int = 0
+
+    def __post_init__(self):
+        if not self.prompt_len:
+            self.prompt_len = int(len(self.prompt))
+
+    def kv_wire_bytes(self) -> int:
+        """Bytes of paged KV actually crossing the wire — the quantity
+        asserted against the whole-lane baseline
+        (``PagedKVCache.slot_lane_bytes``)."""
+        return sum(leaf.nbytes
+                   for pos, leaves in enumerate(self.kv) if self.paged[pos]
+                   for leaf in leaves)
+
+    def to_wire(self) -> Tuple[str, Dict[str, Any], List[np.ndarray]]:
+        meta = {"rid": self.rid, "first_token": int(self.first_token),
+                "max_new_tokens": int(self.max_new_tokens),
+                "blocks_granted": int(self.blocks_granted),
+                "slot_class": self.slot_class,
+                "prompt_len": int(self.prompt_len),
+                "paged": list(self.paged),
+                "kv_layout": [len(leaves) for leaves in self.kv],
+                "has_slab": self.slab is not None}
+        arrays: List[np.ndarray] = [np.asarray(self.prompt, np.int32)]
+        if self.slab is not None:
+            arrays.append(self.slab)
+        for leaves in self.kv:
+            arrays.extend(leaves)
+        return "prefill", meta, arrays
+
+    @classmethod
+    def from_wire(cls, meta: Dict[str, Any],
+                  arrays: List[np.ndarray]) -> "RemotePrefill":
+        try:
+            it = iter(arrays)
+            prompt = next(it)
+            slab = next(it) if meta["has_slab"] else None
+            kv = [[next(it) for _ in range(n)] for n in meta["kv_layout"]]
+            return cls(rid=int(meta["rid"]), prompt=prompt,
+                       first_token=int(meta["first_token"]),
+                       max_new_tokens=int(meta["max_new_tokens"]),
+                       blocks_granted=int(meta["blocks_granted"]),
+                       paged=tuple(bool(p) for p in meta["paged"]),
+                       kv=kv, slot_class=meta.get("slot_class"),
+                       slab=slab, prompt_len=int(meta["prompt_len"]))
+        except (KeyError, StopIteration, TypeError, ValueError) as e:
+            raise TransportError(
+                f"malformed prefill frame for rid {meta.get('rid')}: {e}",
+                rid=meta.get("rid"), recoverable=True) from e
+
+
+# ---------------------------------------------------------------------------
+# the Transport protocol
+# ---------------------------------------------------------------------------
+
+class Transport:
+    """Duplex typed-message channel between a prefill and a decode fleet.
+
+    Subclasses implement the byte movement (``_send_bytes`` /
+    ``_recv_exact``); the base class owns framing, the message API, and
+    the plan-edge routing.  ``link_bw`` is the scheduler's split-pricing
+    row — what one byte crossing THIS transport costs in the chain DP
+    (``core/scheduler.schedule_split``), mirroring how each backend's
+    substrate row prices its compute."""
+
+    name: str = "base"
+    #: modeled wire bandwidth (bytes/s) for the scheduler's split pricing
+    link_bw: float = 8e9
+    #: a serializing transport's plan edges round-trip the wire codec
+    serializes: bool = False
+
+    def __init__(self):
+        self._send_lock = threading.Lock()
+        self._recv_lock = threading.Lock()
+        self.sent_frames = 0
+        self.sent_bytes = 0
+
+    # -- byte movement (subclass responsibility) ----------------------------
+    def _send_bytes(self, data: bytes) -> None:
+        raise NotImplementedError
+
+    def _recv_exact(self, n: int) -> bytes:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+    # -- message api --------------------------------------------------------
+    def send(self, kind: str, meta: Optional[Dict[str, Any]] = None,
+             arrays: Sequence[np.ndarray] = (), rid: int = -1) -> int:
+        """Frame and send one message; returns the frame's wire bytes.
+        Thread-safe (one lock per direction): frames from concurrent
+        senders interleave whole, never torn."""
+        frame = encode_frame(kind, meta or {}, arrays, rid=rid)
+        with self._send_lock:
+            self._send_bytes(frame)
+            self.sent_frames += 1
+            self.sent_bytes += len(frame)
+        return len(frame)
+
+    def send_prefill(self, rp: RemotePrefill) -> int:
+        kind, meta, arrays = rp.to_wire()
+        return self.send(kind, meta, arrays, rid=rp.rid)
+
+    def recv(self) -> Tuple[str, Dict[str, Any], List[np.ndarray], int]:
+        """Receive one message: ``(kind, meta, arrays, rid)``.  Raises
+        :class:`TransportError` per the failure taxonomy — a
+        ``recoverable`` error consumed its whole frame, so the caller
+        may keep receiving."""
+        with self._recv_lock:
+            return decode_frame(self._recv_exact)
+
+    # -- plan-edge routing --------------------------------------------------
+    def make_edge(self, src_accel, dst_accel, backend) -> Optional[Callable]:
+        """The inbound-transfer factory for a plan bound to this
+        transport: delegate placement to the backend (where the value
+        must land), and — on serializing transports — round-trip the
+        value through the wire codec first, so the format is proven
+        transparent to plan dataflow (logits bit-identical across
+        transports, not just decode tokens)."""
+        inner = backend.make_edge(src_accel, dst_accel)
+        if not self.serializes:
+            return inner
+        return _codec_edge(inner)
+
+
+def _codec_edge(inner: Optional[Callable]) -> Callable:
+    """Wrap a backend edge with an encode->decode pass through the exact
+    wire codec messages use.  The host round-trip is the point: this is
+    what the value would survive on a real pipe/socket crossing."""
+    def edge(v):
+        host = np.asarray(v)
+        _, _, (back,), _ = decode_frame(
+            _BytesReader(encode_frame("edge", {}, [host])).read)
+        return back if inner is None else inner(back)
+    return edge
+
+
+class _BytesReader:
+    """``read(n)`` over an in-memory frame, with the same truncation
+    contract the fd/socket readers provide."""
+
+    def __init__(self, data: bytes):
+        self._view = memoryview(data)
+        self._off = 0
+
+    def read(self, n: int) -> bytes:
+        if self._off + n > len(self._view):
+            raise TransportError(
+                f"truncated frame: wanted {n} bytes, "
+                f"{len(self._view) - self._off} left")
+        out = self._view[self._off:self._off + n].tobytes()
+        self._off += n
+        return out
+
+
+# ---------------------------------------------------------------------------
+# concrete transports
+# ---------------------------------------------------------------------------
+
+class InProcTransport(Transport):
+    """Two fleets in one process (or the degenerate single-host multi-GPU
+    case): frames cross a pair of byte queues between threads.  Messages
+    are STILL serialized — the wire format is exercised on every send —
+    but plan edges stay direct device transfers (``serializes=False``):
+    in-process, the zero-copy hand-off IS the transport."""
+
+    name = "inproc"
+    link_bw = 64e9
+
+    def __init__(self):
+        super().__init__()
+        self._tx: "queue.Queue[Optional[bytes]]" = queue.Queue()
+        self._rx: "queue.Queue[Optional[bytes]]" = self._tx  # loopback
+        self._buf = b""
+        self._closed = False
+
+    @classmethod
+    def pair(cls) -> Tuple["InProcTransport", "InProcTransport"]:
+        """Cross-wired duplex pair: a.send -> b.recv and vice versa."""
+        a, b = cls(), cls()
+        a._rx, b._rx = b._tx, a._tx
+        return a, b
+
+    def _send_bytes(self, data: bytes) -> None:
+        if self._closed:
+            raise TransportError("send on a closed inproc transport")
+        self._tx.put(bytes(data))
+
+    def _recv_exact(self, n: int) -> bytes:
+        while len(self._buf) < n:
+            frame = self._rx.get()
+            if frame is None:
+                raise TransportError(
+                    f"truncated stream: peer closed with {len(self._buf)} "
+                    f"of {n} wanted bytes buffered")
+            self._buf += frame
+        out, self._buf = self._buf[:n], self._buf[n:]
+        return out
+
+    def close(self) -> None:
+        self._closed = True
+        self._tx.put(None)              # wakes a peer blocked in recv
+
+
+class PipeTransport(Transport):
+    """Inter-process transport over OS pipes: the parent spawns the
+    decode fleet as a subprocess and hands it the fd pair
+    (``launch/serve_disagg.py --role decode --recv-fd N --send-fd M``)."""
+
+    name = "pipe"
+    link_bw = 2e9
+    serializes = True
+
+    def __init__(self, recv_fd: Optional[int], send_fd: Optional[int]):
+        super().__init__()
+        self._recv_fd = recv_fd
+        self._send_fd = send_fd
+
+    @classmethod
+    def pair(cls) -> Tuple["PipeTransport", "PipeTransport"]:
+        """Duplex pair over two pipes (same process; the subprocess case
+        passes the raw fds through ``subprocess.Popen(pass_fds=...)``)."""
+        a2b_r, a2b_w = os.pipe()
+        b2a_r, b2a_w = os.pipe()
+        return cls(b2a_r, a2b_w), cls(a2b_r, b2a_w)
+
+    def _send_bytes(self, data: bytes) -> None:
+        if self._send_fd is None:
+            raise TransportError("pipe transport has no send fd")
+        view = memoryview(data)
+        while view:
+            try:
+                n = os.write(self._send_fd, view)
+            except OSError as e:
+                raise TransportError(f"pipe send failed: {e}") from e
+            view = view[n:]
+
+    def _recv_exact(self, n: int) -> bytes:
+        if self._recv_fd is None:
+            raise TransportError("pipe transport has no recv fd")
+        chunks, got = [], 0
+        while got < n:
+            try:
+                chunk = os.read(self._recv_fd, n - got)
+            except OSError as e:
+                raise TransportError(f"pipe recv failed: {e}") from e
+            if not chunk:
+                raise TransportError(
+                    f"truncated stream: pipe closed with {got} of {n} "
+                    f"wanted bytes read")
+            chunks.append(chunk)
+            got += len(chunk)
+        return b"".join(chunks)
+
+    def close(self) -> None:
+        for fd in (self._send_fd, self._recv_fd):
+            if fd is not None:
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+        self._send_fd = self._recv_fd = None
+
+
+class SocketTransport(Transport):
+    """TCP transport: the fleet boundary as a real network hop — same
+    codec, connectable across machines (the driver uses localhost)."""
+
+    name = "socket"
+    link_bw = 1e9
+    serializes = True
+
+    def __init__(self, sock: "_socket.socket"):
+        super().__init__()
+        self._sock = sock
+        sock.setsockopt(_socket.IPPROTO_TCP, _socket.TCP_NODELAY, 1)
+
+    @classmethod
+    def listen(cls, host: str = "127.0.0.1", port: int = 0
+               ) -> Tuple["_socket.socket", int]:
+        srv = _socket.socket()
+        srv.setsockopt(_socket.SOL_SOCKET, _socket.SO_REUSEADDR, 1)
+        srv.bind((host, port))
+        srv.listen(1)
+        return srv, srv.getsockname()[1]
+
+    @classmethod
+    def accept(cls, srv: "_socket.socket",
+               timeout: Optional[float] = 60.0) -> "SocketTransport":
+        srv.settimeout(timeout)
+        conn, _ = srv.accept()
+        return cls(conn)
+
+    @classmethod
+    def connect(cls, host: str, port: int,
+                timeout: Optional[float] = 60.0) -> "SocketTransport":
+        return cls(_socket.create_connection((host, port), timeout=timeout))
+
+    def _send_bytes(self, data: bytes) -> None:
+        try:
+            self._sock.sendall(data)
+        except OSError as e:
+            raise TransportError(f"socket send failed: {e}") from e
+
+    def _recv_exact(self, n: int) -> bytes:
+        chunks, got = [], 0
+        while got < n:
+            try:
+                chunk = self._sock.recv(n - got)
+            except OSError as e:
+                raise TransportError(f"socket recv failed: {e}") from e
+            if not chunk:
+                raise TransportError(
+                    f"truncated stream: socket closed with {got} of {n} "
+                    f"wanted bytes read")
+            chunks.append(chunk)
+            got += len(chunk)
+        return b"".join(chunks)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# registry — mirrors core/backends.BACKENDS
+# ---------------------------------------------------------------------------
+
+TRANSPORTS: Dict[str, type] = {
+    "inproc": InProcTransport,
+    "pipe": PipeTransport,
+    "socket": SocketTransport,
+}
+
+
+def register_transport(cls: type) -> type:
+    """Add a custom transport to the registry (a class, not an instance:
+    transports are stateful connections, instantiated per fleet pair)."""
+    TRANSPORTS[cls.name] = cls
+    return cls
+
+
+def resolve_transport(spec) -> type:
+    """Registry-name or class -> transport class (mirror of
+    ``backends.resolve_backend``, minus instantiation: connections are
+    built by the driver via ``pair()`` / ``listen`` + ``connect``)."""
+    if isinstance(spec, type) and issubclass(spec, Transport):
+        return spec
+    try:
+        return TRANSPORTS[spec]
+    except (KeyError, TypeError):
+        raise TransportError(f"unknown transport {spec!r}; registered: "
+                             f"{sorted(TRANSPORTS)}") from None
+
+
+# ---------------------------------------------------------------------------
+# the intra-pod degenerate case (moved from core/scheduler)
+# ---------------------------------------------------------------------------
+
+class SubmeshPipe:
+    """Producer/consumer hand-off between two submeshes: a sharding-
+    preserving device_put — data moves NPU-slice -> GPU-slice over ICI
+    without a host round trip (the paper's 'bypassing CPU for buffer
+    writes').  The degenerate transport: same process, nothing
+    serialized; ``core/scheduler`` re-exports it."""
+
+    def __init__(self, src, dst, spec):
+        import jax
+        from jax.sharding import NamedSharding
+        self.src, self.dst = src, dst
+        self.dst_sharding = NamedSharding(dst.mesh, spec)
+        self._put = jax.device_put
+
+    def transfer(self, x):
+        return self._put(x, self.dst_sharding)

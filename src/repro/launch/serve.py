@@ -10,6 +10,7 @@ latency, memory, modeled watts/hours).
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -20,6 +21,7 @@ from repro.configs import get_config, list_archs
 from repro.core.power import BatteryAwareExecutor, PMU
 from repro.launch.steps import init_params
 from repro.serving.engine import Request, ServingEngine
+from repro.telemetry.calibration import CostCalibration
 
 
 def main(argv=None):
@@ -34,6 +36,11 @@ def main(argv=None):
     ap.add_argument("--quantize", default=None,
                     choices=[None, "nanomind-default", "all-q4", "dec-q2"])
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--calibration", default=None, metavar="PATH",
+                    help="persist wall-clock cost calibration across "
+                         "restarts: load PATH if it exists, feed it to "
+                         "the engine's energy governor, and atomically "
+                         "re-save the measured table on shutdown")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -50,8 +57,14 @@ def main(argv=None):
 
     executor = BatteryAwareExecutor(PMU())
     executor.pmu.level = args.battery
+    calibration = None
+    if args.calibration and os.path.exists(args.calibration):
+        calibration = CostCalibration.load(args.calibration)
+        print(f"[serve] loaded calibration from {args.calibration} "
+              f"({len(calibration)} entries)")
     eng = ServingEngine(cfg, params, n_slots=args.slots,
-                        max_len=args.max_len, executor=executor)
+                        max_len=args.max_len, executor=executor,
+                        calibration=calibration)
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -84,6 +97,20 @@ def main(argv=None):
         # every vision hand-off really went through the ring: writes ==
         # reads == served vlm requests, stalls = producer backpressure
         print(f"  tabm ring: {eng.tabm.stats}")
+    if args.calibration:
+        # fold this run's wall-clock probes on top of whatever table we
+        # loaded, so the file converges across restarts (save is atomic:
+        # tmp + os.replace)
+        table = eng.measured_calibration()
+        if calibration is not None:
+            for key, s in table.to_dict()["table"].items():
+                brick, _, prof = key.rpartition("@")
+                calibration.observe(brick, prof or None, s["seconds"],
+                                    s["tokens"], s["joules"], n=s["n"])
+            table = calibration
+        table.save(args.calibration)
+        print(f"  calibration: saved {len(table)} entries to "
+              f"{args.calibration}")
 
 
 if __name__ == "__main__":

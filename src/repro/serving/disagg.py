@@ -1,0 +1,282 @@
+"""Disaggregated prefill/decode fleets over a Transport.
+
+The fleet-scale serving topology ("Cost-Efficient Multimodal LLM
+Inference via Cross-Tier GPU Heterogeneity", PAPERS.md): vision encode +
+batched prefill are compute-bound, decode is memory-bound, so each side
+runs its own :class:`~repro.serving.engine.ServingEngine` on its own
+hardware pool and they meet only at a serialized
+:class:`~repro.core.transport.Transport`:
+
+* :class:`PrefillWorker` — drives the engine's staging + grouped batched
+  prefill (``prefill_step``), then exports every newly admitted request
+  as a :class:`~repro.core.transport.RemotePrefill` — committed TABM
+  slab + the *written* KV blocks + block grant, never a whole
+  ``max_len`` lane — and streams it over the wire
+  (``transport.send_prefill``).  Its engine never decodes; its slots
+  recycle the moment a request ships, so prefill capacity is sized and
+  scaled independently of decode.
+* :class:`DecodeWorker` — receives frames, admits each prefill straight
+  into its own paged pool (``engine.admit_remote``; a full pool decodes
+  a step to retire capacity and retries — continuous batching across
+  the fleet boundary), cohort-decodes everything to completion, and
+  streams per-request results back on the same transport.
+
+Failure semantics (the wire contract, core/transport.py): a frame whose
+payload fails its checksum is *recoverable* — the stream stayed aligned
+and the rid survived in the frame prefix, so the decode fleet fails
+exactly that request (a ``result`` frame with the error) and keeps
+serving.  A truncated or header-corrupt stream is fatal: every request
+still unresolved fails with the stream error.  Prefill-side staging
+failures cross as ``failed`` frames so the decode side can account for
+every submitted rid.
+
+Frame kinds on the wire::
+
+    prefill  prefill fleet -> decode fleet   RemotePrefill (slab + KV)
+    failed   prefill fleet -> decode fleet   rid + error (staging failed)
+    done     either direction                end of stream
+    result   decode fleet -> prefill fleet   rid + tokens (+ error)
+
+Decode tokens are bit-identical to the single-process engine: the
+decode worker runs the *unmodified* ``step()`` over imported state that
+round-tripped the lossless wire codec, with the same first token picked
+from the same prefill logits (launch/serve_disagg.py asserts this
+against a fresh single-process oracle on every run).  Disaggregated
+serving is greedy-only — temperature 0 is enforced at submit, because a
+sampled token stream cannot be split across two engines' RNGs.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.transport import RemotePrefill, Transport, TransportError
+from repro.serving.engine import Request, ServingEngine
+
+
+@dataclass
+class DisaggResult:
+    """One request's outcome as it crossed back over the wire."""
+
+    rid: int
+    tokens: List[int] = field(default_factory=list)
+    error: Optional[str] = None
+
+
+@dataclass
+class PrefillStats:
+    """Wire accounting for the prefill fleet — the evidence the driver
+    asserts on: ``kv_wire_bytes`` (paged KV actually shipped) vs
+    ``lane_bytes_baseline`` (what whole ``max_len`` lanes would cost)."""
+
+    sent: int = 0
+    failed: int = 0
+    wire_bytes: int = 0
+    kv_wire_bytes: int = 0
+    lane_bytes_baseline: int = 0
+
+
+class PrefillWorker:
+    """The prefill fleet: vision encode -> projector -> grouped batched
+    prefill, streamed out as RemotePrefill frames."""
+
+    def __init__(self, cfg, params, transport: Transport, *,
+                 max_steps: int = 10_000, **engine_kwargs):
+        engine_kwargs.setdefault("async_staging", False)
+        self.transport = transport
+        self.max_steps = max_steps
+        self.engine = ServingEngine(cfg, params, capture_slab=True,
+                                    **engine_kwargs)
+        self.stats = PrefillStats()
+        self._done_seen = 0
+
+    def submit(self, req: Request) -> None:
+        if req.temperature != 0.0:
+            raise ValueError(
+                f"disaggregated serving is greedy-only (request "
+                f"{req.rid} has temperature {req.temperature})")
+        self.engine.submit(req)
+
+    def _flush_failures(self) -> None:
+        """Staging/admission failures land in engine.done; cross them as
+        ``failed`` frames so the decode side accounts for every rid."""
+        while self._done_seen < len(self.engine.done):
+            req = self.engine.done[self._done_seen]
+            self._done_seen += 1
+            self.stats.failed += 1
+            self.stats.wire_bytes += self.transport.send(
+                "failed", {"rid": req.rid, "error": repr(req.error)},
+                rid=req.rid)
+
+    def run(self) -> PrefillStats:
+        """Prefill and ship everything submitted, then send ``done``."""
+        eng = self.engine
+        self.stats.lane_bytes_baseline = eng.slots.slot_lane_bytes
+        steps = 0
+        while eng.queue or eng.live:
+            if steps >= self.max_steps:
+                raise RuntimeError(
+                    f"prefill fleet made no progress in "
+                    f"{self.max_steps} admission rounds")
+            steps += 1
+            for req in eng.prefill_step():
+                rp = eng.export_remote(req)
+                self.stats.sent += 1
+                self.stats.kv_wire_bytes += rp.kv_wire_bytes()
+                self.stats.wire_bytes += self.transport.send_prefill(rp)
+            self._flush_failures()
+        self.transport.send("done", {})
+        return self.stats
+
+    def collect(self, n: int) -> Dict[int, DisaggResult]:
+        """Receive ``n`` result frames (then the decode fleet's ``done``)
+        and return them keyed by rid."""
+        results: Dict[int, DisaggResult] = {}
+        while len(results) < n:
+            kind, meta, arrays, rid = self.transport.recv()
+            if kind == "done":
+                break
+            if kind != "result":
+                raise TransportError(
+                    f"unexpected frame kind {kind!r} on the result path")
+            tokens = [int(t) for t in arrays[0]] if arrays else []
+            results[rid] = DisaggResult(rid=rid, tokens=tokens,
+                                        error=meta.get("error"))
+        return results
+
+
+class DecodeWorker:
+    """The decode fleet: admit RemotePrefill frames into the paged pool,
+    cohort-decode to completion, stream results back."""
+
+    def __init__(self, cfg, params, transport: Transport, *,
+                 max_steps: int = 100_000, **engine_kwargs):
+        engine_kwargs.setdefault("async_staging", False)
+        self.transport = transport
+        self.max_steps = max_steps
+        self.engine = ServingEngine(cfg, params, **engine_kwargs)
+        self.results: Dict[int, DisaggResult] = {}
+
+    def _admit(self, rp: RemotePrefill) -> None:
+        eng = self.engine
+        while not eng.admit_remote(rp):
+            # pool full: decode one step so a finishing request retires
+            # and frees the slot/blocks this admission needs
+            if not eng.live:
+                raise RuntimeError(
+                    f"request {rp.rid} needs {rp.blocks_granted} blocks "
+                    f"but the idle pool cannot grant them (decode fleet "
+                    f"sized too small for one request)")
+            eng.step()
+
+    def run(self) -> Dict[int, DisaggResult]:
+        """Serve the stream to completion.  Recoverable wire errors fail
+        only the owning request; a fatal stream error fails everything
+        unresolved, then propagates."""
+        eng = self.engine
+        expected: List[int] = []               # rids in arrival order
+        stream_error: Optional[TransportError] = None
+        while True:
+            try:
+                kind, meta, arrays, rid = self.transport.recv()
+            except TransportError as e:
+                if e.recoverable:
+                    # the frame was consumed whole and named its owner:
+                    # fail exactly that request, keep receiving
+                    if e.rid is not None:
+                        expected.append(e.rid)
+                        self.results[e.rid] = DisaggResult(
+                            rid=e.rid, error=repr(e))
+                    continue
+                stream_error = e
+                break
+            if kind == "done":
+                break
+            if kind == "failed":
+                expected.append(rid)
+                self.results[rid] = DisaggResult(
+                    rid=rid, error=meta.get("error"))
+                continue
+            if kind != "prefill":
+                continue                       # ignore unknown kinds
+            try:
+                rp = RemotePrefill.from_wire(meta, arrays)
+                self._admit(rp)
+                expected.append(rp.rid)
+            except TransportError as e:
+                if e.rid is not None:
+                    expected.append(e.rid)
+                    self.results[e.rid] = DisaggResult(rid=e.rid,
+                                                       error=repr(e))
+        steps = 0
+        while eng.live and steps < self.max_steps:
+            eng.step()
+            steps += 1
+        for req in eng.done:
+            if req.rid in self.results:
+                continue
+            self.results[req.rid] = DisaggResult(
+                rid=req.rid, tokens=list(req.out_tokens),
+                error=None if req.error is None else repr(req.error))
+        if stream_error is not None:
+            for rid in expected:
+                if rid not in self.results:
+                    self.results[rid] = DisaggResult(
+                        rid=rid, error=repr(stream_error))
+        for rid in expected:                   # arrival order, duplex back
+            r = self.results[rid]
+            self.transport.send(
+                "result", {"rid": r.rid, "error": r.error},
+                # host list -> host array, no device involved
+                arrays=[np.asarray(r.tokens, np.int32)],  # replint: disable=host-sync
+                rid=r.rid)
+        self.transport.send("done", {})
+        if stream_error is not None:
+            raise stream_error
+        return self.results
+
+
+def serve_disagg_inproc(cfg, params, requests: List[Request], *,
+                        prefill_kwargs: Optional[dict] = None,
+                        decode_kwargs: Optional[dict] = None,
+                        ) -> Tuple[Dict[int, DisaggResult], PrefillStats]:
+    """The two-fleet topology in one process: an
+    :class:`~repro.core.transport.InProcTransport` pair, the decode
+    worker on its own thread — the degenerate single-host case (and the
+    README's executable example).  Returns ``(results by rid,
+    prefill-side wire stats)``."""
+    from repro.core.transport import InProcTransport
+    a, b = InProcTransport.pair()
+    pre = PrefillWorker(cfg, params, a, **(prefill_kwargs or {}))
+    dec = DecodeWorker(cfg, params, b, **(decode_kwargs or {}))
+    errs: List[BaseException] = []
+
+    def _decode():
+        try:
+            dec.run()
+        except BaseException as e:            # surfaces after join
+            errs.append(e)
+            b.close()                         # unblocks the collector
+
+    t = threading.Thread(target=_decode, name="decode-fleet", daemon=True)
+    t.start()
+    try:
+        for req in requests:
+            pre.submit(req)
+        stats = pre.run()
+        try:
+            results = pre.collect(len(requests))
+        except TransportError:
+            if errs:                          # the root cause, not the close
+                raise errs[0]
+            raise
+    finally:
+        t.join(timeout=120.0)
+        pre.engine.shutdown()
+        dec.engine.shutdown()
+    if errs:
+        raise errs[0]
+    return results, stats

@@ -159,6 +159,10 @@ class Request:
                                                # (cross-class KV reservation
                                                # once >= engine.aging_steps)
     error: Optional[BaseException] = None      # staging/engine failure
+    # committed TABM slab, trimmed to its true token count — captured at
+    # vision bind when the engine runs capture_slab=True (the prefill
+    # fleet: the slab rides the wire so the hand-off is self-contained)
+    slab: Optional[np.ndarray] = field(default=None, repr=False)
     # staged-slab sharing: identical vision bytes stage once.  share_of
     # points at the request that owns the staging; the owner's sharers
     # list is granted refcounted views of its slot at bind time
@@ -386,7 +390,8 @@ class ServingEngine:
                  kv_blocks: Optional[int] = None,
                  max_cohort: Optional[int] = None,
                  share_staged: bool = True,
-                 calibration: Optional[CostCalibration] = None):
+                 calibration: Optional[CostCalibration] = None,
+                 capture_slab: bool = False):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
@@ -481,6 +486,9 @@ class ServingEngine:
         # staged-slab dedup registry: share key -> owning request
         self.share_staged = bool(share_staged and self.tabm is not None)
         self._stage_keys: Dict[tuple, Request] = {}
+        # prefill-fleet mode: keep each request's committed slab (host
+        # copy, trimmed) at vision bind, so export_remote can ship it
+        self.capture_slab = bool(capture_slab)
 
     # -- public api ----------------------------------------------------------
     def submit(self, req: Request):
@@ -811,6 +819,8 @@ class ServingEngine:
                     f"shared slot {req.tabm_slot} ({req.slot_class}) "
                     f"recycled before request {req.rid} bound its view")
             view, n = got
+            if self.capture_slab:
+                req.slab = np.array(view[:n])      # host copy, trimmed
             return view[None, :n]
         # normally immediate — admission only runs once `staged` is set,
         # which the worker sets strictly after commit — but this is the
@@ -832,6 +842,8 @@ class ServingEngine:
         slot, view, n = got
         req._tabm_gen = self._ring_of(req).slot_generation(slot)
         self._grant_shares(req, slot)
+        if self.capture_slab:
+            req.slab = np.array(view[:n])          # host copy, trimmed
         return view[None, :n]
 
     def _grant_shares(self, owner: Request, slot: int):
@@ -1246,6 +1258,97 @@ class ServingEngine:
             self.slots.release(slot)
             self.stats.finished += 1
             self._trace_event("finish", req.rid)
+
+    # -- disaggregated fleets (serving/disagg.py) ----------------------------
+    def prefill_step(self) -> List[Request]:
+        """One admission round without decoding — the prefill fleet's
+        step: staging hand-off + grouped batched prefill exactly as
+        :meth:`step` would run them, but the newly admitted requests
+        (prefilled cache landed, first token picked from the prefill
+        logits) are *returned* instead of decoded, ready for
+        :meth:`export_remote`.  Requests whose staging failed land in
+        ``done`` as usual."""
+        before = set(self.live)
+        self._admit()
+        self.stats.steps += 1
+        return [self.live[s] for s in sorted(set(self.live) - before)]
+
+    def export_remote(self, req: Request):
+        """Hand a just-prefilled request off the engine as a
+        :class:`~repro.core.transport.RemotePrefill`: export the
+        *written* KV blocks (the block-aligned prompt bucket — never the
+        whole grant, never a whole lane), pop the request from the live
+        set, and release its slot and blocks — this engine is done with
+        it; the decode fleet owns it now.  Must run before any decode
+        step touches the slot (the prefill fleet never decodes, so the
+        per-slot length still equals the prompt length)."""
+        from repro.core.transport import RemotePrefill
+        slot = req.slot
+        if slot is None or self.live.get(slot) is not req:
+            raise RuntimeError(
+                f"request {req.rid} is not live on this engine")
+        bs = self.slots.block_size
+        bucket = bucket_length(len(req.tokens), buckets=self._buckets())
+        nb_written = -(-bucket // bs)
+        granted = len(self.slots.block_tables[slot])
+        rp = RemotePrefill(
+            rid=req.rid,
+            prompt=np.asarray(req.tokens, np.int32),
+            first_token=int(req.out_tokens[0]),
+            max_new_tokens=int(req.max_new_tokens),
+            blocks_granted=granted,
+            paged=self.slots.paged,
+            kv=self.slots.export_blocks(slot, nb_written),
+            slot_class=req.slot_class,
+            slab=req.slab,
+            prompt_len=int(self.slots.lengths[slot]))
+        del self.live[slot]
+        self.slots.release(slot)
+        req.slot = None
+        self._trace_event("export_remote", req.rid)
+        return rp
+
+    def admit_remote(self, msg) -> bool:
+        """Admit a :class:`~repro.core.transport.RemotePrefill` streamed
+        from a prefill fleet straight into the paged pool: take a slot,
+        grant the request's full block count, land the shipped written
+        blocks (:meth:`PagedKVCache.import_blocks`), and enter the
+        request live with its first token — from here :meth:`step`
+        decodes it exactly like a locally prefilled request (same cohort
+        step, same EOS/max-new semantics: bit-identical tokens).
+
+        Returns False — admit nothing, change nothing — when no slot or
+        too few free blocks are available; the caller decodes a step to
+        retire capacity and retries (continuous batching across the
+        fleet boundary)."""
+        if self._closed:
+            raise EngineClosed("engine already shut down")
+        if tuple(msg.paged) != tuple(self.slots.paged):
+            raise RuntimeError(
+                f"remote prefill paged layout {tuple(msg.paged)} does not "
+                f"match this pool's {tuple(self.slots.paged)} (fleet "
+                f"config mismatch)")
+        if int(msg.blocks_granted) > self.slots.free_block_count:
+            return False
+        slot = self.slots.take_slot()
+        if slot is None:
+            return False
+        self.slots.grant_blocks(slot, int(msg.blocks_granted),
+                                slot_class=msg.slot_class)
+        self.slots.import_blocks(slot, msg.kv)
+        self.slots.lengths[slot] = int(msg.prompt_len)
+        req = Request(rid=int(msg.rid),
+                      tokens=np.asarray(msg.prompt, np.int32),
+                      max_new_tokens=int(msg.max_new_tokens),
+                      slot_class=msg.slot_class)
+        req.slot = slot
+        req.out_tokens.append(int(msg.first_token))
+        req.first_token_t = time.time()
+        req._staged_ev.set()
+        self.live[slot] = req
+        self.stats.prefills += 1
+        self._trace_event("admit_remote", req.rid)
+        return True
 
     # -- reporting / telemetry ----------------------------------------------
     def memory_bytes(self) -> Dict[str, int]:

@@ -293,6 +293,87 @@ class PagedKVCache:
             out[i, :len(tbl)] = tbl
         return out
 
+    # -- fleet wire (disaggregated prefill -> decode hand-off) ---------------
+    @property
+    def slot_lane_bytes(self) -> int:
+        """Paged bytes of one whole ``max_len`` lane — what shipping a
+        flat per-slot row (``blocks_per_slot`` blocks across every paged
+        position) would cost.  The baseline
+        :meth:`~repro.core.transport.RemotePrefill.kv_wire_bytes` is
+        asserted against: a disaggregated hand-off ships only the
+        *written* blocks, so its wire bytes must come in under this."""
+        per_block = sum(
+            leaf.nbytes // self.n_blocks
+            for pos, paged in enumerate(self.paged) if paged
+            for leaf in jax.tree.leaves(self.pool[pos]))
+        return per_block * self.blocks_per_slot
+
+    def export_blocks(self, slot: int, n_blocks: int) -> List[List[Any]]:
+        """Pull one request's prefill-written cache off the device for
+        the wire: per group position, the flat leaf list — paged
+        positions as ``(L, nb, block_size, ...)`` host arrays holding the
+        first ``n_blocks`` granted blocks (the *written* ones — never the
+        whole lane), slot-state positions as the request's ``(L, 1,
+        ...)`` row.  Tree structure is not exported; the importing pool
+        re-derives it from its own treedef (same config both fleets).
+        The ``np.asarray`` pulls are the serialization boundary — this
+        data is leaving the process, so the device sync is the point."""
+        tbl = self.block_tables.get(slot, [])
+        if n_blocks > len(tbl):
+            raise RuntimeError(
+                f"export of {n_blocks} blocks from slot {slot} which "
+                f"holds {len(tbl)}")
+        ids = jnp.asarray(tbl[:n_blocks], jnp.int32)
+        out: List[List[Any]] = []
+        for pos, paged in enumerate(self.paged):
+            if paged:
+                out.append([
+                    np.asarray(jnp.take(leaf, ids, axis=1))  # replint: disable=host-sync
+                    for leaf in jax.tree.leaves(self.pool[pos])])
+            else:
+                out.append([
+                    np.asarray(leaf[:, slot:slot + 1])  # replint: disable=host-sync
+                    for leaf in jax.tree.leaves(self.pool[pos])])
+        return out
+
+    def import_blocks(self, slot: int, payload: List[List[Any]]) -> None:
+        """Land an :meth:`export_blocks` payload in this pool at `slot`
+        (which must already hold a block grant at least as long as the
+        payload): paged leaves reshape back to one batch-1 block-aligned
+        prefill and reuse the donated :func:`_insert_blocks` scatter into
+        the slot's own granted blocks; slot-state leaves scatter by slot
+        id.  Byte-for-byte: export -> wire -> import preserves every leaf
+        exactly (tests/test_transport.py), which is what makes
+        disaggregated decode bit-identical to single-process."""
+        bs = self.block_size
+        tbl = self.block_tables.get(slot)
+        idx = jnp.asarray([slot], jnp.int32)
+        new_pool = list(self.pool)
+        for pos, paged in enumerate(self.paged):
+            treedef = jax.tree.structure(self.pool[pos])
+            leaves = [jnp.asarray(l) for l in payload[pos]]
+            batch = jax.tree.unflatten(treedef, leaves)
+            if paged:
+                nb = int(payload[pos][0].shape[1])
+                if tbl is None or len(tbl) < nb:
+                    raise RuntimeError(
+                        f"import of {nb} blocks into slot {slot} which "
+                        f"holds {0 if tbl is None else len(tbl)}")
+                ids = jnp.asarray(  # host block table, no device involved
+                    np.asarray(tbl[:nb], np.int32)  # replint: disable=host-sync
+                    .reshape(1, nb))
+                batch = jax.tree.map(
+                    lambda l: l.reshape((l.shape[0], 1, nb * bs)
+                                        + l.shape[3:]), batch)
+                new_pool[pos] = jax.tree.map(
+                    lambda p, m: _insert_blocks(p, m, ids, bs),
+                    new_pool[pos], batch)
+            else:
+                new_pool[pos] = jax.tree.map(
+                    lambda p, m: _insert_slots(p, m, idx),
+                    new_pool[pos], batch)
+        self.pool = tuple(new_pool)
+
     # -- invariants / reporting ---------------------------------------------
     def check_block_invariants(self):
         """Raise unless the allocator is conservation-clean: every block

@@ -1,6 +1,11 @@
-"""Disaggregated submesh serving (the paper's NPU/GPU split at pod scale):
-encoder submesh -> SubmeshPipe (ICI) -> TABM -> decoder submesh.
-Subprocess: needs 8 placeholder devices."""
+"""Disaggregated two-fleet serving: prefill engine -> Transport ->
+decode engine, end to end through the real launcher.  The launcher
+itself asserts the acceptance bar (greedy tokens bit-identical to a
+fresh single-process oracle across >= 2 slot classes, paged KV wire
+bytes < whole-lane baseline) and prints "OK: disaggregated" only when
+every assertion held, so the test just runs it per transport.
+Subprocess: needs 8 placeholder devices for the device:N fleet
+backends."""
 import os
 import subprocess
 import sys
@@ -9,12 +14,15 @@ import pytest
 
 
 @pytest.mark.slow
-def test_serve_disagg_pipeline():
+@pytest.mark.parametrize("transport", ["inproc", "pipe", "socket"])
+def test_serve_disagg_fleets(transport):
     env = dict(os.environ, PYTHONPATH="src",
                XLA_FLAGS="--xla_force_host_platform_device_count=8")
     proc = subprocess.run(
-        [sys.executable, "-m", "repro.launch.serve_disagg"],
+        [sys.executable, "-m", "repro.launch.serve_disagg",
+         "--transport", transport, "--requests", "4"],
         capture_output=True, text=True, timeout=600, env=env,
         cwd=os.path.join(os.path.dirname(__file__), ".."))
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "OK: disaggregated" in proc.stdout
+    assert f"over {transport}" in proc.stdout

@@ -1,0 +1,246 @@
+"""Transport wire format, failure taxonomy, KV block export/import, and
+the scheduler's transport-aware split pricing (core/transport.py)."""
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.backends import BackendError, resolve_backend
+from repro.core.bricks import decompose
+from repro.core.scheduler import fleet_accelerators, schedule_split
+from repro.core.transport import (InProcTransport, MAGIC, PipeTransport,
+                                  RemotePrefill, SocketTransport,
+                                  TRANSPORTS, TransportError, _BytesReader,
+                                  decode_frame, encode_frame,
+                                  resolve_transport)
+from repro.serving.kv_cache import PagedKVCache
+
+_PREFIX_SIZE = struct.calcsize("<4sqI")
+
+
+def _decode(frame: bytes):
+    return decode_frame(_BytesReader(frame).read)
+
+
+# ---------------------------------------------------------------------------
+# codec
+# ---------------------------------------------------------------------------
+
+def test_codec_roundtrip_bit_exact():
+    import ml_dtypes
+    rng = np.random.default_rng(0)
+    arrays = [
+        rng.standard_normal((3, 5)).astype(np.float32),
+        rng.integers(-9, 9, (7,)).astype(np.int32),
+        rng.integers(0, 255, (2, 2, 2)).astype(np.uint8),
+        np.array([], np.float32),
+        # bfloat16: dtype.str is an opaque "<V2", so frames must carry
+        # the NAME — the exact bug class this test pins
+        rng.standard_normal((4, 3)).astype(ml_dtypes.bfloat16),
+    ]
+    meta = {"rid": 3, "nested": {"k": [1, 2]}, "s": "x"}
+    kind, got_meta, got, rid = _decode(
+        encode_frame("prefill", meta, arrays, rid=3))
+    assert (kind, rid, got_meta) == ("prefill", 3, meta)
+    assert len(got) == len(arrays)
+    for a, b in zip(arrays, got):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+
+
+def test_codec_bad_magic_is_fatal():
+    frame = bytearray(encode_frame("x", {}, rid=1))
+    frame[:4] = b"NOPE"
+    with pytest.raises(TransportError) as ei:
+        _decode(bytes(frame))
+    assert not ei.value.recoverable
+
+
+def test_codec_truncation_is_fatal():
+    frame = encode_frame("x", {}, [np.arange(8, dtype=np.int64)], rid=1)
+    with pytest.raises(TransportError) as ei:
+        _decode(frame[:-10])
+    assert not ei.value.recoverable
+
+
+def test_codec_corrupt_header_is_fatal():
+    frame = bytearray(encode_frame("x", {"a": 1}, rid=5))
+    frame[_PREFIX_SIZE] ^= 0xFF           # first header byte
+    with pytest.raises(TransportError) as ei:
+        _decode(bytes(frame))
+    assert not ei.value.recoverable and ei.value.rid == 5
+
+
+def test_codec_corrupt_payload_fails_only_owner():
+    """Payload corruption is recoverable: the frame was consumed whole
+    (header lengths were good), the rid survived in the prefix, and the
+    NEXT frame on the stream still decodes."""
+    bad = bytearray(encode_frame(
+        "prefill", {}, [np.arange(32, dtype=np.float64)], rid=7))
+    header_len = struct.unpack_from("<4sqI", bytes(bad))[2]
+    bad[_PREFIX_SIZE + header_len + 4 + 3] ^= 0xFF    # a payload byte
+    ok = encode_frame("prefill", {"fine": True}, rid=8)
+    reader = _BytesReader(bytes(bad) + ok)
+    with pytest.raises(TransportError) as ei:
+        decode_frame(reader.read)
+    assert ei.value.recoverable and ei.value.rid == 7
+    kind, meta, _, rid = decode_frame(reader.read)
+    assert (kind, rid, meta) == ("prefill", 8, {"fine": True})
+
+
+# ---------------------------------------------------------------------------
+# transports + registry
+# ---------------------------------------------------------------------------
+
+def test_inproc_pair_duplex_and_close():
+    a, b = InProcTransport.pair()
+    a.send("ping", {"n": 1}, [np.arange(3, dtype=np.int32)], rid=1)
+    kind, meta, arrays, rid = b.recv()
+    assert (kind, meta, rid) == ("ping", {"n": 1}, 1)
+    np.testing.assert_array_equal(arrays[0], np.arange(3, dtype=np.int32))
+    b.send("pong", {}, rid=1)
+    assert a.recv()[0] == "pong"
+    assert a.sent_frames == 1 and a.sent_bytes > 0
+    a.close()
+    with pytest.raises(TransportError) as ei:
+        b.recv()
+    assert not ei.value.recoverable
+
+
+def test_pipe_pair_roundtrip_and_close():
+    a, b = PipeTransport.pair()
+    a.send("msg", {"x": 2}, [np.ones((2, 2), np.float32)], rid=4)
+    kind, meta, arrays, rid = b.recv()
+    assert (kind, meta["x"], rid) == ("msg", 2, 4)
+    a.close()
+    with pytest.raises(TransportError) as ei:
+        b.recv()
+    assert not ei.value.recoverable
+    a.close()                              # idempotent
+    b.close()
+
+
+def test_serializing_edge_roundtrips_codec():
+    class _DirectBackend:
+        def make_edge(self, src, dst):
+            return None                    # direct: no transfer needed
+    x = np.arange(6, dtype=np.float32).reshape(2, 3)
+    # inproc plan edges stay direct device hand-offs
+    assert InProcTransport().make_edge(None, None, _DirectBackend()) is None
+    edge = PipeTransport(None, None).make_edge(None, None, _DirectBackend())
+    np.testing.assert_array_equal(edge(x), x)
+
+
+def test_registry_mirrors_backends():
+    assert set(TRANSPORTS) >= {"inproc", "pipe", "socket"}
+    assert resolve_transport("socket") is SocketTransport
+    assert resolve_transport(InProcTransport) is InProcTransport
+    with pytest.raises(TransportError):
+        resolve_transport("carrier-pigeon")
+
+
+def test_resolve_backend_device_ordinals():
+    be = resolve_backend("device:0")
+    assert be.name == "device:0"
+    assert resolve_backend("device:0") is be      # cached per ordinal
+    with pytest.raises(BackendError):
+        resolve_backend("device:abc")
+    with pytest.raises(BackendError):
+        resolve_backend(f"device:{len(jax.devices()) + 7}")
+
+
+# ---------------------------------------------------------------------------
+# the wire unit + KV block export/import
+# ---------------------------------------------------------------------------
+
+def test_remote_prefill_wire_roundtrip():
+    rng = np.random.default_rng(1)
+    rp = RemotePrefill(
+        rid=11, prompt=np.arange(6, dtype=np.int32), first_token=42,
+        max_new_tokens=5, blocks_granted=4, paged=(True, False),
+        kv=[[rng.standard_normal((2, 3, 8)).astype(np.float32)] * 2,
+            [rng.standard_normal((2, 1, 4)).astype(np.float32)]],
+        slot_class="full", slab=rng.standard_normal((9,)).astype(np.float32))
+    kind, meta, arrays = rp.to_wire()
+    k2, m2, a2, rid = _decode(encode_frame(kind, meta, arrays, rid=rp.rid))
+    back = RemotePrefill.from_wire(m2, a2)
+    assert (back.rid, back.first_token, back.max_new_tokens,
+            back.blocks_granted, back.slot_class, back.prompt_len) == \
+        (11, 42, 5, 4, "full", 6)
+    assert back.paged == (True, False)
+    np.testing.assert_array_equal(back.prompt, rp.prompt)
+    np.testing.assert_array_equal(back.slab, rp.slab)
+    for l1, l2 in zip([x for ls in rp.kv for x in ls],
+                      [x for ls in back.kv for x in ls]):
+        assert l1.tobytes() == l2.tobytes()
+    # only paged positions count toward the wire-savings assertion
+    assert rp.kv_wire_bytes() == 2 * rp.kv[0][0].nbytes
+    # a frame missing its arrays is a malformed-but-recoverable prefill
+    with pytest.raises(TransportError) as ei:
+        RemotePrefill.from_wire(m2, a2[:1])
+    assert ei.value.recoverable and ei.value.rid == 11
+
+
+def test_kv_export_import_bit_exact():
+    """export -> wire codec -> import into a DIFFERENT pool (different
+    block ids) -> re-export preserves every leaf byte-for-byte."""
+    cfg = get_config("llava-onevision-0.5b").reduced()
+    kw = dict(n_slots=2, max_len=256, block_size=32)
+    src = PagedKVCache(cfg, **kw)
+    dst = PagedKVCache(cfg, **kw)
+    rng = np.random.default_rng(2)
+    src.pool = tuple(
+        jax.tree.map(lambda l: jnp.asarray(
+            rng.standard_normal(l.shape), l.dtype), p)
+        for p in src.pool)
+
+    s_src = src.take_slot()
+    src.grant_blocks(s_src, 4)
+    payload = src.export_blocks(s_src, 3)     # written blocks < grant
+
+    layout = [len(leaves) for leaves in payload]
+    flat = [leaf for leaves in payload for leaf in leaves]
+    _, meta, back, _ = _decode(encode_frame(
+        "kv", {"layout": layout}, flat, rid=0))
+    it = iter(back)
+    wired = [[next(it) for _ in range(n)] for n in meta["layout"]]
+
+    dst.grant_blocks(dst.take_slot(), 2)      # shift dst's free block ids
+    s_dst = dst.take_slot()
+    dst.grant_blocks(s_dst, 4)
+    dst.import_blocks(s_dst, wired)
+    out = dst.export_blocks(s_dst, 3)
+    for p1, p2 in zip(payload, out):
+        for l1, l2 in zip(p1, p2):
+            assert np.asarray(l1).tobytes() == np.asarray(l2).tobytes()
+
+    with pytest.raises(RuntimeError):
+        src.export_blocks(s_src, 5)           # over the grant
+
+
+# ---------------------------------------------------------------------------
+# split pricing
+# ---------------------------------------------------------------------------
+
+def test_fleet_rows_priced_at_transport_bw():
+    for accel in fleet_accelerators(SocketTransport):
+        assert accel.profile.link_bw == SocketTransport.link_bw
+    prefill, decode = fleet_accelerators(InProcTransport)
+    assert prefill.static_only and not prefill.dynamic_ok
+    assert (prefill.backend, decode.backend) == ("device:0", "device:1")
+
+
+def test_schedule_split_responds_to_transport():
+    """A fast in-process wire lets the DP cut at the vision/decode
+    boundary; a slow socket makes the crossing too expensive and
+    co-locates everything on the decode fleet."""
+    graph = decompose(get_config("llava-onevision-0.5b"))
+    fast = schedule_split(graph, "inproc", n_tokens=729)
+    slow = schedule_split(graph, SocketTransport, n_tokens=729)
+    assert fast.assignment["vision_frontend"] == "prefill-fleet"
+    assert fast.assignment["projector"] == "prefill-fleet"
+    assert fast.assignment["decoder"] == "decode-fleet"
+    assert set(slow.assignment.values()) == {"decode-fleet"}
