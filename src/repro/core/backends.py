@@ -42,6 +42,7 @@ brick (the ``PowerPolicy.knobs`` THROTTLED demotion hook).
 """
 from __future__ import annotations
 
+import re
 import threading
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
@@ -332,22 +333,49 @@ def device_backend(ordinal: int) -> DeviceBackend:
 # path, and vice versa.
 # ---------------------------------------------------------------------------
 
+_SPARSE_RE = re.compile(r"^(?P<base>.+?)-sp(?P<pct>\d{1,2})$")
+_GROUP_RE = re.compile(r"^(?P<base>.+?)-g\d+$")
+
+
 @dataclass(frozen=True)
 class Substrate:
     """One compute-unit row: lowering backend + per-quant-label relative
     matmul throughput (fraction of the unit's peak at its preferred
     width).  ``kernel_mode`` is derived from the backend row, never
-    stated twice."""
+    stated twice.
+
+    ``sparse_gain`` is the fraction of activation-aware-pruned MACs the
+    unit actually skips (EdgeMM-style structured sparsity): a composite
+    label like ``q4f16-g32-sp50`` prices as the base row sped up by
+    ``1 / (1 - sparsity * sparse_gain)``.  Units whose kernels cannot
+    skip zeros (reference host path) keep gain 0 — pruning buys them
+    nothing, and ``schedule()`` can therefore flip a sparse brick to a
+    sparsity-capable unit even when the dense costs tie."""
 
     backend: str                            # BACKENDS registry name
     bit_efficiency: Tuple[Tuple[str, float], ...]
+    sparse_gain: float = 0.0
 
     @property
     def kernel_mode(self) -> str:
         return BACKENDS[self.backend].kernel_mode
 
     def efficiency(self, quant_label: str, default: float = 1.0) -> float:
-        return dict(self.bit_efficiency).get(quant_label, default)
+        table = dict(self.bit_efficiency)
+        if quant_label in table:
+            return table[quant_label]
+        sparsity = 0.0
+        m = _SPARSE_RE.match(quant_label)
+        if m:
+            sparsity = int(m.group("pct")) / 100.0
+            quant_label = m.group("base")
+        g = _GROUP_RE.match(quant_label)     # "q4f16-g32" -> "q4f16" row
+        if g:
+            quant_label = g.group("base")
+        base = table.get(quant_label, default)
+        if sparsity <= 0.0:
+            return base
+        return base / max(1.0 - sparsity * self.sparse_gain, 1e-6)
 
 
 SUBSTRATES: Dict[str, Substrate] = {
@@ -358,12 +386,15 @@ SUBSTRATES: Dict[str, Substrate] = {
     # The npu/cpu rows lower through the host backend (reference kernels
     # on a pinned thread — hence the fp penalty); the gpu row through the
     # committed device backend; the pod profile through submeshes.
+    # sparse_gain: the NPU's structured-sparse MAC arrays skip most
+    # pruned products; the GPU recovers about half; the reference host
+    # kernels and the MXU (dense systolic array) skip none.
     "rk-npu": Substrate("host", (("q8f16", 1.0), ("q4f16", 1.0),
                                  ("q2f16", 1.0), ("fp16", 0.6),
-                                 ("bf16", 0.6))),
+                                 ("bf16", 0.6)), sparse_gain=0.9),
     "rk-gpu": Substrate("device", (("q8f16", 0.9), ("q4f16", 0.9),
                                    ("q2f16", 0.9), ("fp16", 1.0),
-                                   ("bf16", 1.0))),
+                                   ("bf16", 1.0)), sparse_gain=0.5),
     "rk-cpu": Substrate("host", (("q8f16", 0.8), ("q4f16", 0.6),
                                  ("q2f16", 0.5), ("fp16", 0.3),
                                  ("bf16", 0.3))),

@@ -35,20 +35,33 @@ import jax.numpy as jnp
 __all__ = [
     "QuantSpec", "QTensor", "quantize", "dequantize", "quantize_tree",
     "dequantize_tree", "QuantPolicy", "PROFILES", "tree_bytes",
+    "prune_weights", "parse_label",
 ]
 
 
 @dataclass(frozen=True)
 class QuantSpec:
-    """Group-wise symmetric quantization spec."""
+    """Group-wise symmetric quantization spec.
+
+    ``scale_search > 1`` turns on MSE-optimal scale refinement: instead of
+    the plain max-abs scale, each group tries ``scale_search`` shrunken
+    candidates in ``[scale_shrink, 1.0] * amax/qmax`` and keeps the one
+    minimizing the group's round-trip squared error (the K-quant refinement;
+    clipping the odd outlier buys finer resolution for the bulk).  The
+    max-abs scale is always a candidate, so exactly-representable groups
+    still round-trip bit-exactly.
+    """
 
     bits: int                  # 2 | 4 | 8
     group_size: int = 64       # values per scale group (along last axis)
     scale_dtype: str = "float32"
+    scale_search: int = 8      # MSE scale-grid size; <=1 -> plain max-abs
+    scale_shrink: float = 0.75  # smallest candidate as a fraction of max-abs
 
     def __post_init__(self):
         assert self.bits in (2, 4, 8), self.bits
         assert 32 % self.bits == 0
+        assert 0.0 < self.scale_shrink <= 1.0
 
     @property
     def per_word(self) -> int:
@@ -99,6 +112,26 @@ def _pad_last(x, multiple: int):
     return x, k
 
 
+def _mse_scale(grp: jnp.ndarray, scale: jnp.ndarray,
+               spec: QuantSpec) -> jnp.ndarray:
+    """Per-group MSE-optimal scale over a shrink grid.
+
+    grp (..., G, g) fp32 groups; scale (..., G, 1) the max-abs scale.
+    Candidates run shrink -> 1.0 so a zero-error max-abs group (already
+    exactly representable) wins its ties via the final argmin order below.
+    """
+    fr = jnp.linspace(spec.scale_shrink, 1.0, spec.scale_search,
+                      dtype=jnp.float32)
+    cand = scale[..., None] * fr                        # (..., G, 1, n)
+    safe = jnp.where(cand == 0, 1.0, cand)
+    q = jnp.clip(jnp.round(grp[..., None] / safe), spec.qmin, spec.qmax)
+    err = jnp.sum((q * cand - grp[..., None]) ** 2, axis=-2)   # (..., G, n)
+    # prefer the LARGEST candidate among exact ties (index of last min):
+    # flip so argmin lands on fr=1.0 first, then map the index back.
+    best = (fr.shape[0] - 1) - jnp.argmin(err[..., ::-1], axis=-1)
+    return jnp.take_along_axis(cand[..., 0, :], best[..., None], axis=-1)
+
+
 def quantize(w: jnp.ndarray, spec: QuantSpec) -> QTensor:
     """Group-wise symmetric quantization along the last axis."""
     orig_shape, orig_dtype = w.shape, w.dtype
@@ -109,6 +142,8 @@ def quantize(w: jnp.ndarray, spec: QuantSpec) -> QTensor:
     grp = wf.reshape(*wf.shape[:-1], kp // g, g)
     amax = jnp.max(jnp.abs(grp), axis=-1, keepdims=True)
     scale = amax / spec.qmax
+    if spec.scale_search > 1:
+        scale = _mse_scale(grp, scale, spec)
     safe = jnp.where(scale == 0, 1.0, scale)
     q = jnp.clip(jnp.round(grp / safe), spec.qmin, spec.qmax).astype(jnp.int32)
     q = q.reshape(*wf.shape[:-1], kp)
@@ -146,6 +181,32 @@ def dequantize(qt: QTensor) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# activation-aware magnitude pruning (EdgeMM-style semi-structured sparsity)
+# ---------------------------------------------------------------------------
+
+
+def prune_weights(w: jnp.ndarray, sparsity: float,
+                  act_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Zero the lowest-scoring ``sparsity`` fraction of each last-axis row.
+
+    Score is Wanda-style ``|W| * act_scale`` — ``act_scale`` is a per-input-
+    feature activation magnitude (shape broadcastable to the last axis, e.g.
+    the RMS of calibration activations).  Without it the score degrades to
+    plain magnitude.  Rows are thresholded independently so every output
+    keeps its strongest inputs; composes with :func:`quantize` (prune first,
+    then group-quantize the survivors)."""
+    if sparsity <= 0.0:
+        return w
+    assert 0.0 < sparsity < 1.0, sparsity
+    wf = w.astype(jnp.float32)
+    score = jnp.abs(wf)
+    if act_scale is not None:
+        score = score * jnp.abs(jnp.asarray(act_scale, jnp.float32))
+    thresh = jnp.quantile(score, sparsity, axis=-1, keepdims=True)
+    return jnp.where(score > thresh, wf, 0.0).astype(w.dtype)
+
+
+# ---------------------------------------------------------------------------
 # per-brick policies (the paper's Module–Quantization label format, Fig. 7)
 # ---------------------------------------------------------------------------
 
@@ -157,6 +218,20 @@ _LABEL_SPECS: Dict[str, Optional[QuantSpec]] = {
     "q4f16": QuantSpec(4),
     "q2f16": QuantSpec(2),
 }
+
+# composite labels append "-sp<pct>" for activation-aware pruning before
+# quantization, e.g. "q4f16-sp50" = prune 50% then W4A16
+_SP_RE = re.compile(r"^(?P<base>.+?)-sp(?P<pct>\d{1,2})$")
+
+
+def parse_label(label: str) -> Tuple[Optional[QuantSpec], float]:
+    """'q4f16-g32-sp50' -> (QuantSpec(4, 32), 0.50); plain -> (spec, 0.0)."""
+    sparsity = 0.0
+    m = _SP_RE.match(label)
+    if m:
+        sparsity = int(m.group("pct")) / 100.0
+        label = m.group("base")
+    return _LABEL_SPECS[label], sparsity
 
 
 @dataclass(frozen=True)
@@ -179,7 +254,7 @@ class QuantPolicy:
         return "bf16"
 
     def spec_for(self, path: str) -> Optional[QuantSpec]:
-        return _LABEL_SPECS[self.label_for(path)]
+        return parse_label(self.label_for(path))[0]
 
 
 _LABEL_SPECS["q4f16-g32"] = QuantSpec(4, group_size=32)
@@ -215,6 +290,13 @@ PROFILES: Dict[str, QuantPolicy] = {
         (r"vis|projector|embed", "fp16"),
         (r"layers|dec|lm_head", "q8f16"),
     )),
+    # EdgeMM-style activation-aware 50% sparsity stacked under W4A16: the
+    # pruned rows re-quantize tighter (zeros shrink group max-abs) and the
+    # NPU substrates credit the skipped MACs via SUBSTRATES sparse rows
+    "nanomind-sparse": QuantPolicy("nanomind-sparse", (
+        (r"vis|projector|embed", "fp16"),
+        (r"layers|dec|lm_head", "q4f16-g32-sp50"),
+    )),
 }
 
 
@@ -230,8 +312,13 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def quantize_tree(params, policy: QuantPolicy):
-    """Quantize eligible leaves of a param pytree per the policy."""
+def quantize_tree(params, policy: QuantPolicy, act_scales=None):
+    """Quantize (and optionally prune) eligible leaves per the policy.
+
+    ``act_scales`` maps path substrings to per-input-feature activation
+    magnitudes for :func:`prune_weights`; leaves whose label carries an
+    ``-sp<pct>`` suffix are pruned before quantization (magnitude-only when
+    no activation statistics match)."""
     def visit(path, leaf):
         if not isinstance(leaf, jnp.ndarray) or leaf.ndim < 2:
             return leaf
@@ -239,7 +326,16 @@ def quantize_tree(params, policy: QuantPolicy):
             return leaf
         if not jnp.issubdtype(leaf.dtype, jnp.floating):
             return leaf
-        spec = policy.spec_for(_path_str(path))
+        p = _path_str(path)
+        spec, sparsity = parse_label(policy.label_for(p))
+        if sparsity > 0.0:
+            act = None
+            if act_scales:
+                for pat, scale in act_scales.items():
+                    if pat in p:
+                        act = scale
+                        break
+            leaf = prune_weights(leaf, sparsity, act)
         if spec is None:
             return leaf
         return quantize(leaf, spec)

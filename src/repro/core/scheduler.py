@@ -411,7 +411,9 @@ from repro.core.transport import SubmeshPipe  # noqa: E402,F401
 # disaggregated fleets (prefill fleet + decode fleet over a Transport)
 # ---------------------------------------------------------------------------
 
-def fleet_accelerators(transport, n_devices: int = 2) -> List[Accelerator]:
+def fleet_accelerators(transport, n_devices: int = 2,
+                       calibration: Optional[CostCalibration] = None
+                       ) -> List[Accelerator]:
     """The two-fleet disaggregated topology as scheduler rows.
 
     "Cost-Efficient Multimodal LLM Inference via Cross-Tier GPU
@@ -425,13 +427,19 @@ def fleet_accelerators(transport, n_devices: int = 2) -> List[Accelerator]:
     carry ``link_bw = transport.link_bw`` so every cross-fleet edge the
     chain DP prices is a real serialized wire crossing — the placement
     responds to the transport (``core/transport.TRANSPORTS``), not to an
-    assumed ICI.
+    assumed ICI.  When ``calibration`` holds a link observation for this
+    transport (``CostCalibration.observe_link``, fed from
+    ``Transport.measured_link_bw``) the measured bytes/s blends over the
+    static class row — a wire that clocks slower than its class pushes
+    the split toward fewer crossings.
 
     The fleets lower through per-ordinal device backends
     (``"device:0"`` / ``"device:1"``) — a multi-GPU box is the
     degenerate single-host two-fleet case; with one visible device both
     fleets share ordinal 0."""
     bw = float(getattr(transport, "link_bw", 8e9))
+    if calibration is not None:
+        bw = calibration.link_bw(getattr(transport, "name", None), bw)
     wire = lambda p: dataclasses.replace(p, link_bw=min(p.link_bw, bw))
     # prefill fleet: a full unit (compute-rich); decode fleet: cheap
     # workers at a quarter of the FLOPs but the full memory bandwidth
@@ -460,9 +468,18 @@ def schedule_split(graph: BrickGraph, transport, n_tokens: int,
     per transport: a slow socket pushes compute toward fewer crossings,
     a fast in-process channel frees the DP to cut where the roofline
     prefers.  ``transport`` may be a Transport class, instance, or
-    registry name (``core/transport.resolve_transport``)."""
+    registry name (``core/transport.resolve_transport``).
+
+    ``calibration`` feeds BOTH blending edges: per-brick measured
+    seconds into ``brick_cost`` (as in :func:`schedule`) and measured
+    wire bandwidth into the fleet rows' ``link_bw``
+    (``CostCalibration.observe_link`` -> :func:`fleet_accelerators`) —
+    the split is repriced from what the frames actually clocked, not
+    the transport's static class row."""
     if isinstance(transport, str):
         from repro.core.transport import resolve_transport
         transport = resolve_transport(transport)
-    return schedule(graph, fleet_accelerators(transport), n_tokens,
-                    objective, batch=batch, calibration=calibration)
+    return schedule(graph,
+                    fleet_accelerators(transport, calibration=calibration),
+                    n_tokens, objective, batch=batch,
+                    calibration=calibration)

@@ -56,6 +56,7 @@ import queue
 import socket as _socket
 import struct
 import threading
+import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
@@ -280,6 +281,7 @@ class Transport:
         self._recv_lock = threading.Lock()
         self.sent_frames = 0
         self.sent_bytes = 0
+        self.send_seconds = 0.0
 
     # -- byte movement (subclass responsibility) ----------------------------
     def _send_bytes(self, data: bytes) -> None:
@@ -299,10 +301,25 @@ class Transport:
         senders interleave whole, never torn."""
         frame = encode_frame(kind, meta or {}, arrays, rid=rid)
         with self._send_lock:
+            t0 = time.perf_counter()
             self._send_bytes(frame)
+            self.send_seconds += time.perf_counter() - t0
             self.sent_frames += 1
             self.sent_bytes += len(frame)
         return len(frame)
+
+    def measured_link_bw(self, min_bytes: int = 1 << 16
+                         ) -> Optional[float]:
+        """Observed wire bandwidth (bytes/s) over every frame sent so
+        far, or None below ``min_bytes`` of evidence.  This is the
+        measured-not-modeled counterpart of the static ``link_bw`` row:
+        ``CostCalibration.observe_link`` folds it into the table that
+        ``core/scheduler.schedule_split`` blends over the modeled wire
+        (a socket that benchmarks slower than its class row pushes the
+        split toward fewer crossings)."""
+        if self.sent_bytes < min_bytes or self.send_seconds <= 0.0:
+            return None
+        return self.sent_bytes / self.send_seconds
 
     def send_prefill(self, rp: RemotePrefill) -> int:
         kind, meta, arrays = rp.to_wire()

@@ -46,14 +46,36 @@ def _dequant_gemm(x: jnp.ndarray, qt: QTensor,
     xm, pm = _pad_to(xm, 0, bm_eff)
     codes, _ = _pad_to(qt.codes, 0, bn)
     scales, pn = _pad_to(qt.scales, 0, bn)
+    # K padding (the odd-K path): the packed words already cover the logical
+    # K rounded up to the group unit; pad further to a bk multiple so ANY K
+    # stays on the kernel.  Zero x columns against zero codes contribute an
+    # exact 0.0 to the fp32 accumulator, so the result is unchanged.
+    pw, gs = qt.spec.per_word, qt.spec.group_size
+    unit = max(gs, pw)
+    kp = codes.shape[-1] * pw
+    bk_eff = min(bk, kp) if bk % unit == 0 else kp
+    kfull = -(-kp // bk_eff) * bk_eff
+    xm, _ = _pad_to(xm, 1, kfull)          # logical K -> kfull
+    codes, _ = _pad_to(codes, 1, kfull // pw)
+    scales, _ = _pad_to(scales, 1, kfull // gs)
     b = None
     if bias is not None:
         b, _ = _pad_to(bias, 0, bn)
     out = K.dequant_gemm_pallas(xm, codes, scales, b, bits=qt.spec.bits,
                                 group_size=qt.spec.group_size, act=act,
-                                bm=bm_eff, bn=bn, bk=bk, interpret=interpret)
+                                bm=bm_eff, bn=bn, bk=bk_eff,
+                                interpret=interpret)
     out = out[:M, :N]
     return out.reshape(*lead, N)
+
+
+def resolve_use_kernel(qt: QTensor, use_kernel: Optional[bool]) -> bool:
+    """The dispatch decision, exported so benchmarks can report which path
+    actually ran.  Since the odd-K padding landed, every QTensor shape is
+    kernel-eligible — only an explicit ``use_kernel=False`` takes the
+    (XLA-fused) reference."""
+    del qt
+    return True if use_kernel is None else bool(use_kernel)
 
 
 def dequant_gemm(x: jnp.ndarray, qt: QTensor,
@@ -65,11 +87,8 @@ def dequant_gemm(x: jnp.ndarray, qt: QTensor,
     """x (..., K) @ dequant(qt (N, K)).T -> (..., N).
 
     ``interpret`` resolves through kernels/dispatch before entering jit."""
-    if use_kernel is None:
-        # the unpack path needs MXU-aligned tiles; tiny problems or odd K
-        # fall back to the (XLA-fused) reference
-        use_kernel = qt.shape[1] % bk == 0
-    return _dequant_gemm(x, qt, bias, act, use_kernel=bool(use_kernel),
+    return _dequant_gemm(x, qt, bias, act,
+                         use_kernel=resolve_use_kernel(qt, use_kernel),
                          interpret=resolve_interpret(interpret),
                          bm=bm, bn=bn, bk=bk)
 

@@ -1,0 +1,5 @@
+from repro.kernels.fused_decode.ops import (cohort_step, fused_mlp,
+                                            fused_qkv, fused_supported,
+                                            kv_scatter)
+from repro.kernels.fused_decode.ref import (ref_cohort_step, ref_fused_mlp,
+                                            ref_fused_qkv, ref_kv_scatter)

@@ -1,0 +1,221 @@
+"""Pallas bodies for the fused low-bit cohort-decode step.
+
+Three kernels, one HBM pass each (paper §3.2 "Quantization" + §3.3 decode
+path — "avoid separate dequant passes; write the new KV position, not the
+window"):
+
+* :func:`fused_qkv_pallas` — in-VMEM weight unpack (q4/q8 codes + scales,
+  the fp16 weight never materializes to HBM) feeding the three QKV GEMMs
+  of one attention sublayer;
+* :func:`fused_mlp_pallas` — the same unpack fused with the gate/up GEMMs,
+  activation, and down GEMM;
+* :func:`kv_row_scatter_pallas` — the paged single-position K/V scatter:
+  grid (bc,), scalar-prefetched (block, offset) per cohort row, the pool
+  aliased in place (donation) and ONLY the one new row's block written —
+  sentinel rows (``blk == n_blocks``) write nothing at all.
+
+Bit-exactness contract: the GEMM bodies execute the *same* ``jnp.einsum``
+strings on the *same* shapes as the composed jnp path (models/attention
+``qkv_proj``, models/mlp ``apply_mlp``), and the in-VMEM unpack replicates
+``core.quantize.dequantize``'s cast chain exactly (int unpack -> f32 ->
+x scales -> slice -> cast), so interpret-mode outputs equal the composed
+oracle bit for bit.  The only Mosaic-specific rewrite is the 2D
+``broadcasted_iota`` for the shift vector (1D iota does not lower on TPU)
+— integer-exact, so numerics are unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import QTensor, QuantSpec
+from repro.models.common import activation
+from repro.models.mlp import GATED
+
+
+def _dequant_block(codes, scales, spec: QuantSpec, logical_k: int, dtype):
+    """In-VMEM unpack, numerically identical to core.quantize.dequantize."""
+    pw, bits = spec.per_word, spec.bits
+    words = codes.shape[-1]
+    shifts = jax.lax.broadcasted_iota(
+        jnp.int32, codes.shape + (pw,), codes.ndim) * bits
+    field = jnp.right_shift(codes[..., None], shifts)
+    field = jnp.bitwise_and(field, (1 << bits) - 1)
+    sign = 1 << (bits - 1)
+    q = jnp.where(field >= sign, field - (1 << bits), field)
+    kp = words * pw
+    q = q.reshape(*codes.shape[:-1], kp).astype(jnp.float32)
+    g = spec.group_size
+    q = q.reshape(*q.shape[:-1], kp // g, g)
+    w = q * scales.astype(jnp.float32)[..., None]
+    w = w.reshape(*w.shape[:-2], kp)[..., :logical_k]
+    return w.astype(dtype)
+
+
+def _weight_operands(ws):
+    """Flatten dense/QTensor weights into pallas operands + a static plan."""
+    operands, plan = [], []
+    for w in ws:
+        if isinstance(w, QTensor):
+            operands += [w.codes, w.scales]
+            plan.append(("quant", w.spec, w.shape[-1], w.dtype))
+        else:
+            operands.append(w)
+            plan.append(("dense", None, None, None))
+    return operands, tuple(plan)
+
+
+def _take_weights(it, plan):
+    """Rebuild weight arrays from the ref iterator per the static plan."""
+    ws = []
+    for kind, spec, logical_k, dtype in plan:
+        if kind == "quant":
+            codes = next(it)[...]
+            scales = next(it)[...]
+            ws.append(_dequant_block(codes, scales, spec, logical_k, dtype))
+        else:
+            ws.append(next(it)[...])
+    return ws
+
+
+def _full_specs(arrays):
+    """Whole-array VMEM blocks on a trivial grid (decode shapes are small:
+    bc <= n_slots rows against one group's weights)."""
+    return [pl.BlockSpec(a.shape, lambda i, _r=a.ndim: (0,) * _r)
+            for a in arrays]
+
+
+def fused_qkv_pallas(h, wq, wk, wv,
+                     bq: Optional[jnp.ndarray] = None,
+                     bk: Optional[jnp.ndarray] = None,
+                     bv: Optional[jnp.ndarray] = None, *,
+                     interpret: bool = False):
+    """h (bc,1,D) x wq/wk/wv (D,H|KV,hd) [dense or packed] -> q,k,v.
+
+    One pallas_call: the packed codes stream HBM->VMEM once, unpack in
+    VMEM, and feed all three projections; biases are fused adds."""
+    w_ops, plan = _weight_operands((wq, wk, wv))
+    biases = [b for b in (bq, bk, bv) if b is not None]
+    assert len(biases) in (0, 3)
+    operands = [h] + w_ops + biases
+
+    def shp(w):
+        return w.shape if not isinstance(w, QTensor) else w.shape
+    bc = h.shape[0]
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct((bc, 1) + shp(w)[-2:], h.dtype)
+        for w in (wq, wk, wv))
+
+    def body(*refs):
+        n_out = 3
+        ins, outs = refs[:-n_out], refs[-n_out:]
+        it = iter(ins)
+        x = next(it)[...]
+        ws = _take_weights(it, plan)
+        bs_ = [next(it)[...] for _ in range(len(biases))]
+        for i, (w, o_ref) in enumerate(zip(ws, outs)):
+            # the composed path's einsum, verbatim (attention.qkv_proj)
+            y = jnp.einsum("bsd,dhk->bshk", x, w)
+            if bs_:
+                y = y + bs_[i]
+            o_ref[...] = y.astype(o_ref.dtype)
+
+    return pl.pallas_call(
+        body,
+        grid=(1,),
+        in_specs=_full_specs(operands),
+        out_specs=[pl.BlockSpec(s.shape, lambda i, _r=len(s.shape): (0,) * _r)
+                   for s in out_shapes],
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(*operands)
+
+
+def fused_mlp_pallas(h, w_up, w_down, w_gate=None, *,
+                     act: str, interpret: bool = False):
+    """h (bc,1,D) -> gate/up GEMMs, activation, down GEMM, one kernel.
+
+    Mirrors models/mlp.apply_mlp einsum-for-einsum; packed weights unpack
+    in VMEM so the fp16 d_ff x d_model matrices never hit HBM."""
+    ws = (w_up, w_down) + ((w_gate,) if w_gate is not None else ())
+    w_ops, plan = _weight_operands(ws)
+    operands = [h] + w_ops
+    out_shape = jax.ShapeDtypeStruct(h.shape, h.dtype)
+
+    def body(*refs):
+        ins, out_ref = refs[:-1], refs[-1]
+        it = iter(ins)
+        x = next(it)[...]
+        got = _take_weights(it, plan)
+        up_w, down_w = got[0], got[1]
+        up = jnp.einsum("bsd,df->bsf", x, up_w)
+        if w_gate is not None:
+            gate = jnp.einsum("bsd,df->bsf", x, got[2])
+            mid = activation(GATED[act])(gate) * up
+        else:
+            mid = activation(act)(up)
+        out_ref[...] = jnp.einsum("bsf,fd->bsd", mid,
+                                  down_w).astype(out_ref.dtype)
+
+    return pl.pallas_call(
+        body,
+        grid=(1,),
+        in_specs=_full_specs(operands),
+        out_specs=pl.BlockSpec(h.shape, lambda i, _r=h.ndim: (0,) * _r),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*operands)
+
+
+def kv_row_scatter_pallas(blk, off, k_rows, v_rows, k_pool, v_pool, *,
+                          interpret: bool = False):
+    """Scatter each group's new K/V position per cohort row into the pool.
+
+    k_pool/v_pool (L, n_blocks, bs, KV, hd) donated (aliased in place);
+    k_rows/v_rows (L, bc, KV, hd); blk/off (bc,) int32 scalar-prefetched.
+    One program per (group, row); HBM traffic is the written rows
+    themselves.  Sentinel rows (blk == n_blocks, the padded-cohort marker)
+    skip the store entirely — the aliased block keeps its pool content,
+    the drop semantics of the composed ``.at[...].set(mode="drop")``
+    without touching the pool."""
+    L, n_blocks, bs, KV, hd = k_pool.shape
+
+    row_spec = pl.BlockSpec((1, 1, KV, hd),
+                            lambda g, b, blk, off: (g, b, 0, 0))
+    # clamp the index map for sentinel rows — the selected block is never
+    # written for them, it only has to be a legal address
+    pool_spec = pl.BlockSpec(
+        (1, 1, 1, KV, hd),
+        lambda g, b, blk, off: (g, jnp.minimum(blk[b], n_blocks - 1),
+                                off[b], 0, 0))
+
+    def body(blk_ref, off_ref, krow_ref, vrow_ref, kin_ref, vin_ref,
+             kout_ref, vout_ref):
+        del off_ref, kin_ref, vin_ref
+        b = pl.program_id(1)
+
+        @pl.when(blk_ref[b] < n_blocks)
+        def _():
+            kout_ref[...] = krow_ref[...][:, :, None].astype(
+                kout_ref.dtype)
+            vout_ref[...] = vrow_ref[...][:, :, None].astype(
+                vout_ref.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(L, k_rows.shape[1]),
+        in_specs=[row_spec, row_spec, pool_spec, pool_spec],
+        out_specs=[pool_spec, pool_spec],
+    )
+    return pl.pallas_call(
+        body,
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)),
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(blk, off, k_rows, v_rows, k_pool, v_pool)

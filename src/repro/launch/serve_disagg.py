@@ -176,6 +176,8 @@ def main(argv=None):
             pre.submit(r)
         stats = pre.run()
         results = pre.collect(len(reqs))
+        stats.wire_seconds = tr.send_seconds
+        stats.transport = tr.name
         pre.engine.shutdown()
         tr.close()
     wall = time.time() - t0
@@ -201,6 +203,19 @@ def main(argv=None):
           f"{stats.wire_bytes}B on the wire "
           f"({stats.kv_wire_bytes}B paged KV vs {lane_total}B whole-lane "
           f"baseline), {len(classes)} slot classes, {wall:.1f}s")
+    # feedback edge: reprice the split from what the frames actually
+    # clocked (measured bytes/s over the static transport class row)
+    if stats.wire_seconds > 0 and stats.wire_bytes > 0:
+        from repro.telemetry.calibration import CostCalibration
+        cal = CostCalibration()
+        cal.observe_link(stats.transport, stats.wire_bytes,
+                         stats.wire_seconds, n=max(1, stats.sent))
+        mbw = stats.wire_bytes / stats.wire_seconds
+        split2 = schedule_split(graph, args.transport,
+                                n_tokens=cfg.vision_tokens,
+                                calibration=cal)
+        print(f"[schedule_split recalibrated @ {mbw / 1e6:.0f} MB/s "
+              f"measured] {split2}")
     print(f"OK: disaggregated prefill/decode fleets over "
           f"{args.transport}: {len(reqs)} requests bit-identical to the "
           f"single-process oracle")

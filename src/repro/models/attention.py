@@ -168,15 +168,22 @@ def attn_decode(p, cfg, x, cache_k, cache_v, index, rope_fn
     """One-token decode.  x (B,1,D); cache_k/v (B,S,KV,hd); index: current
     length (new token is written at ``index``).  Returns (out, k_new, v_new)
     where k/v_new are the (B,1,KV,hd) slices for the cache update."""
+    q, k_new, v_new = qkv_proj(p, x)
+    q, k_new = rope_fn(q), rope_fn(k_new)
+    o = attn_context(q, k_new, v_new, cache_k, cache_v, index, cfg)
+    return out_proj(p, o), k_new, v_new
+
+
+def attn_context(q, k_new, v_new, cache_k, cache_v, index, cfg
+                 ) -> jnp.ndarray:
+    """The decode attention core between the QKV projection and the output
+    projection: online softmax over the cache plus the (not yet written)
+    new token.  Shared verbatim by :func:`attn_decode` and the fused
+    decode path (kernels/fused_decode), so the two stay bit-identical."""
     B, S, KV, hd = cache_k.shape
     H = cfg.n_heads
     G = H // KV
     scale = hd ** -0.5
-
-    q, k_new, v_new = qkv_proj(p, x)
-    q, k_new = rope_fn(q), rope_fn(k_new)
-
-    # attend over the cache plus the new token (which is not yet written).
     qg = q.reshape(B, 1, KV, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qg[:, 0], cache_k,
                    preferred_element_type=jnp.float32) * scale
@@ -194,8 +201,7 @@ def attn_decode(p, cfg, x, cache_k, cache_v, index, rope_fn
     o = jnp.einsum("bkgs,bskh->bkgh", p_cache.astype(cache_v.dtype), cache_v,
                    preferred_element_type=jnp.float32)
     o = o + p_new[..., None] * v_new[:, 0, :, None, :].astype(jnp.float32)
-    o = (o / denom[..., None]).astype(x.dtype).reshape(B, 1, H, hd)
-    return out_proj(p, o), k_new, v_new
+    return (o / denom[..., None]).astype(q.dtype).reshape(B, 1, H, hd)
 
 
 def update_cache(cache_k, cache_v, k_new, v_new, index):

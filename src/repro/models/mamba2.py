@@ -156,13 +156,24 @@ def _split_proj(cfg, proj):
     return z, xbc, dt                                         # dt: (..., H)
 
 
+def _conv_mix(win, w, b):
+    """The ONE depthwise-conv contraction both the full-sequence and the
+    one-token decode path share: windows (..., K, C) against taps (K, C),
+    accumulated in fp32 with bias+silu applied before the cast back.
+    Teacher forcing vs decode must agree bit-for-bit per token, so the
+    two paths may not each pick their own summation association."""
+    out = jnp.einsum("...kc,kc->...c", win.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return jax.nn.silu(out)
+
+
 def _causal_conv(xbc, w, b):
     """Depthwise causal conv1d.  xbc (B,S,C); w (K,C)."""
     K = w.shape[0]
     pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
-    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
-              for i in range(K))
-    return jax.nn.silu(out + b[None, None, :])
+    win = jnp.stack([pad[:, i:i + xbc.shape[1], :] for i in range(K)],
+                    axis=2)                                   # (B,S,K,C)
+    return _conv_mix(win, w, b).astype(xbc.dtype)
 
 
 def _gated_norm(y, z, scale, eps=1e-5):
@@ -211,8 +222,7 @@ def mamba_decode(p, cfg, x, conv_state, h):
     z, xbc, dt = _split_proj(cfg, proj)
     window = jnp.concatenate([conv_state, xbc], axis=1)       # (B, d_conv, C)
     conv_state_new = window[:, 1:, :]
-    conv = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
-    conv = jax.nn.silu(conv)
+    conv = _conv_mix(window, p["conv_w"], p["conv_b"]).astype(xbc.dtype)
     xs, Bm, Cm = jnp.split(conv, [d_inner, d_inner + gs], axis=-1)
     xs = xs.reshape(B_, H, s.head_dim)
     Bm = Bm.reshape(B_, s.n_groups, s.d_state)

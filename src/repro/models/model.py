@@ -78,8 +78,11 @@ def _head(params, cfg, x):
     if isinstance(w, QTensor):
         w = dequantize(w)                      # fuses into the matmul
     w = w.T if cfg.tie_embeddings else w
-    logits = jnp.einsum("bsd,dv->bsv", x, w)
-    return logits.astype(jnp.float32) + _vocab_bias(cfg)[None, None, :]
+    # fp32 accumulation: bf16 logits produce *exact* top-1 ties that make
+    # greedy argmax an unstable function of benign numeric noise
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    return logits + _vocab_bias(cfg)[None, None, :]
 
 
 # ---------------------------------------------------------------------------

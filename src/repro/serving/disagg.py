@@ -77,6 +77,11 @@ class PrefillStats:
     wire_bytes: int = 0
     kv_wire_bytes: int = 0
     lane_bytes_baseline: int = 0
+    # measured wire clock (Transport.send_seconds at run end) + transport
+    # name: the CostCalibration.observe_link feedback edge the launcher
+    # folds back into schedule_split
+    wire_seconds: float = 0.0
+    transport: str = ""
 
 
 class PrefillWorker:
@@ -132,10 +137,15 @@ class PrefillWorker:
         return self.stats
 
     def collect(self, n: int) -> Dict[int, DisaggResult]:
-        """Receive ``n`` result frames (then the decode fleet's ``done``)
-        and return them keyed by rid."""
+        """Receive result frames until the decode fleet's ``done`` and
+        return them keyed by rid (``n`` is the expected count, for the
+        caller's accounting).  Draining to ``done`` is the close
+        handshake: it proves the decode side's last write completed, so
+        closing our end afterwards can never break the pipe under the
+        sender's final frame (returning at the n-th result races
+        exactly that)."""
         results: Dict[int, DisaggResult] = {}
-        while len(results) < n:
+        while True:
             kind, meta, arrays, rid = self.transport.recv()
             if kind == "done":
                 break
@@ -273,6 +283,8 @@ def serve_disagg_inproc(cfg, params, requests: List[Request], *,
             if errs:                          # the root cause, not the close
                 raise errs[0]
             raise
+        stats.wire_seconds = a.send_seconds
+        stats.transport = a.name
     finally:
         t.join(timeout=120.0)
         pre.engine.shutdown()

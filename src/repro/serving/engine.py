@@ -391,10 +391,16 @@ class ServingEngine:
                  max_cohort: Optional[int] = None,
                  share_staged: bool = True,
                  calibration: Optional[CostCalibration] = None,
-                 capture_slab: bool = False):
+                 capture_slab: bool = False,
+                 use_fused: Optional[bool] = None):
         assert not cfg.encdec, "engine serves decoder-only archs"
         self.cfg = cfg
         self.params = params
+        # fused cohort-decode step (kernels/fused_decode): None resolves
+        # per the dispatch convention — compiled Pallas on real TPU only;
+        # off-TPU the composed path is the same numerics and faster than
+        # interpret mode.  True forces the fused step (tests/bench).
+        self.use_fused = use_fused
         # paged decode pool: kv_blocks < n_slots*blocks_per_slot
         # oversubscribes slots against KV memory; admission grants per
         # request, per class (kv_block_budgets)
@@ -640,12 +646,41 @@ class ServingEngine:
         into each row's current block and the updated slot state back
         by slot id.  Padded rows carry sentinel ids: gathers fill
         zeros (masked by length 0), scatters drop — padding costs no
-        host branching and writes nothing."""
+        host branching and writes nothing.
+
+        ``use_fused`` (engine flag) swaps the body for the fused
+        Pallas step (kernels/fused_decode.cohort_step): in-VMEM weight
+        unpack + QKV/MLP GEMMs + single-position KV scatter, bit-equal
+        to this composed body.  Both flags (fused?, interpret?) resolve
+        HERE, at build time, outside the jit — the dispatch rule of
+        kernels/dispatch."""
         if bc not in self._cohort_cache:
             cfg = self.cfg
             paged = self.slots.paged
             bs = self.slots.block_size
             W = self.slots.blocks_per_slot
+
+            from repro.kernels.dispatch import resolve_interpret
+            from repro.kernels.fused_decode import (cohort_step,
+                                                    fused_supported)
+            use_fused = self.use_fused
+            if use_fused is None:
+                # default: fused only where compiled Pallas actually runs
+                # (real TPU, no force_ref override) — off-TPU interpret
+                # mode is the same numerics but strictly slower than the
+                # composed XLA path
+                use_fused = fused_supported(cfg) and not resolve_interpret()
+            if use_fused:
+                interp = resolve_interpret(None)
+
+                def fn(p, tokens, lengths, slot_ids, tables, pool):
+                    return cohort_step(
+                        p, cfg, tokens, lengths, slot_ids, tables, pool,
+                        block_size=bs, paged=paged, use_fused=True,
+                        interpret=interp)
+
+                self._cohort_cache[bc] = jax.jit(fn, donate_argnums=(5,))
+                return self._cohort_cache[bc]
 
             def fn(p, tokens, lengths, slot_ids, tables, pool):
                 layers = []

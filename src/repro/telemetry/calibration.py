@@ -91,6 +91,34 @@ class CostCalibration:
         """Sample-count blending weight in [0, 1)."""
         return n / (n + self.prior)
 
+    # -- wire links ---------------------------------------------------------
+    # Measured transport bandwidth rides the same table under a reserved
+    # brick key: ``(LINK_KEY, transport-name)`` with bytes in the tokens
+    # column.  ``core/scheduler.fleet_accelerators`` blends the result
+    # over the static per-class ``link_bw`` row exactly like brick costs
+    # blend measured seconds over the roofline model.
+
+    LINK_KEY = "__link__"
+
+    def observe_link(self, transport_name: Optional[str],
+                     bytes_moved: float, seconds: float,
+                     n: int = 1) -> CalSample:
+        """Record measured wire crossings for one transport
+        (``Transport.sent_bytes`` over ``Transport.send_seconds``)."""
+        return self.observe(self.LINK_KEY, transport_name, seconds,
+                            bytes_moved, n=n)
+
+    def link_bw(self, transport_name: Optional[str],
+                modeled_bw: float) -> float:
+        """Blend measured wire bandwidth over the modeled ``link_bw``:
+        no observation -> the static row, a well-observed wire -> what
+        the frames actually clocked."""
+        s = self.sample(self.LINK_KEY, transport_name)
+        if s is None or s.tokens <= 0 or s.seconds <= 0:
+            return modeled_bw
+        w = self.weight(s.n)
+        return (1.0 - w) * modeled_bw + w * (s.tokens / s.seconds)
+
     def energy_pressure(self, brick: str, profile: Optional[str],
                         modeled_j_per_token: float) -> float:
         """Measured-over-modeled decode energy ratio (>= 0); 1.0 when no

@@ -33,7 +33,7 @@ from repro.telemetry.ledger import Ledger
 
 # the versioned ledger this PR's benches write; bump per PR so the repo
 # root accumulates a BENCH_8.json, BENCH_9.json, ... trajectory
-CURRENT_PR = 8
+CURRENT_PR = 10
 SCHEMA = 1
 CSV_HEADER = "name,us_per_call,derived"
 

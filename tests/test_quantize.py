@@ -15,23 +15,34 @@ dims_st = hst.tuples(hst.integers(1, 7), hst.integers(8, 130))
 
 @given(bits=bits_st, dims=dims_st, seed=hst.integers(0, 2**31 - 1))
 def test_roundtrip_error_bound(bits, dims, seed):
-    """|w - dq(q(w))| <= scale/2 = amax / qmax / 2, per group."""
+    """Per-group error bound with the *chosen* scale s: unclipped values sit
+    within s/2 of their code, clipped outliers within amax - s*qmax.  The
+    MSE scale search (scale_search > 1) may shrink s below amax/qmax, so the
+    bound uses qt.scales rather than assuming the max-abs scale; the search
+    must also never do worse than max-abs in group MSE."""
     spec = QuantSpec(bits, group_size=32)
     rng = np.random.default_rng(seed)
     w = jnp.asarray(rng.standard_normal(dims), jnp.float32)
     qt = quantize(w, spec)
     dq = dequantize(qt)
     assert dq.shape == w.shape and dq.dtype == w.dtype
-    # per-group bound
+    # per-group bound with the actual scale
     pad = (-dims[-1]) % 32
     wp = np.pad(np.asarray(w), [(0, 0)] * (w.ndim - 1) + [(0, pad)])
     grp = wp.reshape(*wp.shape[:-1], -1, 32)
     amax = np.abs(grp).max(-1)
-    bound = amax / qt.spec.qmax / 2 + 1e-7
+    s = np.asarray(qt.scales, np.float64)
+    bound = np.maximum(s / 2, amax - s * qt.spec.qmax) + 1e-6
     err = np.abs(np.asarray(dq) - np.asarray(w))
     errp = np.pad(err, [(0, 0)] * (w.ndim - 1) + [(0, pad)])
     err_grp = errp.reshape(*wp.shape[:-1], -1, 32).max(-1)
-    assert np.all(err_grp <= bound + 1e-6)
+    assert np.all(err_grp <= bound)
+    # the searched scale improves (or matches) max-abs in squared error
+    base = dequantize(quantize(w, QuantSpec(bits, group_size=32,
+                                            scale_search=1)))
+    mse = float(jnp.sum((dq - w) ** 2))
+    mse_base = float(jnp.sum((base - w) ** 2))
+    assert mse <= mse_base + 1e-6
 
 
 @given(bits=bits_st, seed=hst.integers(0, 2**31 - 1))

@@ -12,25 +12,64 @@ from repro.launch.steps import abstract_params, init_params
 from repro.models import model as M
 
 
+def _top1(logits):
+    return int(jnp.argmax(logits.reshape(logits.shape[0], -1)[0], -1))
+
+
 def test_quantized_decode_runs_and_tracks_fp(key):
-    """QTensor params flow through prefill + decode; outputs stay close to
-    the bf16 model (top-1 mostly agrees at q4)."""
+    """QTensor params flow through prefill + decode, and q4 tracks fp.
+
+    The seed version of this test free-ran BOTH models on their own argmax
+    and demanded the trajectories match — but a random-init model has
+    near-uniform logits, so one flipped top-1 forks the sequences and the
+    comparison measures trajectory chaos, not quantization error (the test
+    was deselected for exactly that).  The sound properties:
+
+    * self-consistency — the q-model's free-running decode reproduces its
+      own full-forward argmax exactly (prefill+decode path correctness
+      with QTensor params, the thing the seed test actually exercised);
+    * teacher-forced tracking — the SAME tokens through both models keep
+      the q4 logits within a calibrated relative error of fp, with top-1
+      agreement far above chance (measured margins: rel <= 0.40, agree
+      4-6/8 across seeds with the MSE-searched scales).
+    """
     cfg = get_config("stablelm-1.6b").reduced(n_layers=2)
     params = init_params(key, cfg)
     qparams = quantize_tree(params, PROFILES["nanomind-serve"])
     tokens = (jnp.arange(24)[None] % 60 + 3).astype(jnp.int32)
+    steps = 8
 
-    lg_f, cache_f = M.lm_prefill(params, cfg, tokens, 32)
-    lg_q, cache_q = M.lm_prefill(qparams, cfg, tokens, 32)
-    agree = 0
-    for _ in range(4):
-        t_f = jnp.argmax(lg_f, -1)[:, None].astype(jnp.int32)
-        t_q = jnp.argmax(lg_q, -1)[:, None].astype(jnp.int32)
-        agree += int(t_f[0, 0] == t_q[0, 0])
-        lg_f, cache_f = M.lm_decode_step(params, cfg, t_f, cache_f)
-        lg_q, cache_q = M.lm_decode_step(qparams, cfg, t_q, cache_q)
-    assert agree >= 3                    # q4 tracks fp on most steps
+    # --- self-consistency: free-running q decode == q full forward -------
+    lg_q, cache_q = M.lm_prefill(qparams, cfg, tokens, 40)
+    seq = [_top1(lg_q)]
+    for _ in range(steps - 1):
+        lg_q, cache_q = M.lm_decode_step(
+            qparams, cfg, jnp.full((1, 1), seq[-1], jnp.int32), cache_q)
+        seq.append(_top1(lg_q))
     assert np.isfinite(np.asarray(lg_q, np.float32)).all()
+    full = jnp.concatenate(
+        [tokens, jnp.asarray(seq[:-1], jnp.int32)[None]], axis=1)
+    out_q, _ = M.lm_forward(qparams, cfg, full)
+    S = tokens.shape[1]
+    replay = [int(jnp.argmax(out_q[0, S - 1 + i])) for i in range(steps)]
+    assert replay == seq                 # decode path == forward path
+
+    # --- teacher-forced tracking: same inputs, compare outputs ----------
+    lg_f, cache_f = M.lm_prefill(params, cfg, tokens, 40)
+    lg_q, cache_q = M.lm_prefill(qparams, cfg, tokens, 40)
+    agree = int(_top1(lg_f) == _top1(lg_q))
+    t = jnp.full((1, 1), _top1(lg_f), jnp.int32)   # fp drives both
+    for _ in range(steps - 1):
+        lg_f, cache_f = M.lm_decode_step(params, cfg, t, cache_f)
+        lg_q, cache_q = M.lm_decode_step(qparams, cfg, t, cache_q)
+        agree += int(_top1(lg_f) == _top1(lg_q))
+        t = jnp.full((1, 1), _top1(lg_f), jnp.int32)
+    # chance is steps/vocab ~ 0.016 expected hits; require >= 3
+    assert agree >= 3, agree
+    ref, _ = M.lm_forward(params, cfg, full)
+    rel = float(jnp.max(jnp.abs(out_q - ref))
+                / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 0.5, rel                # measured 0.33-0.40 across seeds
 
 
 def test_abstract_quant_params_shapes():

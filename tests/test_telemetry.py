@@ -464,11 +464,12 @@ def test_bench_gate_compare():
 
 
 def test_committed_bench_parses_and_self_gates():
-    """The committed BENCH_8.json was produced through the shared writer:
-    it parses, carries gated metrics + a ledger, and gates cleanly
-    against itself."""
+    """The committed BENCH_<CURRENT_PR>.json was produced through the
+    shared writer: it parses, carries gated metrics + a ledger, and
+    gates cleanly against itself."""
     path = os.path.join(REPO, f"BENCH_{writer.CURRENT_PR}.json")
-    assert os.path.exists(path), "BENCH_8.json must be committed"
+    assert os.path.exists(path), \
+        f"BENCH_{writer.CURRENT_PR}.json must be committed"
     data = writer.read_bench(path)
     assert data["schema"] == writer.SCHEMA
     assert data["pr"] == writer.CURRENT_PR

@@ -244,3 +244,47 @@ def test_schedule_split_responds_to_transport():
     assert fast.assignment["projector"] == "prefill-fleet"
     assert fast.assignment["decoder"] == "decode-fleet"
     assert set(slow.assignment.values()) == {"decode-fleet"}
+
+
+def test_schedule_split_measured_link_flips_placement():
+    """Measured-not-modeled wire pricing: the in-process transport's
+    static class row prices fast enough to cut at the vision/decode
+    boundary, but when the frames actually clocked ~1 MB/s
+    (``Transport.measured_link_bw`` folded through
+    ``CostCalibration.observe_link``) the repriced split co-locates
+    everything on the decode fleet — the placement follows the
+    observation, not the class constant."""
+    from repro.telemetry.calibration import CostCalibration
+
+    graph = decompose(get_config("llava-onevision-0.5b"))
+    static = schedule_split(graph, "inproc", n_tokens=729)
+    assert static.assignment["vision_frontend"] == "prefill-fleet"
+
+    cal = CostCalibration(prior=1)
+    cal.observe_link("inproc", bytes_moved=1e6, seconds=1.0, n=64)
+    measured = schedule_split(graph, "inproc", n_tokens=729,
+                              calibration=cal)
+    assert set(measured.assignment.values()) == {"decode-fleet"}, (
+        f"measured-slow link did not flip the split: "
+        f"{measured.assignment}")
+    # the blend is sample-weighted: a single observation against a
+    # large prior barely moves the row and must NOT flip the split
+    light = CostCalibration(prior=1 << 20)
+    light.observe_link("inproc", bytes_moved=1e6, seconds=1.0, n=1)
+    barely = schedule_split(graph, "inproc", n_tokens=729,
+                            calibration=light)
+    assert barely.assignment == static.assignment
+
+
+def test_transport_measures_its_own_wire():
+    """Every send accrues ``send_seconds``; ``measured_link_bw`` needs a
+    floor of evidence before it reports."""
+    a, b = InProcTransport.pair()
+    assert a.measured_link_bw() is None          # no bytes yet
+    payload = [np.zeros((1 << 16,), np.uint8)]
+    a.send("kv", {"x": 1}, payload)
+    b.recv()
+    assert a.sent_bytes >= 1 << 16 and a.send_seconds > 0.0
+    bw = a.measured_link_bw()
+    assert bw is not None and bw > 0.0
+    assert bw == pytest.approx(a.sent_bytes / a.send_seconds)
